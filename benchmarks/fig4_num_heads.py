@@ -1,0 +1,21 @@
+"""Paper Fig. 4 / Tables 7-8: effect of the number of auxiliary heads.
+
+Paper claim (s=100): deeper head chains raise the final head's shared
+accuracy; the main head keeps the best private accuracy."""
+from __future__ import annotations
+
+from benchmarks.common import make_data, row, run_mhd
+
+
+def main(scale, full: bool = False) -> list:
+    rows = []
+    head_counts = [1, 2, 3, 4] if full else [1, 2, 3]
+    data = make_data(scale, skew=100.0)
+    for m in head_counts:
+        ev = run_mhd(scale, aux_heads=m, skew=100.0, data=data)
+        last_sh = ev[f"mean/aux{m}/beta_sh"]
+        derived = (f"heads={m};main_priv={ev['mean/main/beta_priv']:.3f};"
+                   f"main_sh={ev['mean/main/beta_sh']:.3f};"
+                   f"last_aux_sh={last_sh:.3f}")
+        rows.append(row("fig4/heads", ev["_step_us"], derived))
+    return rows

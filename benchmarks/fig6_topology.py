@@ -1,0 +1,65 @@
+"""Paper Figs. 5-6 (§4.4): communication-topology effects & transitive
+distillation. Islands vs cycle vs complete with 4 clients; per-hop accuracy
+of each head on the teacher-at-distance-d's primary labels.
+
+Paper claims: cycle ≫ islands on shared accuracy (transitive distillation
+through intermediaries), and later aux heads reach further hops."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import make_data, row, run_mhd
+from repro.core.graph import (
+    complete_graph,
+    cycle_graph,
+    graph_distance_matrix,
+    islands_graph,
+)
+from repro.core.supervised import eval_per_label_accuracy
+
+
+def _hop_accuracy(trainer, part, test_arrays, graph, num_labels, aux_heads):
+    """acc[head][hop] = student accuracy on primary labels of clients at
+    that graph distance (averaged over student/teacher pairs)."""
+    K = len(trainer.clients)
+    dist = graph_distance_matrix(graph)
+    heads = ["main"] + [f"aux{h+1}" for h in range(aux_heads)]
+    acc = {h: {} for h in heads}
+    for i, c in enumerate(trainer.clients):
+        for hi, head in enumerate(heads):
+            per_label, present = eval_per_label_accuracy(
+                c.bundle, c.params, test_arrays, num_labels,
+                head=("main" if head == "main" else f"aux{hi}"))
+            for j in range(K):
+                if i == j or not np.isfinite(dist[i, j]):
+                    continue
+                labs = part.primary_labels[j]
+                hop = int(dist[i, j])
+                acc[head].setdefault(hop, []).append(per_label[labs].mean())
+    return {h: {hop: float(np.mean(v)) for hop, v in hops.items()}
+            for h, hops in acc.items()}
+
+
+def main(scale, full: bool = False) -> list:
+    rows = []
+    aux_heads = 3
+    for topo_name in ("islands", "cycle", "complete"):
+        data = make_data(scale, skew=100.0)
+        ev = run_mhd(scale, aux_heads=aux_heads, skew=100.0,
+                     topology=topo_name, data=data)
+        trainer = ev.pop("_trainer")
+        graph = {"complete": complete_graph(scale.clients),
+                 "cycle": cycle_graph(scale.clients),
+                 "islands": islands_graph(scale.clients, 2)}[topo_name]
+        arrays, test_arrays, part = data
+        hops = _hop_accuracy(trainer, part, test_arrays, graph,
+                             scale.labels, aux_heads)
+        last = f"aux{aux_heads}"
+        hop_str = ";".join(
+            f"hop{h}={hops[last].get(h, float('nan')):.3f}"
+            for h in sorted(hops[last]))
+        derived = (f"topology={topo_name};"
+                   f"sh_last={ev[f'mean/{last}/beta_sh']:.3f};"
+                   f"sh_main={ev['mean/main/beta_sh']:.3f};{hop_str}")
+        rows.append(row("fig6/topology", ev["_step_us"], derived))
+    return rows

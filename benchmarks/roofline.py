@@ -1,0 +1,65 @@
+"""§Roofline table: reads the dry-run artifacts (launch/dryrun.py JSON) and
+prints per (arch × shape × mesh) the three roofline terms, dominant
+bottleneck, and the 6ND/HLO useful-compute ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+
+from benchmarks.common import row
+from repro.configs import get_config
+from repro.configs.shapes import INPUT_SHAPES
+from repro.roofline.analysis import format_table, roofline_from_artifacts
+
+
+def load_reports(art_dir: str = "artifacts/dryrun"):
+    reports, skips, fails = [], [], []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "skip":
+            skips.append(rec)
+            continue
+        if rec.get("status") != "ok":
+            fails.append(rec)
+            continue
+        cfg = get_config(rec["arch"])
+        hc = rec["hlo_cost"]
+        coll = {"total": hc.get("collective_total", 0)}
+        cost = {"flops": hc.get("flops", 0), "bytes accessed": hc.get("bytes", 0)}
+        shape = INPUT_SHAPES[rec["shape"]]
+        mode = "train" if shape.mode == "train" else "inference"
+        rep = roofline_from_artifacts(
+            rec["arch"], rec["shape"], rec["mesh"], rec["chips"],
+            cost=cost, collectives=coll, memory=rec.get("memory"),
+            cfg=cfg, total_params=rec["num_params"], tokens=rec["tokens"],
+            mode=("train" if shape.mode == "train" else "prefill"))
+        reports.append(rep)
+    return reports, skips, fails
+
+
+def main(scale=None, full: bool = False, art_dir: str = "artifacts/dryrun"):
+    reports, skips, fails = load_reports(art_dir)
+    rows = []
+    if not reports:
+        rows.append(row("roofline/table", 0,
+                        f"no artifacts in {art_dir} — run "
+                        "`python -m repro.launch.dryrun --all` first"))
+        return rows
+    print(format_table(reports))
+    for r in reports:
+        rows.append(row(
+            f"roofline/{r.arch}/{r.shape}/{r.mesh}", 0,
+            f"dominant={r.dominant};compute_s={r.compute_s:.4f};"
+            f"memory_s={r.memory_s:.4f};coll_s={r.collective_s:.4f};"
+            f"useful={r.useful_flops_ratio:.3f};fits={r.fits_hbm}"))
+    for s in skips:
+        rows.append(row(f"roofline/{s['arch']}/{s['shape']}/{s['mesh']}", 0,
+                        f"SKIP:{s['skip_reason'][:60]}"))
+    for s in fails:
+        rows.append(row(f"roofline/{s['arch']}/{s['shape']}/{s['mesh']}", 0,
+                        f"FAIL:{s.get('error','')[:60]}"))
+    return rows

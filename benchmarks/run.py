@@ -1,0 +1,73 @@
+"""Benchmark orchestrator — one entry per paper table/figure + the roofline
+table. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run             # quick (default)
+  PYTHONPATH=src python -m benchmarks.run --full      # paper-scale-ish sweep
+  PYTHONPATH=src python -m benchmarks.run --only table1,fig4
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--only", default="",
+                   help="comma-separated benchmark keys to run")
+    p.add_argument("--art-dir", default="artifacts/dryrun")
+    args = p.parse_args(argv)
+
+    from benchmarks import (
+        comm_efficiency,
+        confidence_ablation,
+        fig3_loss_weights,
+        fig4_num_heads,
+        fig6_topology,
+        hetero_models,
+        roofline,
+        table1_baselines,
+        table2_fedmd,
+        table3_variants,
+        table4_public_size,
+    )
+    from benchmarks.common import FULL, QUICK
+
+    scale = FULL if args.full else QUICK
+    benches = [
+        ("comm", lambda: comm_efficiency.main(scale, args.full)),
+        ("roofline", lambda: roofline.main(scale, args.full, args.art_dir)),
+        ("table1", lambda: table1_baselines.main(scale)),
+        ("fig3", lambda: fig3_loss_weights.main(scale, args.full)),
+        ("fig4", lambda: fig4_num_heads.main(scale, args.full)),
+        ("table3", lambda: table3_variants.main(scale, args.full)),
+        ("table4", lambda: table4_public_size.main(scale, args.full)),
+        ("fig6", lambda: fig6_topology.main(scale, args.full)),
+        ("table2", lambda: table2_fedmd.main(scale, args.full)),
+        ("confidence", lambda: confidence_ablation.main(scale, args.full)),
+        ("hetero", lambda: hetero_models.main(scale, args.full)),
+    ]
+    only = {x.strip() for x in args.only.split(",") if x.strip()}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, fn in benches:
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        try:
+            for r in fn():
+                print(r, flush=True)
+            print(f"# {key} done in {time.time()-t0:.0f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {key} FAILED:", flush=True)
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,50 @@
+"""Paper Table 1: shared accuracy β_sh for Separate / MHD / MHD+ / FedAvg /
+Supervised. Paper claim: Separate ≪ MHD < MHD+ ≲ FedAvg ≈ Supervised."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import (
+    best_aux_sh,
+    make_data,
+    row,
+    run_fedavg_baseline,
+    run_mhd,
+    run_separate,
+    run_supervised_baseline,
+)
+
+
+def main(scale) -> list:
+    rows = []
+    data = make_data(scale)
+
+    sep = run_separate(scale, data=data)
+    rows.append(row("table1/separate", sep["_step_us"],
+                    f"beta_sh={sep['mean/main/beta_sh']:.3f}"))
+
+    mhd = run_mhd(scale, data=data)
+    rows.append(row("table1/mhd", mhd["_step_us"],
+                    f"beta_sh={best_aux_sh(mhd):.3f}"))
+
+    # MHD+ — longer training with a larger public pool (paper: entire
+    # ImageNet as public set + 3x steps)
+    plus_scale = dataclasses.replace(scale, gamma_pub=0.3,
+                                     steps=int(scale.steps * 2))
+    mhdp = run_mhd(plus_scale)
+    rows.append(row("table1/mhd_plus", mhdp["_step_us"],
+                    f"beta_sh={best_aux_sh(mhdp):.3f}"))
+
+    fa = run_fedavg_baseline(scale, average_every=20, data=data)
+    rows.append(row("table1/fedavg_u20", fa["_step_us"],
+                    f"beta_sh={fa['mean/main/beta_sh']:.3f}"))
+
+    fa2 = run_fedavg_baseline(scale, average_every=max(scale.steps // 2, 1),
+                              data=data)
+    rows.append(row("table1/fedavg_u_half", fa2["_step_us"],
+                    f"beta_sh={fa2['mean/main/beta_sh']:.3f}"))
+
+    sup = run_supervised_baseline(scale, data=data)
+    rows.append(row("table1/supervised", sup["_step_us"],
+                    f"beta_sh={sup['mean/main/beta_sh']:.3f}"))
+    return rows

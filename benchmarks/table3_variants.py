@@ -1,0 +1,27 @@
+"""Paper Table 3 (App. B.1): distillation-target variants — Base, SL
+(same-level targets), SF (self target), SL+SF, Δ=2, All."""
+from __future__ import annotations
+
+from benchmarks.common import best_aux_sh, make_data, row, run_mhd
+
+
+def main(scale, full: bool = False) -> list:
+    rows = []
+    data = make_data(scale, skew=100.0)
+    variants = [
+        ("base", dict()),
+        ("delta2", dict(delta=2)),
+        ("SL", dict(use_sl=True)),
+        ("SF", dict(use_sf=True)),
+        ("SL+SF", dict(use_sl=True, use_sf=True)),
+        ("all", dict(use_sl=True, use_sf=True, delta=2)),
+    ]
+    if not full:
+        variants = [v for v in variants if v[0] in ("base", "delta2", "all")]
+    for name, kw in variants:
+        ev = run_mhd(scale, aux_heads=3, skew=100.0, data=data, **kw)
+        derived = (f"variant={name};"
+                   f"main_priv={ev['mean/main/beta_priv']:.3f};"
+                   f"best_sh={best_aux_sh(ev):.3f}")
+        rows.append(row("table3/variants", ev["_step_us"], derived))
+    return rows

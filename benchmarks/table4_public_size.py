@@ -1,0 +1,17 @@
+"""Paper Table 4 (App. B.2): dependence on public dataset size — larger
+public pools improve distillation."""
+from __future__ import annotations
+
+from benchmarks.common import best_aux_sh, row, run_mhd
+
+
+def main(scale, full: bool = False) -> list:
+    rows = []
+    fracs = [0.05, 0.1, 0.2, 0.3] if full else [0.05, 0.3]
+    for g in fracs:
+        ev = run_mhd(scale, gamma_pub=g, skew=100.0)
+        derived = (f"gamma_pub={g:g};"
+                   f"main_priv={ev['mean/main/beta_priv']:.3f};"
+                   f"best_sh={best_aux_sh(ev):.3f}")
+        rows.append(row("table4/public_size", ev["_step_us"], derived))
+    return rows

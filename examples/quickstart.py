@@ -1,0 +1,68 @@
+"""Quickstart: 3 decentralized clients learn from each other with
+Multi-Headed Distillation — no data, weights or gradients exchanged.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Takes ~2 minutes on CPU. Expected output: each client's MAIN head is good on
+its private classes; the AUX heads approach the ensemble's knowledge of ALL
+classes (β_sh well above what any isolated client can reach).
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (
+    MHDConfig,
+    DecentralizedTrainer,
+    RunConfig,
+    complete_graph,
+)
+from repro.data import PartitionConfig, make_synthetic_vision, partition_dataset
+from repro.models.resnet import resnet_tiny
+from repro.models.zoo import build_bundle
+from repro.optim.optimizers import OptimizerConfig, make_optimizer
+
+
+def main():
+    K, labels, steps = 3, 12, 400
+
+    # a labeled corpus, split into a public unlabeled pool + skewed shards
+    ds = make_synthetic_vision(num_labels=labels, samples_per_label=200,
+                               noise=2.0, seed=0)
+    test = make_synthetic_vision(num_labels=labels, samples_per_label=15,
+                                 noise=2.0, seed=991, prototype_seed=0)
+    part = partition_dataset(ds.labels, PartitionConfig(
+        num_clients=K, num_labels=labels, labels_per_client=4,
+        assignment="random", skew=100.0, gamma_pub=0.1, seed=0))
+
+    bundles = [build_bundle(resnet_tiny(labels, num_aux_heads=2))
+               for _ in range(K)]
+    optimizer = make_optimizer(OptimizerConfig(
+        init_lr=0.05, total_steps=steps, grad_clip_norm=1.0))
+    mhd = MHDConfig(nu_emb=1.0, nu_aux=1.0, num_aux_heads=2,
+                    delta=1, pool_size=K, pool_update_every=10)
+
+    trainer = DecentralizedTrainer(
+        bundles, optimizer, mhd,
+        RunConfig(steps=steps, batch_size=32, public_batch_size=32, seed=0),
+        {"images": ds.images, "labels": ds.labels},
+        part.client_indices, part.public_indices,
+        complete_graph(K), labels)
+
+    for t in range(steps):
+        metrics = trainer.step(t)
+        if t % 100 == 0:
+            print(f"step {t:4d}  client-0 loss {metrics['c0/loss']:.3f}")
+
+    ev = trainer.evaluate({"images": test.images, "labels": test.labels})
+    print("\nfinal accuracies (ensemble means):")
+    for head in ("main", "aux1", "aux2"):
+        print(f"  {head:5s}  private β_priv={ev[f'mean/{head}/beta_priv']:.3f}"
+              f"  shared β_sh={ev[f'mean/{head}/beta_sh']:.3f}")
+    print("\nThe aux heads' β_sh should clearly beat the main head's — that "
+          "is the knowledge the clients\nabsorbed from each other without "
+          "sharing data or weights.")
+
+
+if __name__ == "__main__":
+    main()

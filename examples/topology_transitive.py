@@ -1,0 +1,73 @@
+"""Transitive distillation across a ring (paper §4.4, Figs. 5-6).
+
+Four clients in a directed cycle — client 0 can only *directly* learn from
+client 1, yet information from clients 2 and 3 reaches it through the chain
+of auxiliary heads. We print each head's accuracy on the primary labels of
+clients at 1, 2 and 3 hops.
+
+    PYTHONPATH=src python examples/topology_transitive.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import MHDConfig, DecentralizedTrainer, RunConfig, cycle_graph
+from repro.core.graph import graph_distance_matrix
+from repro.core.supervised import eval_per_label_accuracy
+from repro.data import PartitionConfig, make_synthetic_vision, partition_dataset
+from repro.models.resnet import resnet_tiny
+from repro.models.zoo import build_bundle
+from repro.optim.optimizers import OptimizerConfig, make_optimizer
+
+
+def main():
+    K, labels, steps, m = 4, 16, 500, 3
+    ds = make_synthetic_vision(num_labels=labels, samples_per_label=200,
+                               noise=2.0, seed=0)
+    test = make_synthetic_vision(num_labels=labels, samples_per_label=15,
+                                 noise=2.0, seed=991, prototype_seed=0)
+    part = partition_dataset(ds.labels, PartitionConfig(
+        num_clients=K, num_labels=labels, labels_per_client=4,
+        skew=1000.0, gamma_pub=0.1, seed=0))
+    graph = cycle_graph(K)
+
+    bundles = [build_bundle(resnet_tiny(labels, num_aux_heads=m))
+               for _ in range(K)]
+    trainer = DecentralizedTrainer(
+        bundles,
+        make_optimizer(OptimizerConfig(init_lr=0.05, total_steps=steps,
+                                       grad_clip_norm=1.0)),
+        MHDConfig(nu_emb=1.0, nu_aux=1.0, num_aux_heads=m, delta=1,
+                  pool_size=K, pool_update_every=10),
+        RunConfig(steps=steps, batch_size=32, public_batch_size=32, seed=0),
+        {"images": ds.images, "labels": ds.labels},
+        part.client_indices, part.public_indices, graph, labels)
+
+    for t in range(steps):
+        trainer.step(t)
+
+    test_arrays = {"images": test.images, "labels": test.labels}
+    dist = graph_distance_matrix(graph)
+    heads = ["main"] + [f"aux{h+1}" for h in range(m)]
+    print(f"{'head':6s} " + "  ".join(f"hop-{h}" for h in (1, 2, 3)))
+    for head in heads:
+        by_hop = {1: [], 2: [], 3: []}
+        for i, c in enumerate(trainer.clients):
+            per_label, _ = eval_per_label_accuracy(
+                c.bundle, c.params, test_arrays, labels, head=head)
+            for j in range(K):
+                if i == j:
+                    continue
+                by_hop[int(dist[i, j])].append(
+                    per_label[part.primary_labels[j]].mean())
+        print(f"{head:6s} " + "  ".join(
+            f"{np.mean(by_hop[h]):.3f}" for h in (1, 2, 3)))
+    print("\nLater aux heads should hold up better at 2-3 hops — knowledge "
+          "arriving through intermediaries\n(the paper's transitive "
+          "distillation).")
+
+
+if __name__ == "__main__":
+    main()

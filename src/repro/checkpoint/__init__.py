@@ -1,0 +1,10 @@
+from repro.checkpoint.io import save_pytree, load_pytree, CheckpointManager
+from repro.checkpoint.pool import CheckpointPool, PoolEntry
+
+__all__ = [
+    "save_pytree",
+    "load_pytree",
+    "CheckpointManager",
+    "CheckpointPool",
+    "PoolEntry",
+]

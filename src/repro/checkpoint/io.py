@@ -1,0 +1,112 @@
+"""Checkpoint I/O: pytree <-> .npz with path-keyed leaves.
+
+No orbax in this container; this implements the subset a real deployment
+needs — atomic writes, step-indexed directories, retention, and structural
+restore (leaves are loaded back into the *given* target structure so sharded
+restores can re-shard on device_put).
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.common.pytree import flatten_with_paths
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    """Atomic save of a pytree of arrays to ``<path>.npz``-style file."""
+    flat = flatten_with_paths(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_pytree(path: str, target: Any) -> Any:
+    """Load leaves saved by ``save_pytree`` back into ``target``'s structure."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    tgt_flat = flatten_with_paths(target)
+    missing = set(tgt_flat) - set(flat)
+    extra = set(flat) - set(tgt_flat)
+    if missing or extra:
+        raise ValueError(
+            f"checkpoint structure mismatch: missing={sorted(missing)[:5]} "
+            f"extra={sorted(extra)[:5]}"
+        )
+    leaves_in_order = []
+    paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+    for path_keys, leaf in paths:
+        key = "/".join(_key_str(p) for p in path_keys)
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {leaf.shape}")
+        leaves_in_order.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves_in_order)
+
+
+def _key_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+class CheckpointManager:
+    """Step-indexed checkpoint directory with retention."""
+
+    def __init__(self, directory: str, max_to_keep: int = 3):
+        self.directory = directory
+        self.max_to_keep = max_to_keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def save(self, step: int, tree: Any) -> str:
+        d = self._step_dir(step)
+        os.makedirs(d, exist_ok=True)
+        save_pytree(os.path.join(d, "state.npz"), tree)
+        self._gc()
+        return d
+
+    def steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            m = _STEP_RE.match(name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, target: Any, step: Optional[int] = None) -> Any:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        return load_pytree(os.path.join(self._step_dir(step), "state.npz"), target)
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.max_to_keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

@@ -1,0 +1,25 @@
+from repro.common.pytree import (
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+    tree_axpy,
+    tree_l2_norm,
+    tree_size,
+    tree_bytes,
+    tree_cast,
+)
+from repro.common.registry import Registry
+from repro.common.dtypes import DtypePolicy
+
+__all__ = [
+    "tree_zeros_like",
+    "tree_add",
+    "tree_scale",
+    "tree_axpy",
+    "tree_l2_norm",
+    "tree_size",
+    "tree_bytes",
+    "tree_cast",
+    "Registry",
+    "DtypePolicy",
+]

@@ -1,0 +1,32 @@
+"""Mixed-precision policy.
+
+TPU v5e target: params stored bf16/fp32, compute bf16, reductions fp32.
+On CPU (tests / tiny experiments) everything defaults to fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypePolicy:
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    accum_dtype: jnp.dtype = jnp.float32
+
+    @staticmethod
+    def tpu_bf16() -> "DtypePolicy":
+        return DtypePolicy(
+            param_dtype=jnp.bfloat16,
+            compute_dtype=jnp.bfloat16,
+            accum_dtype=jnp.float32,
+        )
+
+    @staticmethod
+    def fp32() -> "DtypePolicy":
+        return DtypePolicy()
+
+    def cast_compute(self, x):
+        return x.astype(self.compute_dtype)

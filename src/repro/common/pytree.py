@@ -1,0 +1,90 @@
+"""Pytree utilities used across the framework.
+
+These are deliberately tiny wrappers over ``jax.tree_util`` so that optimizer,
+checkpointing and FedAvg code reads as math, not as tree plumbing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_axpy(a, x, y):
+    """a * x + y, leafwise."""
+    return jax.tree.map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def tree_mean(trees):
+    """Leafwise mean of a list of pytrees (FedAvg primitive)."""
+    n = float(len(trees))
+    out = trees[0]
+    for t in trees[1:]:
+        out = tree_add(out, t)
+    return tree_scale(out, 1.0 / n)
+
+
+def tree_l2_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_size(tree) -> int:
+    """Total number of parameters."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+def tree_any_nan(tree):
+    leaves = [
+        jnp.any(jnp.isnan(x)) for x in jax.tree.leaves(tree)
+        if jnp.issubdtype(x.dtype, jnp.floating)
+    ]
+    if not leaves:
+        return jnp.asarray(False)
+    return jnp.any(jnp.stack(leaves))
+
+
+def flatten_with_paths(tree):
+    """Return {'/'-joined-path: leaf} dict — stable naming for checkpoints."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)

@@ -1,0 +1,94 @@
+"""Activation-sharding helpers usable from inside model code.
+
+``maybe_shard(x, *axes)`` applies a ``with_sharding_constraint`` when tracing
+under a mesh context (pjit path) and is a no-op otherwise (CPU tests, tiny
+experiments). Axis entries may be None, a mesh-axis name, or a tuple of
+names; names not present in the active mesh are dropped, so the same model
+code serves the (data, model) pod mesh and the (pod, data, model) multi-pod
+mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+AxisLike = Union[None, str, Tuple[str, ...]]
+
+# Logical roles used by model code; launch/shardings.py can override this
+# mapping (a §Perf lever — e.g. sequence-sharding long contexts).
+_LOGICAL_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "model": "model",
+    "expert": "model",
+    "fsdp_tokens": ("pod", "data"),  # token/slot dims inside manual regions
+    "none": None,
+}
+
+
+def set_logical_rule(role: str, axes: AxisLike) -> None:
+    _LOGICAL_RULES[role] = axes
+
+
+def get_logical_rule(role: str) -> AxisLike:
+    return _LOGICAL_RULES.get(role)
+
+
+def _active_mesh_axes():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if mesh is None or not getattr(mesh, "axis_names", None):
+        return None
+    return set(mesh.axis_names)
+
+
+def _filter(axis: AxisLike, names) -> AxisLike:
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        return axis if axis in names else None
+    kept = tuple(a for a in axis if a in names)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def _mesh_axis_sizes():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return {}
+    if mesh is None or not getattr(mesh, "axis_names", None):
+        return {}
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def _divisible(axis: AxisLike, dim: int, sizes) -> AxisLike:
+    """Drop the constraint when the dim doesn't divide the axis product —
+    otherwise XLA falls back to 'involuntary full rematerialization'."""
+    if axis is None:
+        return None
+    names = (axis,) if isinstance(axis, str) else axis
+    prod = 1
+    for n in names:
+        prod *= sizes.get(n, 1)
+    return axis if prod > 1 and dim % prod == 0 else None
+
+
+def maybe_shard(x, *roles: str):
+    """Constrain ``x`` so dim i lies on the mesh axes for logical role i."""
+    sizes = _mesh_axis_sizes()
+    if not sizes:
+        return x
+    names = set(sizes)
+    axes = tuple(_filter(_LOGICAL_RULES.get(r), names) for r in roles)
+    if len(axes) != x.ndim:
+        raise ValueError(f"maybe_shard got {len(axes)} roles for rank-{x.ndim} array")
+    axes = tuple(_divisible(a, x.shape[i], sizes) for i, a in enumerate(axes))
+    if all(a is None for a in axes):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*axes))

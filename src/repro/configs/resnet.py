@@ -1,0 +1,22 @@
+"""The paper's own client architectures: ResNet-18 / ResNet-34 (He et al.
+2016) plus CPU-scale tiny variants used by the experiment harness.
+
+These are registered alongside the assigned archs so the launcher can train
+the *faithful* reproduction (`--arch resnet34-imagenet`) and the benchmark
+harness can build heterogeneous ensembles (§4.5: one ResNet34 + 3×ResNet18).
+"""
+from repro.configs import ARCHS
+from repro.models.resnet import (
+    resnet18,
+    resnet34,
+    resnet_tiny,
+    resnet_tiny34,
+)
+
+ARCHS.register("resnet18-imagenet")(
+    {"full": lambda: resnet18(1000, num_aux_heads=4),
+     "reduced": lambda: resnet_tiny(20, num_aux_heads=4)})
+
+ARCHS.register("resnet34-imagenet")(
+    {"full": lambda: resnet34(1000, num_aux_heads=4),
+     "reduced": lambda: resnet_tiny34(20, num_aux_heads=4)})

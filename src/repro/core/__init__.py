@@ -1,0 +1,34 @@
+"""The paper's primary contribution: Multi-Headed Distillation for
+decentralized learning, plus its baselines (FedAvg, FedMD, supervised)."""
+from repro.core.mhd import (
+    MHDConfig,
+    embedding_distillation_loss,
+    multi_head_distillation_loss,
+    mhd_total_loss,
+    normalized,
+)
+from repro.core.graph import (
+    complete_graph,
+    cycle_graph,
+    chain_graph,
+    islands_graph,
+    isolated_graph,
+    graph_distance_matrix,
+)
+from repro.core.runtime import DecentralizedTrainer, RunConfig
+
+__all__ = [
+    "MHDConfig",
+    "embedding_distillation_loss",
+    "multi_head_distillation_loss",
+    "mhd_total_loss",
+    "normalized",
+    "complete_graph",
+    "cycle_graph",
+    "chain_graph",
+    "islands_graph",
+    "isolated_graph",
+    "graph_distance_matrix",
+    "DecentralizedTrainer",
+    "RunConfig",
+]

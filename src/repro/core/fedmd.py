@@ -1,0 +1,89 @@
+"""FedMD-style baseline (Li & Wang, 2019 [19]) — the paper's Table 2
+comparison: *centralized* distillation via consensus logits.
+
+Each round: every client scores the public batch; the server averages the
+class scores into a consensus; clients take gradient steps matching the
+consensus (digest) and then train on their private data (revisit). Unlike
+MHD there is no confidence gating, no aux-head chain, and a central
+aggregator is required.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import BatchIterator, PublicPool
+from repro.models.zoo import ModelBundle
+from repro.optim.optimizers import Optimizer
+
+
+def train_fedmd(
+    bundles: Sequence[ModelBundle],
+    optimizer: Optimizer,
+    arrays: Dict[str, np.ndarray],
+    client_indices: Sequence[np.ndarray],
+    public_indices: np.ndarray,
+    steps: int,
+    batch_size: int,
+    public_batch_size: int = 64,
+    digest_weight: float = 1.0,
+    seed: int = 0,
+) -> List[Any]:
+    K = len(bundles)
+    key = jax.random.PRNGKey(seed)
+    params = []
+    opt_states = []
+    for i, b in enumerate(bundles):
+        key, sub = jax.random.split(key)
+        p = b.init(sub)
+        params.append(p)
+        opt_states.append(optimizer.init(p))
+    iters = [BatchIterator(arrays, idx, batch_size, seed=seed + 7 * i)
+             for i, idx in enumerate(client_indices)]
+    public = PublicPool(arrays, public_indices, public_batch_size, seed=seed)
+
+    score_fns = {}
+    update_fns = {}
+    for b in bundles:
+        if b.name not in score_fns:
+            score_fns[b.name] = jax.jit(
+                lambda p, batch, _b=b: _b.apply(p, batch)["logits"])
+
+            def update(p, s, private_batch, public_batch, consensus, step,
+                       _b=b):
+                def loss_fn(p_):
+                    out_priv = _b.apply(p_, private_batch)
+                    lg = out_priv["logits"].astype(jnp.float32)
+                    logz = jax.nn.logsumexp(lg, axis=-1)
+                    ll = jnp.take_along_axis(
+                        lg, private_batch["labels"][:, None], axis=-1)[:, 0]
+                    ce = jnp.mean(logz - ll)
+                    out_pub = _b.apply(p_, public_batch)
+                    logp = jax.nn.log_softmax(
+                        out_pub["logits"].astype(jnp.float32), axis=-1)
+                    digest = -jnp.mean(jnp.sum(consensus * logp, axis=-1))
+                    return ce + digest_weight * digest
+
+                loss, grads = jax.value_and_grad(loss_fn)(p)
+                p, s = optimizer.update(grads, s, p, step)
+                return p, s, loss
+
+            update_fns[b.name] = jax.jit(update)
+
+    for t in range(steps):
+        public_batch = {k: jnp.asarray(v) for k, v in public.sample(t).items()}
+        # server: consensus class scores (mean softmax)
+        probs = [jax.nn.softmax(score_fns[bundles[i].name](
+            params[i], public_batch).astype(jnp.float32), -1) for i in range(K)]
+        consensus = jax.lax.stop_gradient(
+            jnp.mean(jnp.stack(probs, 0), axis=0))
+        for i in range(K):
+            private_batch = {k: jnp.asarray(v)
+                             for k, v in iters[i].next().items()}
+            params[i], opt_states[i], _ = update_fns[bundles[i].name](
+                params[i], opt_states[i], private_batch, public_batch,
+                consensus, jnp.asarray(t))
+    return params

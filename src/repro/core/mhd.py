@@ -1,0 +1,198 @@
+"""Multi-Headed Distillation — the paper's core technique (§3.2, Eqs. 1-5).
+
+Pure-JAX loss functions. All teacher quantities are stop-gradiented; the
+student optimizes
+
+    L_i = L_CE(private) + ν_emb · Σ_j ρ(||ψ̂_i − φ̂_j||)          (Eq. 2)
+        + ν_aux · Σ_k L_dist[aux_k ← gated source at level k−1]   (Eqs. 4, 5)
+
+Head levels: level 0 is the main head; aux head k (1-indexed) distills from
+level k−1 sources — the teachers' and (optionally) its own client's — with
+the *most confident* candidate selected per sample (Λ = max softmax prob,
+Q = one-hot argmax, Eq. 4). Variants reproduced from the paper:
+  * ``confidence="random"``  — ablation: random target choice (§4.2.2)
+  * ``use_same_level`` (SL)  — add level-k teacher heads (App. B.1, Fig. 9)
+  * ``use_self`` (SF)        — add the distilled head itself; if it wins, the
+                               sample is skipped (App. B.1)
+  * ``skip_when_student_confident`` — the single-head "ignore poor targets"
+                               rule (§4.2.2)
+
+Shapes: ``B`` below is a generic example axis — image batch for CNN clients,
+flattened (batch·positions) for LM clients (adapter in core/lm_adapter.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MHDConfig:
+    nu_emb: float = 1.0
+    nu_aux: float = 3.0
+    num_aux_heads: int = 4
+    delta: int = 1  # Δ distillation targets per step
+    confidence: str = "max"  # "max" | "entropy" | "margin" | "random"
+    use_self: bool = False  # SF
+    use_same_level: bool = False  # SL
+    skip_when_student_confident: bool = False  # §4.2.2 single-head variant
+    # runtime (paper §4.1)
+    pool_size: int = 8  # N_P
+    pool_update_every: int = 200  # S_P
+    label_smooth_teacher: float = 0.0
+
+
+def normalized(x, eps: float = 1e-8):
+    """ψ^norm of §3.2 — embedding-norm drift protection."""
+    n = jnp.linalg.norm(x.astype(jnp.float32), axis=-1, keepdims=True)
+    return x.astype(jnp.float32) / (n + eps)
+
+
+def embedding_distillation_loss(student_emb, teacher_embs, nu_emb: float):
+    """Eq. (2) with ρ(x) = x² on normalized embeddings.
+
+    student_emb: (B, E); teacher_embs: (Δ, B, E) — already stop-gradiented.
+    """
+    if nu_emb == 0.0:
+        return jnp.zeros((), jnp.float32)
+    s = normalized(student_emb)
+    t = normalized(teacher_embs)
+    d = jnp.sum(jnp.square(s[None] - t), axis=-1)  # (Δ, B)
+    return nu_emb * jnp.mean(jnp.sum(d, axis=0))
+
+
+def _confidence(logits, measure: str = "max"):
+    """Λ(h) — the paper uses max softmax prob (§3.2) and explicitly flags
+    its unreliability for out-of-distribution samples (App. A.2). Beyond-
+    paper alternatives (benchmarked in confidence_ablation):
+      * "entropy": negative predictive entropy (calibration-friendlier)
+      * "margin":  top-1 − top-2 probability gap
+    All return "higher = more confident" scores comparable across heads.
+    """
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    if measure == "max":
+        return jnp.max(p, axis=-1)
+    if measure == "entropy":
+        return jnp.sum(p * jnp.log(p + 1e-20), axis=-1)  # = −H, higher better
+    if measure == "margin":
+        v2 = jax.lax.top_k(p, 2)[0]
+        return v2[..., 0] - v2[..., 1]
+    raise ValueError(measure)
+
+
+def _xent_to_target(student_logits, target_probs):
+    """−Σ target · log softmax(student); per-sample (B,)."""
+    logp = jax.nn.log_softmax(student_logits.astype(jnp.float32), axis=-1)
+    return -jnp.sum(target_probs * logp, axis=-1)
+
+
+def _head_at_level(outs: Dict[str, Any], level: int):
+    """Level 0 = main head; level k≥1 = aux head k. outs values: (..., B, C)."""
+    if level == 0:
+        return outs["logits"]
+    return outs["aux_logits"][level - 1]
+
+
+def multi_head_distillation_loss(
+    student_out: Dict[str, Any],
+    teacher_outs: Dict[str, Any],
+    cfg: MHDConfig,
+    rng: Optional[jax.Array] = None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Eqs. (4)+(5): the chained, confidence-gated aux-head loss.
+
+    student_out: {"embedding": (B,E), "logits": (B,C), "aux_logits": (m,B,C)}
+    teacher_outs: same but with a leading Δ axis (stacked sampled teachers),
+                  already stop-gradiented.
+    Returns (loss, metrics).
+    """
+    m = cfg.num_aux_heads
+    assert student_out["aux_logits"].shape[0] == m
+    teachers_main = teacher_outs["logits"]  # (Δ, B, C)
+    total = jnp.zeros((), jnp.float32)
+    metrics: Dict[str, jnp.ndarray] = {}
+
+    for k in range(1, m + 1):
+        student_head = student_out["aux_logits"][k - 1]  # (B, C)
+
+        # candidate sources at level k-1 (teachers ∪ self, Eq. 4)
+        if k == 1:
+            teacher_src = teachers_main
+            self_src = student_out["logits"][None]
+        else:
+            teacher_src = teacher_outs["aux_logits"][:, k - 2]
+            self_src = student_out["aux_logits"][k - 2][None]
+        candidates = [teacher_src, self_src]
+        if cfg.use_same_level:  # SL: teachers' level-k heads
+            candidates.append(teacher_outs["aux_logits"][:, k - 1])
+        n_before_self = sum(c.shape[0] for c in candidates)
+        if cfg.use_self:  # SF: the distilled head itself
+            candidates.append(jax.lax.stop_gradient(student_head)[None])
+        cand = jnp.concatenate(candidates, axis=0)  # (n_cand, B, C)
+        cand = jax.lax.stop_gradient(cand)
+
+        if cfg.confidence == "random":
+            assert rng is not None, "random confidence needs rng"
+            rng, sub = jax.random.split(rng)
+            conf = _confidence(cand)  # still reported in metrics paths
+            winner = jax.random.randint(sub, conf.shape[1:], 0, cand.shape[0])
+        else:
+            conf = _confidence(cand, cfg.confidence)  # (n_cand, B)
+            winner = jnp.argmax(conf, axis=0)  # (B,)
+
+        sel = jnp.take_along_axis(
+            cand, winner[None, :, None], axis=0)[0]  # (B, C)
+        target = jax.nn.softmax(sel.astype(jnp.float32), axis=-1)
+        if cfg.label_smooth_teacher:
+            C = target.shape[-1]
+            target = (1 - cfg.label_smooth_teacher) * target + \
+                cfg.label_smooth_teacher / C
+
+        per_sample = _xent_to_target(student_head, target)  # (B,)
+
+        keep = jnp.ones_like(per_sample)
+        if cfg.use_self:  # SF: skip samples where the head itself won
+            keep = keep * (winner < n_before_self).astype(jnp.float32)
+        if cfg.skip_when_student_confident:
+            measure = cfg.confidence if cfg.confidence != "random" else "max"
+            own = _confidence(jax.lax.stop_gradient(student_head), measure)
+            win_conf = jnp.take_along_axis(conf, winner[None], axis=0)[0]
+            keep = keep * (own <= win_conf).astype(jnp.float32)
+
+        loss_k = jnp.sum(per_sample * keep) / jnp.maximum(jnp.sum(keep), 1.0)
+        total = total + loss_k
+        metrics[f"aux{k}_dist_loss"] = loss_k
+        metrics[f"aux{k}_keep_frac"] = jnp.mean(keep)
+        metrics[f"aux{k}_teacher_frac"] = jnp.mean(
+            (winner < teacher_src.shape[0]).astype(jnp.float32))
+
+    return cfg.nu_aux * total, metrics
+
+
+def mhd_total_loss(
+    student_out_private: Dict[str, Any],
+    private_labels: jnp.ndarray,
+    student_out_public: Dict[str, Any],
+    teacher_outs_public: Dict[str, Any],
+    cfg: MHDConfig,
+    rng: Optional[jax.Array] = None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """The full client objective, Eq. (1)."""
+    logits = student_out_private["logits"].astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, private_labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - ll)
+
+    emb = embedding_distillation_loss(
+        student_out_public["embedding"],
+        jax.lax.stop_gradient(teacher_outs_public["embedding"]),
+        cfg.nu_emb)
+    aux, metrics = multi_head_distillation_loss(
+        student_out_public, teacher_outs_public, cfg, rng)
+
+    loss = ce + emb + aux
+    metrics.update({"ce": ce, "emb_dist": emb, "aux_dist_total": aux})
+    return loss, metrics

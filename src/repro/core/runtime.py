@@ -1,0 +1,286 @@
+"""Decentralized MHD runtime (paper §4.1).
+
+Orchestrates K clients, each with private data, an optimizer, and a rolling
+checkpoint pool P_i of stale teacher snapshots (N_P entries, refreshed from
+graph neighbors every S_P steps). Every global step each client:
+
+  1. draws a private labeled batch and the *shared* public batch (all clients
+     see the same public samples at step t — PublicPool is deterministic),
+  2. samples Δ teachers from its pool and scores the public batch with them,
+  3. takes one SGD step on Eq. (1): private CE + embedding distillation +
+     confidence-gated multi-head distillation.
+
+Clients may have different architectures (paper §4.5) as long as their
+embedding dims and class counts agree (the paper's ResNet-18/34 setting).
+Per-architecture jitted functions are cached so heterogeneous ensembles
+don't retrace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.pool import CheckpointPool, PoolEntry
+from repro.core.graph import Adjacency, as_graph_fn, validate_adjacency
+from repro.core.mhd import MHDConfig, mhd_total_loss
+from repro.data.pipeline import BatchIterator, PublicPool
+from repro.models.zoo import ModelBundle
+from repro.optim.optimizers import Optimizer
+
+
+@dataclasses.dataclass
+class RunConfig:
+    steps: int = 1000
+    batch_size: int = 32
+    public_batch_size: int = 32
+    eval_every: int = 200
+    eval_batch_size: int = 256
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class ClientState:
+    client_id: int
+    bundle: ModelBundle
+    params: Any
+    opt_state: Any
+    pool: CheckpointPool
+    private_iter: BatchIterator
+    label_hist: np.ndarray  # private-label distribution, for β_priv
+
+
+class DecentralizedTrainer:
+    def __init__(
+        self,
+        bundles: Sequence[ModelBundle],
+        optimizer: Optimizer,
+        mhd_cfg: MHDConfig,
+        run_cfg: RunConfig,
+        arrays: Dict[str, np.ndarray],  # {"images": ..., "labels": ...}
+        client_indices: Sequence[np.ndarray],
+        public_indices: np.ndarray,
+        graph: Adjacency,
+        num_labels: int,
+    ):
+        validate_adjacency(graph)
+        self.graph_fn = as_graph_fn(graph)
+        self.mhd_cfg = mhd_cfg
+        self.run_cfg = run_cfg
+        self.optimizer = optimizer
+        self.num_labels = num_labels
+        self.rng = np.random.default_rng(run_cfg.seed)
+        self.public = PublicPool(arrays, public_indices,
+                                 run_cfg.public_batch_size, seed=run_cfg.seed)
+        self._teacher_apply_cache: Dict[str, Callable] = {}
+        self._update_cache: Dict[str, Callable] = {}
+
+        self.clients: List[ClientState] = []
+        key = jax.random.PRNGKey(run_cfg.seed)
+        for i, bundle in enumerate(bundles):
+            key, sub = jax.random.split(key)
+            params = bundle.init(sub)
+            labels_i = arrays["labels"][client_indices[i]]
+            hist = np.bincount(labels_i, minlength=num_labels).astype(np.float64)
+            self.clients.append(ClientState(
+                client_id=i,
+                bundle=bundle,
+                params=params,
+                opt_state=optimizer.init(params),
+                pool=CheckpointPool(mhd_cfg.pool_size,
+                                    mhd_cfg.pool_update_every,
+                                    seed=run_cfg.seed + 101 * i),
+                private_iter=BatchIterator(arrays, client_indices[i],
+                                           run_cfg.batch_size,
+                                           seed=run_cfg.seed + 13 * i),
+                label_hist=hist / max(hist.sum(), 1.0),
+            ))
+        self._seed_pools(step=0)
+
+    # -- jitted function caches ------------------------------------------
+
+    def _teacher_apply(self, bundle: ModelBundle) -> Callable:
+        if bundle.name not in self._teacher_apply_cache:
+            def apply_fn(params, batch):
+                out = bundle.apply(params, batch)
+                return {"embedding": out["embedding"],
+                        "logits": out["logits"],
+                        "aux_logits": out["aux_logits"]}
+            self._teacher_apply_cache[bundle.name] = jax.jit(apply_fn)
+        return self._teacher_apply_cache[bundle.name]
+
+    def _client_update(self, bundle: ModelBundle) -> Callable:
+        if bundle.name not in self._update_cache:
+            mhd_cfg = self.mhd_cfg
+            opt = self.optimizer
+
+            def loss_fn(params, private_batch, public_batch, teachers, rng):
+                out_priv = bundle.apply(params, private_batch)
+                out_pub = bundle.apply(params, public_batch)
+                return mhd_total_loss(out_priv, private_batch["labels"],
+                                      out_pub, teachers, mhd_cfg, rng)
+
+            def update(params, opt_state, private_batch, public_batch,
+                       teachers, step, rng):
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, private_batch,
+                                           public_batch, teachers, rng)
+                params, opt_state = opt.update(grads, opt_state, params, step)
+                metrics["loss"] = loss
+                return params, opt_state, metrics
+
+            self._update_cache[bundle.name] = jax.jit(update)
+        return self._update_cache[bundle.name]
+
+    # -- pool mechanics ----------------------------------------------------
+
+    def _seed_pools(self, step: int) -> None:
+        """Fill each pool with its neighbors' initial checkpoints."""
+        adj = self.graph_fn(step)
+        for c in self.clients:
+            nbrs = adj[c.client_id]
+            for j in nbrs:
+                if len(c.pool) >= c.pool.capacity:
+                    break
+                c.pool.insert(PoolEntry(j, self.clients[j].params, step))
+
+    def _maybe_update_pools(self, step: int) -> None:
+        if step % self.mhd_cfg.pool_update_every != 0:
+            return
+        adj = self.graph_fn(step)
+        for c in self.clients:
+            nbrs = adj[c.client_id]
+            if not nbrs:
+                continue
+            j = int(self.rng.choice(list(nbrs)))
+            c.pool.insert(PoolEntry(j, self.clients[j].params, step))
+
+    def _stack_teachers(self, client: ClientState, public_batch) -> Any:
+        """Sample Δ pool entries, score the public batch, stack outputs."""
+        entries = client.pool.sample(self.mhd_cfg.delta)
+        if not entries:
+            raise RuntimeError(
+                f"client {client.client_id} has an empty pool; use the "
+                "supervised baseline for isolated clients")
+        while len(entries) < self.mhd_cfg.delta:  # pad by repetition
+            entries.append(entries[len(entries) % len(entries)])
+        outs = []
+        for e in entries:
+            teacher_bundle = self.clients[e.client_id].bundle
+            outs.append(self._teacher_apply(teacher_bundle)(e.params, public_batch))
+        return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *outs)
+
+    # -- training loop -----------------------------------------------------
+
+    def step(self, t: int) -> Dict[str, float]:
+        public_np = self.public.sample(t)
+        public_batch = {k: jnp.asarray(v) for k, v in public_np.items()}
+        all_metrics: Dict[str, float] = {}
+        for c in self.clients:
+            private_np = c.private_iter.next()
+            private_batch = {k: jnp.asarray(v) for k, v in private_np.items()}
+            teachers = self._stack_teachers(c, public_batch)
+            rng = jax.random.PRNGKey((t << 10) + c.client_id)
+            update = self._client_update(c.bundle)
+            c.params, c.opt_state, metrics = update(
+                c.params, c.opt_state, private_batch, public_batch,
+                teachers, jnp.asarray(t), rng)
+            for k, v in metrics.items():
+                all_metrics[f"c{c.client_id}/{k}"] = float(v)
+        self._maybe_update_pools(t + 1)
+        return all_metrics
+
+    def train(self, eval_arrays: Optional[Dict[str, np.ndarray]] = None,
+              log_every: int = 0,
+              eval_hook: Optional[Callable[[int, Dict], None]] = None):
+        history = []
+        for t in range(self.run_cfg.steps):
+            metrics = self.step(t)
+            if log_every and t % log_every == 0:
+                loss = np.mean([v for k, v in metrics.items()
+                                if k.endswith("/loss")])
+                print(f"step {t}: mean client loss {loss:.4f}")
+            if eval_arrays is not None and self.run_cfg.eval_every and \
+                    (t + 1) % self.run_cfg.eval_every == 0:
+                ev = self.evaluate(eval_arrays)
+                history.append((t + 1, ev))
+                if eval_hook:
+                    eval_hook(t + 1, ev)
+        return history
+
+    # -- checkpointing ------------------------------------------------------
+
+    def save(self, directory: str, step: int) -> None:
+        """Persist every client's (params, opt_state) — a decentralized run
+        is resumable per-client (each client would own its directory in a
+        real deployment)."""
+        from repro.checkpoint.io import CheckpointManager
+
+        for c in self.clients:
+            mgr = CheckpointManager(
+                os.path.join(directory, f"client_{c.client_id}"),
+                max_to_keep=2)
+            mgr.save(step, {"params": c.params, "opt": c.opt_state})
+
+    def restore(self, directory: str, step: Optional[int] = None) -> int:
+        from repro.checkpoint.io import CheckpointManager
+
+        restored_step = 0
+        for c in self.clients:
+            mgr = CheckpointManager(
+                os.path.join(directory, f"client_{c.client_id}"))
+            target = {"params": c.params, "opt": c.opt_state}
+            state = mgr.restore(target, step)
+            c.params = state["params"]
+            c.opt_state = state["opt"]
+            restored_step = mgr.latest_step() if step is None else step
+        self._seed_pools(step=restored_step)
+        return int(restored_step)
+
+    # -- evaluation (β_priv / β_sh, paper §4.2.1) ---------------------------
+
+    def evaluate(self, arrays: Dict[str, np.ndarray]) -> Dict[str, float]:
+        """Per-label accuracies on a uniform test set; β_sh = uniform mean,
+        β_priv = mean weighted by the client's private label distribution."""
+        labels = arrays["labels"]
+        out: Dict[str, float] = {}
+        bs = self.run_cfg.eval_batch_size
+        for c in self.clients:
+            apply_fn = self._teacher_apply(c.bundle)
+            m = self.mhd_cfg.num_aux_heads
+            correct = np.zeros((m + 1, self.num_labels))
+            count = np.zeros(self.num_labels)
+            for s in range(0, labels.shape[0], bs):
+                batch = {k: jnp.asarray(v[s:s + bs]) for k, v in arrays.items()
+                         if k != "labels"}
+                o = apply_fn(c.params, batch)
+                lab = labels[s:s + bs]
+                preds = [np.asarray(jnp.argmax(o["logits"], -1))]
+                for h in range(m):
+                    preds.append(np.asarray(jnp.argmax(o["aux_logits"][h], -1)))
+                np.add.at(count, lab, 1)
+                for hi, p in enumerate(preds):
+                    np.add.at(correct[hi], lab[p == lab], 1)
+            per_label = correct / np.maximum(count, 1)[None]
+            present = count > 0
+            w_priv = c.label_hist * present
+            w_priv = w_priv / max(w_priv.sum(), 1e-9)
+            names = ["main"] + [f"aux{h+1}" for h in range(m)]
+            for hi, nm in enumerate(names):
+                out[f"c{c.client_id}/{nm}/beta_sh"] = float(
+                    per_label[hi][present].mean())
+                out[f"c{c.client_id}/{nm}/beta_priv"] = float(
+                    (per_label[hi] * w_priv).sum())
+        # ensemble means (what the paper's figures report)
+        m = self.mhd_cfg.num_aux_heads
+        for nm in ["main"] + [f"aux{h+1}" for h in range(m)]:
+            for metric in ["beta_sh", "beta_priv"]:
+                vals = [out[f"c{c.client_id}/{nm}/{metric}"]
+                        for c in self.clients]
+                out[f"mean/{nm}/{metric}"] = float(np.mean(vals))
+        return out

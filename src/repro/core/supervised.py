@@ -1,0 +1,68 @@
+"""Supervised trainer — the paper's 'Supervised' upper bound and the
+'Separate' baseline (each client trained in isolation on its shard)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import BatchIterator
+from repro.models.zoo import ModelBundle
+from repro.optim.optimizers import Optimizer
+
+
+def make_train_step(bundle: ModelBundle, optimizer: Optimizer) -> Callable:
+    def train_step(params, opt_state, batch, step):
+        (loss, metrics), grads = jax.value_and_grad(
+            bundle.loss, has_aux=True)(params, batch)
+        params, opt_state = optimizer.update(grads, opt_state, params, step)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return jax.jit(train_step)
+
+
+def train_supervised(
+    bundle: ModelBundle,
+    optimizer: Optimizer,
+    arrays: Dict[str, np.ndarray],
+    indices: np.ndarray,
+    steps: int,
+    batch_size: int,
+    seed: int = 0,
+    params: Any = None,
+):
+    """Train one model on the given index subset; returns trained params."""
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = bundle.init(key)
+    opt_state = optimizer.init(params)
+    it = BatchIterator(arrays, indices, batch_size, seed=seed)
+    train_step = make_train_step(bundle, optimizer)
+    for t in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in it.next().items()}
+        params, opt_state, _ = train_step(params, opt_state, batch,
+                                          jnp.asarray(t))
+    return params
+
+
+def eval_per_label_accuracy(bundle: ModelBundle, params, arrays, num_labels,
+                            batch_size: int = 256, head: str = "main"):
+    """Per-label accuracy vector over a test set (main or aux head)."""
+    apply_fn = jax.jit(bundle.apply)
+    labels = arrays["labels"]
+    correct = np.zeros(num_labels)
+    count = np.zeros(num_labels)
+    for s in range(0, labels.shape[0], batch_size):
+        batch = {k: jnp.asarray(v[s:s + batch_size])
+                 for k, v in arrays.items() if k != "labels"}
+        out = apply_fn(params, batch)
+        logits = out["logits"] if head == "main" else out["aux_logits"][int(head[3:]) - 1]
+        pred = np.asarray(jnp.argmax(logits, -1))
+        lab = labels[s:s + batch_size]
+        np.add.at(count, lab, 1)
+        np.add.at(correct, lab[pred == lab], 1)
+    per_label = correct / np.maximum(count, 1)
+    return per_label, count > 0

@@ -1,0 +1,26 @@
+from repro.data.partition import (
+    PartitionConfig,
+    assign_primary_labels,
+    partition_dataset,
+    Partition,
+)
+from repro.data.synthetic import (
+    SyntheticVisionDataset,
+    SyntheticTextDataset,
+    make_synthetic_vision,
+    make_synthetic_text,
+)
+from repro.data.pipeline import BatchIterator, PublicPool
+
+__all__ = [
+    "PartitionConfig",
+    "assign_primary_labels",
+    "partition_dataset",
+    "Partition",
+    "SyntheticVisionDataset",
+    "SyntheticTextDataset",
+    "make_synthetic_vision",
+    "make_synthetic_text",
+    "BatchIterator",
+    "PublicPool",
+]

@@ -1,0 +1,79 @@
+"""Batching pipeline: private per-client iterators + the public pool.
+
+Host-side numpy batching (the realistic layout for a decentralized system:
+each client owns its input pipeline); device transfer happens at the jit
+boundary. Deterministic given seeds.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+class BatchIterator:
+    """Infinite shuffled minibatch iterator over index-selected arrays."""
+
+    def __init__(
+        self,
+        arrays: Dict[str, np.ndarray],
+        indices: np.ndarray,
+        batch_size: int,
+        seed: int = 0,
+        drop_remainder: bool = True,
+    ):
+        if indices.shape[0] == 0:
+            raise ValueError("BatchIterator got an empty index set")
+        self.arrays = arrays
+        self.indices = np.asarray(indices)
+        self.batch_size = batch_size
+        self.rng = np.random.default_rng(seed)
+        self._order = self.rng.permutation(self.indices.shape[0])
+        self._pos = 0
+
+    def next(self) -> Dict[str, np.ndarray]:
+        n = self.indices.shape[0]
+        take = []
+        need = self.batch_size
+        while need > 0:
+            if self._pos >= n:
+                self._order = self.rng.permutation(n)
+                self._pos = 0
+            grab = min(need, n - self._pos)
+            take.append(self._order[self._pos : self._pos + grab])
+            self._pos += grab
+            need -= grab
+        sel = self.indices[np.concatenate(take)]
+        return {k: v[sel] for k, v in self.arrays.items()}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.next()
+
+
+class PublicPool:
+    """The shared public unlabeled pool D_* (labels stripped).
+
+    ``sample(step)`` is deterministic in (seed, step) so that *all clients
+    draw the same public batch at the same global step* — exactly the
+    paper's setup where teachers and students score the same samples. In the
+    multi-pod runtime the same property lets each pod materialize the batch
+    locally with zero communication (samples are identified by a hash —
+    paper §"Communication efficiency").
+    """
+
+    def __init__(self, arrays: Dict[str, np.ndarray], indices: np.ndarray,
+                 batch_size: int, seed: int = 0):
+        self.arrays = {k: v for k, v in arrays.items() if k != "labels"}
+        self.indices = np.asarray(indices)
+        self.batch_size = batch_size
+        self.seed = seed
+
+    def sample(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed << 20) ^ step)
+        sel = self.indices[rng.integers(0, self.indices.shape[0], size=self.batch_size)]
+        return {k: v[sel] for k, v in self.arrays.items()}
+
+    @property
+    def size(self) -> int:
+        return int(self.indices.shape[0])

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+with ops.py as the jit'd dispatch wrapper and ref.py as the pure-jnp oracle
+(see kernels/EXAMPLE.md for the repo convention).
+"""

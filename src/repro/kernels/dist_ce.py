@@ -1,0 +1,116 @@
+"""Fused distillation cross-entropy Pallas TPU kernel.
+
+The MHD hot spot on LLM clients: for every public token the student must
+compute CE against a teacher distribution over V ≤ 262k classes, plus both
+sides' confidences (Λ of Eq. 4). Materializing softmax(teacher) and
+log_softmax(student) costs 2·B·V fp32 HBM round-trips; this kernel streams
+both logit tensors once, block-by-block along V, keeping only running
+(max, sumexp, weighted-sum) accumulators in VMEM.
+
+Math (per row b):
+    Z_t' = Σ_v exp(t_v − m_t),   a = Σ_v exp(t_v − m_t)·s_v
+    CE_b = (m_s + log Z_s') − a / Z_t'
+    conf_t = 1 / Z_t',  conf_s = 1 / Z_s'      (softmax max prob)
+
+Block shapes: rows ≤ 256, vocab block 512 (both multiples of MXU/VPU lanes;
+V is padded to the block with −inf semantics handled via masking).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BLOCK_ROWS = 256
+DEFAULT_BLOCK_V = 512
+_NEG = -1e30
+
+
+def _dist_ce_kernel(s_ref, t_ref, ce_ref, tconf_ref, sconf_ref,
+                    mt_ref, zt_ref, a_ref, ms_ref, zs_ref, *, nv_blocks: int,
+                    v_total: int, block_v: int):
+    vi = pl.program_id(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        mt_ref[...] = jnp.full_like(mt_ref, _NEG)
+        zt_ref[...] = jnp.zeros_like(zt_ref)
+        a_ref[...] = jnp.zeros_like(a_ref)
+        ms_ref[...] = jnp.full_like(ms_ref, _NEG)
+        zs_ref[...] = jnp.zeros_like(zs_ref)
+
+    s = s_ref[...].astype(jnp.float32)  # (rows, block_v)
+    t = t_ref[...].astype(jnp.float32)
+    # mask vocab padding in the final block
+    base = vi * block_v
+    col = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = col < v_total
+    s = jnp.where(valid, s, _NEG)
+    t = jnp.where(valid, t, _NEG)
+
+    # teacher online softmax + weighted sum of student logits
+    m_prev = mt_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(t, axis=-1))
+    scale = jnp.exp(m_prev - m_new)
+    e_t = jnp.exp(t - m_new[:, None])
+    zt_ref[...] = zt_ref[...] * scale + jnp.sum(e_t, axis=-1)
+    a_ref[...] = a_ref[...] * scale + jnp.sum(
+        e_t * jnp.where(valid, s, 0.0), axis=-1)
+    mt_ref[...] = m_new
+
+    # student online logsumexp
+    ms_prev = ms_ref[...]
+    ms_new = jnp.maximum(ms_prev, jnp.max(s, axis=-1))
+    zs_ref[...] = zs_ref[...] * jnp.exp(ms_prev - ms_new) + jnp.sum(
+        jnp.exp(s - ms_new[:, None]), axis=-1)
+    ms_ref[...] = ms_new
+
+    @pl.when(vi == nv_blocks - 1)
+    def _final():
+        logzs = ms_ref[...] + jnp.log(zs_ref[...])
+        ce_ref[...] = logzs - a_ref[...] / zt_ref[...]
+        tconf_ref[...] = 1.0 / zt_ref[...]
+        sconf_ref[...] = 1.0 / zs_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_v",
+                                             "interpret"))
+def dist_ce(student_logits, teacher_logits, *,
+            block_rows: int = DEFAULT_BLOCK_ROWS,
+            block_v: int = DEFAULT_BLOCK_V,
+            interpret: bool = False):
+    """(B, V) × (B, V) -> (ce (B,), teacher_conf (B,), student_conf (B,))."""
+    B, V = student_logits.shape
+    rows = min(block_rows, B)
+    pad_b = (-B) % rows
+    if pad_b:
+        student_logits = jnp.pad(student_logits, ((0, pad_b), (0, 0)))
+        teacher_logits = jnp.pad(teacher_logits, ((0, pad_b), (0, 0)))
+    Bp = B + pad_b
+    nv_blocks = -(-V // block_v)
+    pad_v = nv_blocks * block_v - V
+    if pad_v:
+        student_logits = jnp.pad(student_logits, ((0, 0), (0, pad_v)))
+        teacher_logits = jnp.pad(teacher_logits, ((0, 0), (0, pad_v)))
+
+    grid = (Bp // rows, nv_blocks)
+    kernel = functools.partial(_dist_ce_kernel, nv_blocks=nv_blocks,
+                               v_total=V, block_v=block_v)
+    out_shape = [jax.ShapeDtypeStruct((Bp,), jnp.float32)] * 3
+    in_spec = pl.BlockSpec((rows, block_v), lambda i, j: (i, j))
+    out_spec = pl.BlockSpec((rows,), lambda i, j: (i,))
+    vmem = pltpu.VMEM((rows,), jnp.float32)
+    ce, tconf, sconf = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[in_spec, in_spec],
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=out_shape,
+        scratch_shapes=[vmem, vmem, vmem, vmem, vmem],  # m_t z_t a m_s z_s
+        interpret=interpret,
+    )(student_logits, teacher_logits)
+    return ce[:B], tconf[:B], sconf[:B]

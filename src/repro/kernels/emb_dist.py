@@ -1,0 +1,48 @@
+"""Normalized embedding-distillation loss Pallas TPU kernel (Eq. 2).
+
+Fuses both L2 normalizations and the squared distance in one VMEM pass per
+row block — the jnp path materializes two normalized (B, E) tensors in HBM.
+Embeddings fit a single block along E (E ≤ 8192 for every assigned arch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _emb_dist_kernel(s_ref, t_ref, o_ref, *, eps: float):
+    s = s_ref[...].astype(jnp.float32)
+    t = t_ref[...].astype(jnp.float32)
+    sn = s / (jnp.sqrt(jnp.sum(s * s, axis=-1, keepdims=True)) + eps)
+    tn = t / (jnp.sqrt(jnp.sum(t * t, axis=-1, keepdims=True)) + eps)
+    d = sn - tn
+    o_ref[...] = jnp.sum(d * d, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def emb_dist(student_emb, teacher_emb, *, block_rows: int = 256,
+             eps: float = 1e-8, interpret: bool = False):
+    """(B, E) × (B, E) -> per-row squared normalized distance (B,)."""
+    B, E = student_emb.shape
+    rows = min(block_rows, B)
+    pad = (-B) % rows
+    if pad:
+        # pad rows with ones: harmless (outputs sliced off), avoids 0/0
+        student_emb = jnp.pad(student_emb, ((0, pad), (0, 0)),
+                              constant_values=1)
+        teacher_emb = jnp.pad(teacher_emb, ((0, pad), (0, 0)),
+                              constant_values=1)
+    Bp = B + pad
+    out = pl.pallas_call(
+        functools.partial(_emb_dist_kernel, eps=eps),
+        grid=(Bp // rows,),
+        in_specs=[pl.BlockSpec((rows, E), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, E), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Bp,), jnp.float32),
+        interpret=interpret,
+    )(student_emb, teacher_emb)
+    return out[:B]

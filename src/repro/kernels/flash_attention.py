@@ -1,0 +1,116 @@
+"""Blockwise (flash) attention Pallas TPU kernel — causal + sliding window.
+
+Used by the gemma3 5:1 local:global stack (window=1024) and by full-attention
+prefill. Online-softmax accumulation over key blocks; GQA is expressed in the
+BlockSpec index maps (query head h reads kv head h // G — no KV duplication
+in HBM). Block shapes default to (128, 128): MXU-aligned, and the working
+set q(128·d) + k/v(128·d) + acc(128·d) fits VMEM for d ≤ 256.
+
+TPU is the compile target; correctness is validated on CPU in interpret mode
+against kernels/ref.flash_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_t: int, block_s: int, ns_blocks: int, t_total: int,
+                  s_total: int, causal: bool, window: int, scale: float):
+    si = pl.program_id(3)
+    ti = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (block_t, d)
+    k = k_ref[0, 0].astype(jnp.float32)  # (block_s, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    qpos = ti * block_t + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (kpos < s_total) & (qpos < t_total)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(si == ns_blocks - 1)
+    def _final():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_t",
+                                             "block_s", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_t: int = 128, block_s: int = 128,
+                    interpret: bool = False):
+    """q: (B, T, H, d); k, v: (B, S, KV, d) -> (B, T, H, d)."""
+    B, T, H, d = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(d)
+
+    qt = q.swapaxes(1, 2)  # (B, H, T, d)
+    kt = k.swapaxes(1, 2)  # (B, KV, S, d)
+    vt = v.swapaxes(1, 2)
+
+    bt = min(block_t, max(T, 8))
+    bs = min(block_s, max(S, 8))
+    pad_t = (-T) % bt
+    pad_s = (-S) % bs
+    if pad_t:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_t), (0, 0)))
+    if pad_s:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+    Tp, Sp = T + pad_t, S + pad_s
+    nt, ns = Tp // bt, Sp // bs
+
+    grid = (B, H, nt, ns)
+    kernel = functools.partial(
+        _flash_kernel, block_t=bt, block_s=bs, ns_blocks=ns, t_total=T,
+        s_total=S, causal=causal, window=window, scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bt, d), lambda b, h, t, s: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda b, h, t, s, _G=G: (b, h // _G, s, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda b, h, t, s, _G=G: (b, h // _G, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bt, d), lambda b, h, t, s: (b, h, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Tp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bt,), jnp.float32),
+            pltpu.VMEM((bt,), jnp.float32),
+            pltpu.VMEM((bt, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out[:, :, :T].swapaxes(1, 2)

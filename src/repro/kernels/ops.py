@@ -1,0 +1,83 @@
+"""Jit'd dispatch wrappers over the Pallas kernels.
+
+``use_pallas`` resolution:
+  * explicit argument wins;
+  * else kernels are used when the default backend is TPU (compile target),
+    and the pure-jnp reference path is used on CPU (tests / experiments).
+Set ``REPRO_FORCE_PALLAS_INTERPRET=1`` to exercise the kernel bodies on CPU
+via interpret mode (slow; the kernel test-suite does this per-kernel).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as REF
+from repro.kernels.dist_ce import dist_ce as _dist_ce_kernel
+from repro.kernels.emb_dist import emb_dist as _emb_dist_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.ssd_scan import ssd_scan as _ssd_kernel
+
+
+def _default_use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS_INTERPRET"):
+        return True
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def _interpret() -> bool:
+    return bool(os.environ.get("REPRO_FORCE_PALLAS_INTERPRET")) or \
+        jax.default_backend() != "tpu"
+
+
+def dist_ce(student_logits, teacher_logits, use_pallas: bool | None = None):
+    """Fused distillation CE + confidences. Returns (ce, t_conf, s_conf)."""
+    use = _default_use_pallas() if use_pallas is None else use_pallas
+    if use:
+        return _dist_ce_kernel(student_logits, teacher_logits,
+                               interpret=_interpret())
+    return REF.dist_ce_ref(student_logits, teacher_logits)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    use_pallas: bool | None = None):
+    use = _default_use_pallas() if use_pallas is None else use_pallas
+    if use:
+        return _flash_kernel(q, k, v, causal=causal, window=window,
+                             interpret=_interpret())
+    return REF.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 128,
+             use_pallas: bool | None = None):
+    use = _default_use_pallas() if use_pallas is None else use_pallas
+    if use:
+        return _ssd_kernel(x, dt, A, B, C, D, chunk=chunk,
+                           interpret=_interpret())
+    from repro.models.ssm import ssd_chunked
+
+    return ssd_chunked(x, dt, A, B, C, D, chunk_size=chunk)
+
+
+def topk_wire(logits, k: int = 32, use_pallas: bool | None = None):
+    """MHD exchange wire format: (top-k vals, idx, logsumexp)."""
+    use = _default_use_pallas() if use_pallas is None else use_pallas
+    if use:
+        from repro.kernels.topk_wire import topk_wire as _kernel
+
+        return _kernel(logits, k, interpret=_interpret())
+    return REF.topk_wire_ref(logits, k)
+
+
+def emb_dist(student_emb, teacher_emb, use_pallas: bool | None = None):
+    use = _default_use_pallas() if use_pallas is None else use_pallas
+    if use:
+        return _emb_dist_kernel(student_emb, teacher_emb,
+                                interpret=_interpret())
+    return REF.emb_dist_ref(student_emb, teacher_emb)

@@ -1,0 +1,76 @@
+"""Top-k wire-format packing Pallas TPU kernel (§Perf Pair C).
+
+Packing teacher predictions into (top-k values, indices, logsumexp) is the
+MHD exchange wire format. XLA's `lax.top_k` lowers to a full-vocab variadic
+sort whose batch dims the SPMD partitioner refuses to shard (measured:
+~990 GB of replicated sort buffers at MHD batch sizes — EXPERIMENTS.md
+§Perf C1/C2). The jnp fallback is k argmax+mask rounds; this kernel fuses
+those rounds in VMEM: one HBM read of the logits row-block, k VPU
+max-reductions, and a fused logsumexp — no sort, no second pass.
+
+Row block 8 × vocab ≤ 262144 f32 = 8 MB VMEM working set.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _topk_wire_kernel(x_ref, vals_ref, idx_ref, lse_ref, *, k: int,
+                      v_total: int):
+    x = x_ref[...].astype(jnp.float32)  # (rows, V)
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    x = jnp.where(col < v_total, x, _NEG)
+
+    # fused logsumexp (one pass, before masking rounds)
+    m = jnp.max(x, axis=-1)
+    lse_ref[...] = m + jnp.log(jnp.sum(jnp.exp(x - m[:, None]), axis=-1))
+
+    def round_fn(i, carry):
+        cur = carry
+        vmax = jnp.max(cur, axis=-1)  # (rows,)
+        hit = cur == vmax[:, None]
+        # first index achieving the max
+        imax = jnp.min(jnp.where(hit, col, v_total), axis=-1)
+        vals_ref[:, i] = vmax
+        idx_ref[:, i] = imax
+        cur = jnp.where(col == imax[:, None], _NEG, cur)
+        return cur
+
+    jax.lax.fori_loop(0, k, round_fn, x)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))
+def topk_wire(logits, k: int = 32, *, block_rows: int = 8,
+              interpret: bool = False):
+    """(B, V) -> (vals (B, k) f32, idx (B, k) i32, lse (B,) f32)."""
+    B, V = logits.shape
+    rows = min(block_rows, B)
+    pad = (-B) % rows
+    if pad:
+        logits = jnp.pad(logits, ((0, pad), (0, 0)))
+    Bp = B + pad
+    kernel = functools.partial(_topk_wire_kernel, k=k, v_total=V)
+    vals, idx, lse = pl.pallas_call(
+        kernel,
+        grid=(Bp // rows,),
+        in_specs=[pl.BlockSpec((rows, V), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, k), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, k), jnp.int32),
+            jax.ShapeDtypeStruct((Bp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits)
+    return vals[:B], idx[:B], lse[:B]

@@ -1,0 +1,33 @@
+"""Production mesh definitions (TPU v5e target).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (required so smoke tests see 1 CPU device while
+dryrun.py sees 512 forced host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)  # 256 chips
+MULTI_POD = (2, 16, 16)  # 2 pods × 256 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def required_devices(multi_pod: bool) -> int:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    n = 1
+    for s in shape:
+        n *= s
+    return n

@@ -1,0 +1,196 @@
+"""Parameter / optimizer-state / cache PartitionSpec rules.
+
+Strategy (DESIGN.md §4): tensor-parallel over 'model' (heads, d_ff, experts,
+vocab) + FSDP over 'data' (the other matmul dim), replicated over 'pod'
+(gradients all-reduce across pods). Every rule is divisibility-checked
+against the mesh and falls back to replication per-dim, so the same rules
+serve full configs on the 256/512-chip meshes and reduced configs on tiny
+test meshes.
+
+Leaf rules are *name-based* — we own every parameter name (models/*.py) —
+with ndim disambiguation for stacked (scanned) stage parameters.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# role -> mesh axis name(s); "fsdp" may be retargeted (a §Perf lever)
+DEFAULT_ROLES = {
+    "fsdp": "data",
+    "tp": "model",
+    "batch": ("pod", "data"),
+}
+
+# (leaf name, base ndim) -> role template. None entries replicate.
+_RULES: Dict[Tuple[str, int], Tuple[Optional[str], ...]] = {
+    ("embed", 2): ("tp", "fsdp"),
+    ("lm_head", 2): ("fsdp", "tp"),
+    ("aux_heads", 3): (None, "fsdp", "tp"),
+    ("wq", 2): ("fsdp", "tp"),
+    ("wk", 2): ("fsdp", "tp"),
+    ("wv", 2): ("fsdp", "tp"),
+    ("wo", 2): ("tp", "fsdp"),
+    ("bq", 1): ("tp",),
+    ("bk", 1): ("tp",),
+    ("bv", 1): ("tp",),
+    ("w_up", 2): ("fsdp", "tp"),
+    ("w_gate", 2): ("fsdp", "tp"),
+    ("w_down", 2): ("tp", "fsdp"),
+    ("router", 2): (None, None),  # tiny; replicated for the manual-EP path
+    ("w_up", 3): ("tp", "fsdp", None),
+    ("w_gate", 3): ("tp", "fsdp", None),
+    ("w_down", 3): ("tp", None, "fsdp"),
+    ("in_proj", 2): ("fsdp", "tp"),
+    ("out_proj", 2): ("tp", "fsdp"),
+    ("w_dq", 2): ("fsdp", "tp"),
+    ("w_uq", 2): ("fsdp", "tp"),
+    ("w_dkv", 2): ("fsdp", "tp"),
+    ("w_uk", 3): ("fsdp", "tp", None),
+    ("w_uv", 3): ("fsdp", "tp", None),
+    ("vision_proj", 2): ("fsdp", "tp"),
+    ("audio_proj", 2): ("fsdp", "tp"),
+    ("pos_embed", 2): (None, "tp"),
+    ("proj", 2): ("fsdp", "tp"),
+}
+
+
+def _key_name(p) -> str:
+    for attr in ("key", "name", "idx"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def _resolve(axis_role: Optional[str], dim: int, mesh_axis_sizes,
+             roles) -> Optional[Any]:
+    if axis_role is None:
+        return None
+    axes = roles[axis_role]
+    if isinstance(axes, str):
+        axes = (axes,)
+    kept = tuple(a for a in axes if a in mesh_axis_sizes)
+    size = int(np.prod([mesh_axis_sizes[a] for a in kept])) if kept else 1
+    if not kept or size <= 1 or dim % size != 0:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def _mesh_sizes(mesh):
+    shape = getattr(mesh, "shape", None)
+    if shape is not None and hasattr(shape, "values"):
+        return dict(zip(mesh.axis_names, shape.values()))
+    devices = getattr(mesh, "devices", None)
+    if devices is not None and hasattr(devices, "shape"):
+        return dict(zip(mesh.axis_names, devices.shape))
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def param_pspec(path, leaf, mesh, roles=None) -> P:
+    roles = roles or DEFAULT_ROLES
+    sizes = _mesh_sizes(mesh)
+    names = [_key_name(p) for p in path]
+    leaf_name = names[-1]
+    # conv params are nested under a "conv" dict with generic w/b leaves
+    if len(names) >= 2 and names[-2] == "conv":
+        base = (None, "tp") if leaf_name == "w" else ("tp",)
+        tmpl = base
+        base_ndim = len(base)
+    else:
+        stacked_guess = any(n.startswith("stage") for n in names[:-1])
+        ndim = len(leaf.shape)
+        base_ndim = ndim - 1 if stacked_guess else ndim
+        tmpl = _RULES.get((leaf_name, base_ndim))
+        if tmpl is None:
+            return P()  # replicate (norm scales, biases, scalars, resnet, ...)
+    ndim = len(leaf.shape)
+    pad = ndim - len(tmpl)
+    full = (None,) * pad + tuple(tmpl)
+    spec = tuple(_resolve(r, leaf.shape[i], sizes, roles)
+                 for i, r in enumerate(full))
+    return P(*spec)
+
+
+def params_shardings(param_shapes, mesh, roles=None):
+    """Map an eval_shape'd params (or optimizer-state) pytree to PartitionSpecs."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(path, leaf, mesh, roles), param_shapes)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def _sizes(mesh):
+    return _mesh_sizes(mesh)
+
+
+def _batch_axes(mesh, batch_dim: int):
+    sizes = _sizes(mesh)
+    roles = DEFAULT_ROLES["batch"]
+    if isinstance(roles, str):
+        roles = (roles,)
+    axes = tuple(a for a in roles if a in sizes)
+    total = int(np.prod([sizes[a] for a in axes])) if axes else 1
+    if axes and total > 1 and batch_dim % total == 0:
+        return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def batch_shardings(batch_shapes, mesh):
+    """tokens/images: batch dim over (pod, data); rest replicated."""
+    def spec(path, leaf):
+        b = _batch_axes(mesh, leaf.shape[0]) if leaf.ndim >= 1 else None
+        return P(b, *([None] * (leaf.ndim - 1))) if leaf.ndim else P()
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shapes)
+
+
+def cache_shardings(cache_shapes, mesh):
+    """Decode caches: batch over (pod,data) when divisible, else sequence over
+    'data' (the long_500k batch=1 case); kv-heads / latent dims over 'model'
+    when divisible. Stacked leading (repeats) dim replicated."""
+    sizes = _sizes(mesh)
+    model = sizes.get("model", 1)
+
+    def spec(path, leaf):
+        names = [_key_name(p) for p in path]
+        name = names[-1]
+        if name == "index" or leaf.ndim <= 1:
+            return P()
+        stacked = any(n.startswith("stage") for n in names[:-1])
+        off = 1 if stacked else 0
+        dims: list = [None] * leaf.ndim
+        if leaf.ndim <= off:
+            return P()
+        bdim = off  # batch dim position
+        b_axes = _batch_axes(mesh, leaf.shape[bdim])
+        dims[bdim] = b_axes
+        if name in ("k", "v") and leaf.ndim - off == 4:
+            # (B, S, KV, hd): shard S on data when batch isn't; KV on model
+            if b_axes is None and "data" in sizes and \
+                    leaf.shape[off + 1] % sizes["data"] == 0:
+                dims[off + 1] = "data"
+            if leaf.shape[off + 2] % model == 0 and model > 1:
+                dims[off + 2] = "model"
+        elif name in ("c_kv", "k_rope") and leaf.ndim - off == 3:
+            # (B, S, R): shard S on data when batch isn't; latent on model
+            if b_axes is None and "data" in sizes and \
+                    leaf.shape[off + 1] % sizes["data"] == 0:
+                dims[off + 1] = "data"
+            if leaf.shape[off + 2] % model == 0 and model > 1:
+                dims[off + 2] = "model"
+        elif name == "ssm" and leaf.ndim - off == 4:
+            # (B, H, P, N): heads on model
+            if leaf.shape[off + 1] % model == 0 and model > 1:
+                dims[off + 1] = "model"
+        elif name == "conv" and leaf.ndim - off == 3:
+            # (B, W, C): channels on model
+            if leaf.shape[off + 2] % model == 0 and model > 1:
+                dims[off + 2] = "model"
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)

@@ -1,0 +1,106 @@
+"""Step functions lowered by the launcher and the dry-run.
+
+ * ``train_step``   — loss + grad + optimizer update (SGD-momentum default,
+                      the paper's optimizer; AdamW selectable).
+ * ``prefill_step`` — forward over the full prompt, returns last-position
+                      logits (serving prefill; no full-logit materialization).
+ * ``serve_step``   — one-token decode against a KV/state cache.
+ * ``mhd_train_step`` — the paper's technique on LM clients: one student
+                      update with teacher predictions distilled on a public
+                      batch (teacher params are explicit inputs; in the
+                      multi-pod runtime they come from the checkpoint pool).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mhd import MHDConfig
+from repro.models.zoo import ModelBundle
+from repro.optim.optimizers import Optimizer
+
+
+def make_train_step(bundle: ModelBundle, optimizer: Optimizer) -> Callable:
+    def train_step(state: Dict[str, Any], batch: Dict[str, Any]):
+        def loss_fn(p):
+            return bundle.loss(p, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"])
+        params, opt = optimizer.update(grads, state["opt"], state["params"],
+                                       state["step"])
+        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+        return new_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(bundle: ModelBundle) -> Callable:
+    def prefill_step(params, batch):
+        out = bundle.apply(params, batch)
+        return out["logits"][:, -1, :]  # next-token logits only
+
+    return prefill_step
+
+
+def make_serve_step(bundle: ModelBundle) -> Callable:
+    def serve_step(params, batch):
+        logits, caches = bundle.decode_step(params, batch["token"],
+                                            batch["caches"])
+        return logits[:, -1, :], caches
+
+    return serve_step
+
+
+def make_mhd_train_step(bundle: ModelBundle, optimizer: Optimizer,
+                        mhd_cfg: MHDConfig, teacher_bundle=None) -> Callable:
+    """Paper technique as one jitted step: student update from Δ teachers.
+
+    teachers: pytree stacked over Δ of teacher params (same arch unless
+    ``teacher_bundle`` given). Teacher forward runs inside the step (as in
+    the co-located deployment); outputs are stop-gradiented by mhd logic.
+    """
+    from repro.core.lm_adapter import lm_mhd_loss, lm_mhd_outputs
+
+    t_bundle = teacher_bundle or bundle
+
+    def mhd_train_step(state, batch):
+        private_batch = {"tokens": batch["private_tokens"]}
+        public_batch = {"tokens": batch["public_tokens"]}
+
+        def teacher_out(tp):
+            o = lm_mhd_outputs(t_bundle, tp, public_batch)
+            return {"embedding": o["embedding"], "logits": o["logits"],
+                    "aux_logits": o["aux_logits"]}
+
+        teachers = jax.lax.map(teacher_out, batch["teacher_params"])
+
+        def loss_fn(p):
+            return lm_mhd_loss(bundle, p, private_batch, public_batch,
+                               teachers, mhd_cfg)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"])
+        params, opt = optimizer.update(grads, state["opt"], state["params"],
+                                       state["step"])
+        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+        return new_state, {"loss": loss, **metrics}
+
+    return mhd_train_step
+
+
+def train_state_shapes(bundle: ModelBundle, optimizer: Optimizer):
+    """abstract TrainState via eval_shape (no allocation)."""
+    params = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    opt = jax.eval_shape(optimizer.init, params)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"params": params, "opt": opt, "step": step}
+
+
+def init_train_state(bundle: ModelBundle, optimizer: Optimizer, seed: int = 0):
+    params = bundle.init(jax.random.PRNGKey(seed))
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}

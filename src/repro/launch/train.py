@@ -1,0 +1,161 @@
+"""Training launcher.
+
+Two modes:
+  * ``--mode supervised`` — train one architecture on synthetic token data
+    (the production path for the assigned archs; on a real cluster the data
+    pipeline feeds tokenized shards through the same BatchIterator API).
+  * ``--mode mhd`` — the paper's decentralized run: K clients, private
+    shards with skew s, public pool, checkpoint pools, a communication
+    topology, and multi-headed distillation (core/runtime.py).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --mode mhd --clients 4 \
+      --steps 200 --skew 100 --topology complete --aux-heads 3
+  PYTHONPATH=src python -m repro.launch.train --mode supervised \
+      --arch qwen2.5-32b --reduced --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def run_supervised(args) -> None:
+    from repro.configs import get_config, get_reduced
+    from repro.launch.steps import init_train_state, make_train_step
+    from repro.models.zoo import build_bundle
+    from repro.optim.optimizers import OptimizerConfig, make_optimizer
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    bundle = build_bundle(cfg)
+    opt = make_optimizer(OptimizerConfig(
+        name=args.optimizer, init_lr=args.lr, total_steps=args.steps))
+    state = init_train_state(bundle, opt, seed=args.seed)
+    step_fn = jax.jit(make_train_step(bundle, opt))
+
+    rng = np.random.default_rng(args.seed)
+    B, T = args.batch_size, args.seq_len
+    vocab = cfg.vocab_size
+    t0 = time.time()
+    for t in range(args.steps):
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, vocab, size=(B, T), dtype=np.int32))}
+        if getattr(cfg, "vision", None) is not None:
+            batch["vision_embeds"] = jnp.asarray(rng.standard_normal(
+                (B, cfg.vision.num_patches, cfg.vision.embed_dim)), jnp.float32)
+        if getattr(cfg, "audio", None) is not None:
+            batch = {
+                "tokens": jnp.asarray(rng.integers(
+                    0, vocab, size=(B, cfg.audio.decoder_len), dtype=np.int32)),
+                "audio_frames": jnp.asarray(rng.standard_normal(
+                    (B, T, cfg.audio.frame_dim)), jnp.float32),
+            }
+        state, metrics = step_fn(state, batch)
+        if t % max(args.steps // 10, 1) == 0:
+            print(f"step {t}: loss {float(metrics['loss']):.4f}")
+    print(f"done: {args.steps} steps in {time.time()-t0:.1f}s; "
+          f"final loss {float(metrics['loss']):.4f}")
+
+
+def run_mhd(args) -> None:
+    from repro.core import (
+        MHDConfig, DecentralizedTrainer, RunConfig,
+        complete_graph, cycle_graph, islands_graph, chain_graph,
+    )
+    from repro.core.graph import random_regular_graph_fn
+    from repro.data import make_synthetic_vision, partition_dataset, PartitionConfig
+    from repro.models.resnet import resnet_tiny, resnet_tiny34
+    from repro.models.zoo import build_bundle
+    from repro.optim.optimizers import OptimizerConfig, make_optimizer
+
+    K = args.clients
+    ds = make_synthetic_vision(num_labels=args.labels,
+                               samples_per_label=args.samples_per_label,
+                               image_size=8, noise=args.noise, seed=args.seed)
+    test = make_synthetic_vision(num_labels=args.labels, samples_per_label=20,
+                                 image_size=8, noise=args.noise,
+                                 seed=args.seed + 999,
+                                 prototype_seed=args.seed)
+    pcfg = PartitionConfig(
+        num_clients=K, num_labels=args.labels,
+        labels_per_client=max(args.labels // K, 1) * 2,
+        assignment="random", skew=args.skew, gamma_pub=0.1, seed=args.seed)
+    part = partition_dataset(ds.labels, pcfg)
+    arrays = {"images": ds.images, "labels": ds.labels}
+
+    if args.topology == "random":
+        graph = random_regular_graph_fn(K, degree=1, seed=args.seed,
+                                        reshuffle_every=args.pool_every)
+    else:
+        topo = {"complete": complete_graph, "cycle": cycle_graph,
+                "chain": chain_graph}.get(args.topology)
+        graph = topo(K) if topo else islands_graph(K, 2)
+
+    maker = resnet_tiny34 if args.big_clients else resnet_tiny
+    bundles = [build_bundle(maker(args.labels, num_aux_heads=args.aux_heads))
+               for _ in range(K)]
+    opt = make_optimizer(OptimizerConfig(init_lr=args.lr,
+                                         total_steps=args.steps,
+                                         grad_clip_norm=1.0))
+    mhd = MHDConfig(nu_emb=args.nu_emb, nu_aux=args.nu_aux,
+                    num_aux_heads=args.aux_heads, delta=args.delta,
+                    confidence=args.confidence,
+                    pool_size=min(K, 8), pool_update_every=args.pool_every)
+    trainer = DecentralizedTrainer(
+        bundles, opt, mhd,
+        RunConfig(steps=args.steps, batch_size=args.batch_size,
+                  public_batch_size=args.batch_size,
+                  eval_every=args.eval_every, seed=args.seed),
+        arrays, part.client_indices, part.public_indices, graph, args.labels)
+    history = trainer.train(
+        eval_arrays={"images": test.images, "labels": test.labels},
+        log_every=max(args.steps // 10, 1))
+    final = trainer.evaluate({"images": test.images, "labels": test.labels})
+    print(json.dumps({k: round(v, 4) for k, v in final.items()
+                      if k.startswith("mean/")}, indent=2))
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--mode", choices=["supervised", "mhd"], default="mhd")
+    p.add_argument("--arch", default="qwen2.5-32b")
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--batch-size", type=int, default=16)
+    p.add_argument("--seq-len", type=int, default=128)
+    p.add_argument("--lr", type=float, default=0.05)
+    p.add_argument("--optimizer", default="sgd_momentum")
+    p.add_argument("--seed", type=int, default=0)
+    # mhd options (paper §4.1 defaults scaled to CPU)
+    p.add_argument("--clients", type=int, default=4)
+    p.add_argument("--labels", type=int, default=16)
+    p.add_argument("--samples-per-label", type=int, default=60)
+    p.add_argument("--noise", type=float, default=1.0)
+    p.add_argument("--skew", type=float, default=100.0)
+    p.add_argument("--topology", default="complete",
+                   choices=["complete", "cycle", "islands", "chain",
+                            "random"])
+    p.add_argument("--confidence", default="max",
+                   choices=["max", "entropy", "margin", "random"])
+    p.add_argument("--aux-heads", type=int, default=3)
+    p.add_argument("--delta", type=int, default=1)
+    p.add_argument("--nu-emb", type=float, default=1.0)
+    p.add_argument("--nu-aux", type=float, default=1.0)
+    p.add_argument("--pool-every", type=int, default=20)
+    p.add_argument("--eval-every", type=int, default=0)
+    p.add_argument("--big-clients", action="store_true")
+    args = p.parse_args(argv)
+    if args.mode == "supervised":
+        run_supervised(args)
+    else:
+        run_mhd(args)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,30 @@
+from repro.models.config import (
+    LayerSpec,
+    Stage,
+    ModelConfig,
+    MoEConfig,
+    MLAConfig,
+    MambaConfig,
+    VisionStubConfig,
+    AudioStubConfig,
+    EncoderConfig,
+    uniform_stages,
+    patterned_stages,
+)
+from repro.models.zoo import ModelBundle, build_bundle
+
+__all__ = [
+    "LayerSpec",
+    "Stage",
+    "ModelConfig",
+    "MoEConfig",
+    "MLAConfig",
+    "MambaConfig",
+    "VisionStubConfig",
+    "AudioStubConfig",
+    "EncoderConfig",
+    "uniform_stages",
+    "patterned_stages",
+    "ModelBundle",
+    "build_bundle",
+]

@@ -1,0 +1,387 @@
+"""Core neural layers (pure functions: init_* returns params, *_apply runs).
+
+All matmuls accumulate in fp32 (``preferred_element_type``) — MXU-native.
+Weight layouts are chosen so the tensor-parallel ('model') axis shards the
+*second* dim of up-projections and the *first* dim of down-projections.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import maybe_shard
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32, scale: float = 1.0):
+    std = scale / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(d: int, kind: str = "rmsnorm", dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    raise ValueError(kind)
+
+
+def norm_apply(params, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+        return y.astype(x.dtype)
+    if kind == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+        return y.astype(x.dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., T, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., T, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, act: str = "silu", dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+    }
+    if act == "silu":  # gated (SwiGLU) variant
+        params["w_gate"] = dense_init(k3, d_model, d_ff, dtype)
+    return params
+
+
+def mlp_apply(params, x, act: str = "silu"):
+    up = jnp.einsum("...d,df->...f", x, params["w_up"],
+                    preferred_element_type=jnp.float32)
+    if act == "silu":
+        gate = jnp.einsum("...d,df->...f", x, params["w_gate"],
+                          preferred_element_type=jnp.float32)
+        h = jax.nn.silu(gate) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up)
+    elif act == "relu2":  # squared ReLU (nemotron/minitron)
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        raise ValueError(act)
+    h = h.astype(x.dtype)
+    if h.ndim == 3:
+        h = maybe_shard(h, "batch", "seq", "model")
+    return jnp.einsum("...f,fd->...d", h, params["w_down"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA; full / sliding-window / bidirectional / cross)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    kv_input_dim: Optional[int] = None  # cross-attn: K/V source dim
+
+
+def init_attention(key, dims: AttnDims, dtype=jnp.float32):
+    k = jax.random.split(key, 8)
+    kv_in = dims.kv_input_dim or dims.d_model
+    H, KV, hd = dims.num_heads, dims.num_kv_heads, dims.head_dim
+    params = {
+        "wq": dense_init(k[0], dims.d_model, H * hd, dtype),
+        "wk": dense_init(k[1], kv_in, KV * hd, dtype),
+        "wv": dense_init(k[2], kv_in, KV * hd, dtype),
+        "wo": dense_init(k[3], H * hd, dims.d_model, dtype),
+    }
+    if dims.qkv_bias:
+        params["bq"] = jnp.zeros((H * hd,), dtype)
+        params["bk"] = jnp.zeros((KV * hd,), dtype)
+        params["bv"] = jnp.zeros((KV * hd,), dtype)
+    if dims.qk_norm:
+        params["q_norm"] = init_norm(hd, "rmsnorm", dtype)
+        params["k_norm"] = init_norm(hd, "rmsnorm", dtype)
+    return params
+
+
+def _project_qkv(params, dims: AttnDims, x, kv_src, positions, kv_positions,
+                 rope_theta: Optional[float]):
+    H, KV, hd = dims.num_heads, dims.num_kv_heads, dims.head_dim
+    q = jnp.einsum("...d,dh->...h", x, params["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("...d,dh->...h", kv_src, params["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("...d,dh->...h", kv_src, params["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if dims.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = q.reshape(q.shape[:-1] + (H, hd))
+    k = k.reshape(k.shape[:-1] + (KV, hd))
+    v = v.reshape(v.shape[:-1] + (KV, hd))
+    if dims.qk_norm:
+        q = norm_apply(params["q_norm"], q, "rmsnorm")
+        k = norm_apply(params["k_norm"], k, "rmsnorm")
+    if rope_theta is not None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, kv_positions, rope_theta)
+    return q, k, v
+
+
+def attention_scores(q, k, v, mask, logit_softcap: Optional[float] = None):
+    """Reference (XLA-fused) attention. q:(B,T,H,hd) k/v:(B,S,KV,hd).
+
+    The Pallas flash kernel (kernels/flash_attention.py) implements the same
+    math blockwise for TPU; this path is the oracle and the CPU/dry-run path.
+    """
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV  # queries per kv head
+    q = q.reshape(B, T, KV, G, hd)
+    scores = jnp.einsum("btkgh,bskh->bkgts", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(hd)
+    if logit_softcap is not None:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, T, H, hd).astype(v.dtype)
+
+
+# Above this many score entries per (batch, head), attention switches to the
+# query-block scan path (flash-style: scores never materialize for the whole
+# sequence at once). The Pallas kernel (kernels/flash_attention.py) is the
+# TPU twin of this formulation.
+BLOCKWISE_SCORE_THRESHOLD = 4_194_304  # 2048 x 2048
+BLOCK_Q = 512
+
+
+def _blockwise_attention(q, k, v, mask_kind: str, window: int,
+                         logit_softcap: Optional[float], block_q: int = BLOCK_Q):
+    """Scan over query blocks; each block sees full K/V with masking.
+
+    Bounds activation memory to O(block_q · S) per (batch, head) instead of
+    O(T · S); with per-unit remat the backward pass recomputes blockwise too.
+    """
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(block_q, T)
+    pad = (-T) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = (T + pad) // bq
+    qb = q.reshape(B, nb, bq, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    kpos = jnp.arange(S)
+
+    def one_block(carry, xs):
+        q_i, ib = xs
+        scores = jnp.einsum("btkgh,bskh->bkgts", q_i, k,
+                            preferred_element_type=jnp.float32)
+        scores = scores / math.sqrt(hd)
+        if logit_softcap is not None:
+            scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+        qpos = ib * bq + jnp.arange(bq)
+        if mask_kind == "causal":
+            m = kpos[None, :] <= qpos[:, None]
+        elif mask_kind == "swa":
+            m = (kpos[None, :] <= qpos[:, None]) & \
+                (kpos[None, :] > qpos[:, None] - window)
+        else:
+            m = jnp.ones((bq, S), bool)
+        scores = jnp.where(m[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgts,bskh->btkgh", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return carry, out.astype(v.dtype)
+
+    # checkpoint per block: backward recomputes one block's scores at a time
+    # (otherwise scan stacks (nb, ..., bq, S) probs as residuals)
+    _, outs = jax.lax.scan(jax.checkpoint(one_block, prevent_cse=False), 0,
+                           (qb, jnp.arange(nb, dtype=jnp.int32)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, T + pad, H, hd)
+    return out[:, :T]
+
+
+def make_mask(T: int, S: int, kind: str, window: int = 0,
+              q_offset: int = 0) -> Optional[jnp.ndarray]:
+    """(1,1,1,T,S) boolean mask. kind: causal | swa | none."""
+    if kind == "none":
+        return None
+    qpos = q_offset + jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    causal = kpos <= qpos
+    if kind == "causal":
+        m = causal
+    elif kind == "swa":
+        m = causal & (kpos > qpos - window)
+    else:
+        raise ValueError(kind)
+    return m[None, None, None]
+
+
+def attention_apply(
+    params,
+    dims: AttnDims,
+    x,
+    *,
+    mask_kind: str = "causal",
+    window: int = 0,
+    rope_theta: Optional[float] = 10_000.0,
+    kv_src=None,
+    positions=None,
+    kv_positions=None,
+    logit_softcap: Optional[float] = None,
+):
+    """Self- or cross-attention over full sequences (training / prefill)."""
+    B, T = x.shape[0], x.shape[1]
+    kv_src = x if kv_src is None else kv_src
+    S = kv_src.shape[1]
+    if positions is None:
+        positions = jnp.arange(T)[None]
+    if kv_positions is None:
+        kv_positions = jnp.arange(S)[None]
+    q, k, v = _project_qkv(params, dims, x, kv_src, positions, kv_positions,
+                           rope_theta)
+    q = maybe_shard(q, "batch", "seq", "model", "none")
+    k = maybe_shard(k, "batch", "seq", "model", "none")
+    v = maybe_shard(v, "batch", "seq", "model", "none")
+    if T * S >= BLOCKWISE_SCORE_THRESHOLD:
+        out = _blockwise_attention(q, k, v, mask_kind, window, logit_softcap)
+    else:
+        mask = make_mask(T, S, mask_kind, window)
+        out = attention_scores(q, k, v, mask, logit_softcap)
+    out = out.reshape(B, T, dims.num_heads * dims.head_dim)
+    return jnp.einsum("...h,hd->...d", out, params["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def attention_decode(
+    params,
+    dims: AttnDims,
+    x,  # (B, 1, D)
+    cache: dict,  # {"k": (B, S, KV, hd), "v": ..., "index": scalar}
+    *,
+    window: int = 0,
+    rope_theta: Optional[float] = 10_000.0,
+    logit_softcap: Optional[float] = None,
+):
+    """One-token decode against a ring/linear KV cache.
+
+    For sliding-window layers the cache length is `window` and indexing is
+    modular (ring buffer); for full layers the cache length is max_seq.
+    """
+    B = x.shape[0]
+    S = cache["k"].shape[1]
+    idx = cache["index"]  # absolute position of the new token
+    positions = jnp.full((B, 1), idx, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(params, dims, x, x, positions, positions,
+                                   rope_theta)
+    slot = jnp.mod(idx, S)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    kpos_slot = jnp.arange(S)
+    # absolute position stored in each slot (ring semantics)
+    wraps = (idx - kpos_slot + S) // S  # how many times slot was overwritten after kpos
+    abs_pos = idx - jnp.mod(idx - kpos_slot, S)
+    valid = (abs_pos >= 0) & (abs_pos <= idx)
+    if window:
+        valid &= abs_pos > idx - window
+    mask = valid[None, None, None, None, :]
+    KV, hd = dims.num_kv_heads, dims.head_dim
+    out = attention_scores(q, k, v, mask, logit_softcap)
+    out = out.reshape(B, 1, dims.num_heads * dims.head_dim)
+    y = jnp.einsum("...h,hd->...d", out, params["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    new_cache = {"k": k, "v": v, "index": idx + 1}
+    return y, new_cache
+
+
+def init_kv_cache(batch: int, length: int, num_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((batch, length, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, length, num_kv_heads, head_dim), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# causal conv1d (mamba2 frontend)
+# ---------------------------------------------------------------------------
+
+def init_causal_conv1d(key, channels: int, width: int, dtype=jnp.float32):
+    std = 1.0 / math.sqrt(width)
+    return {
+        "w": (jax.random.normal(key, (width, channels)) * std).astype(dtype),
+        "b": jnp.zeros((channels,), dtype),
+    }
+
+
+def causal_conv1d_apply(params, x):
+    """Depthwise causal conv. x: (B, T, C) -> (B, T, C)."""
+    width = params["w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * params["w"][i][None, None, :]
+        for i in range(width)
+    )
+    return out + params["b"][None, None, :]
+
+
+def causal_conv1d_step(params, x_t, conv_state):
+    """Single decode step. x_t: (B, C); conv_state: (B, width-1, C)."""
+    width = params["w"].shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,W,C)
+    out = jnp.einsum("bwc,wc->bc", window, params["w"]) + params["b"]
+    return out, window[:, 1:, :]

@@ -1,0 +1,191 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, arXiv:2412.19437).
+
+Queries and keys/values are low-rank-compressed; only the compressed KV
+latent ``c_kv`` (kv_lora_rank) plus a small shared RoPE key (qk_rope_head_dim)
+are cached at decode time — that 576-dim/position cache is why
+deepseek-v3-671b participates in the ``long_500k`` shape (DESIGN.md §6).
+
+Two paths:
+  * ``mla_apply``  — training / prefill: materialize per-head K,V.
+  * ``mla_decode`` — absorbed decode: queries are mapped into the latent
+    space (W_uk absorbed into q), attention runs against the latent cache,
+    and W_uv is applied after the attention reduction. No per-head KV is
+    ever materialized.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import maybe_shard
+from repro.models.config import MLAConfig
+from repro.models.layers import apply_rope, dense_init, init_norm, norm_apply
+
+
+def init_mla(key, d_model: int, num_heads: int, cfg: MLAConfig, dtype=jnp.float32):
+    k = jax.random.split(key, 8)
+    H = num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "w_dq": dense_init(k[0], d_model, cfg.q_lora_rank, dtype),
+        "q_norm": init_norm(cfg.q_lora_rank, "rmsnorm", dtype),
+        "w_uq": dense_init(k[1], cfg.q_lora_rank, H * (dn + dr), dtype),
+        "w_dkv": dense_init(k[2], d_model, cfg.kv_lora_rank + dr, dtype),
+        "kv_norm": init_norm(cfg.kv_lora_rank, "rmsnorm", dtype),
+        "w_uk": (jax.random.normal(k[3], (cfg.kv_lora_rank, H, dn))
+                 / math.sqrt(cfg.kv_lora_rank)).astype(dtype),
+        "w_uv": (jax.random.normal(k[4], (cfg.kv_lora_rank, H, dv))
+                 / math.sqrt(cfg.kv_lora_rank)).astype(dtype),
+        "wo": dense_init(k[5], H * dv, d_model, dtype),
+    }
+
+
+def _compress(params, cfg: MLAConfig, x, positions, rope_theta):
+    """Shared front: compressed q (split nope/rope) + latent kv + roped k_rope."""
+    H_dims = params["w_uq"].shape[1]
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    H = H_dims // (dn + dr)
+
+    c_q = jnp.einsum("...d,dr->...r", x, params["w_dq"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    c_q = norm_apply(params["q_norm"], c_q)
+    q = jnp.einsum("...r,rh->...h", c_q, params["w_uq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = q.reshape(q.shape[:-1] + (H, dn + dr))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    ckv_full = jnp.einsum("...d,dr->...r", x, params["w_dkv"],
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+    c_kv = norm_apply(params["kv_norm"], ckv_full[..., : cfg.kv_lora_rank])
+    k_rope = ckv_full[..., cfg.kv_lora_rank :]  # (..., dr) shared across heads
+    k_rope = apply_rope(k_rope[..., None, :], positions, rope_theta)[..., 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _blockwise_mla(q_nope, q_rope, k_nope, k_rope, v, scale, block_q):
+    """Query-block scan for MLA prefill/train (bounded score memory)."""
+    B, T, H, dn = q_nope.shape
+    S = k_nope.shape[1]
+    bq = min(block_q, T)
+    pad = (-T) % bq
+    if pad:
+        q_nope = jnp.pad(q_nope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_rope = jnp.pad(q_rope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = (T + pad) // bq
+    qn = q_nope.reshape(B, nb, bq, H, dn).transpose(1, 0, 2, 3, 4)
+    qr = q_rope.reshape(B, nb, bq, H, -1).transpose(1, 0, 2, 3, 4)
+    kpos = jnp.arange(S)
+
+    def one_block(carry, xs):
+        qn_i, qr_i, ib = xs
+        scores = (
+            jnp.einsum("bthd,bshd->bhts", qn_i, k_nope,
+                       preferred_element_type=jnp.float32)
+            + jnp.einsum("bthd,bsd->bhts", qr_i, k_rope,
+                         preferred_element_type=jnp.float32)
+        ) * scale
+        qpos = ib * bq + jnp.arange(bq)
+        m = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(m[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhts,bshd->bthd", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return carry, out.astype(v.dtype)
+
+    _, outs = jax.lax.scan(jax.checkpoint(one_block, prevent_cse=False), 0,
+                           (qn, qr, jnp.arange(nb, dtype=jnp.int32)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, T + pad, H, -1)
+    return out[:, :T]
+
+
+def mla_apply(params, x, cfg: MLAConfig, num_heads: int, *,
+              rope_theta: float = 10_000.0, positions=None):
+    """Training / prefill path: (B, T, D) -> (B, T, D), causal."""
+    B, T, D = x.shape
+    if positions is None:
+        positions = jnp.arange(T)[None]
+    q_nope, q_rope, c_kv, k_rope = _compress(params, cfg, x, positions, rope_theta)
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    H = num_heads
+
+    k_nope = jnp.einsum("btr,rhd->bthd", c_kv, params["w_uk"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("btr,rhd->bthd", c_kv, params["w_uv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q_nope = maybe_shard(q_nope, "batch", "seq", "model", "none")
+    k_nope = maybe_shard(k_nope, "batch", "seq", "model", "none")
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    from repro.models.layers import BLOCKWISE_SCORE_THRESHOLD, BLOCK_Q
+
+    if T * T >= BLOCKWISE_SCORE_THRESHOLD:
+        out = _blockwise_mla(q_nope, q_rope, k_nope, k_rope, v, scale, BLOCK_Q)
+    else:
+        scores = (
+            jnp.einsum("bthd,bshd->bhts", q_nope, k_nope,
+                       preferred_element_type=jnp.float32)
+            + jnp.einsum("bthd,bsd->bhts", q_rope, k_rope,
+                         preferred_element_type=jnp.float32)
+        ) * scale
+        causal = (jnp.arange(T)[None, :] <= jnp.arange(T)[:, None])[None, None]
+        scores = jnp.where(causal, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhts,bshd->bthd", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    out = out.reshape(B, T, H * dv)
+    return jnp.einsum("...h,hd->...d", out, params["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def init_mla_cache(batch: int, length: int, cfg: MLAConfig, dtype=jnp.bfloat16):
+    return {
+        "c_kv": jnp.zeros((batch, length, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, length, cfg.qk_rope_head_dim), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_decode(params, x, cache, cfg: MLAConfig, num_heads: int, *,
+               rope_theta: float = 10_000.0):
+    """Absorbed one-token decode. x: (B, 1, D)."""
+    B = x.shape[0]
+    S = cache["c_kv"].shape[1]
+    idx = cache["index"]
+    positions = jnp.full((B, 1), idx, dtype=jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _compress(
+        params, cfg, x, positions, rope_theta
+    )
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    H = num_heads
+
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, idx, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, idx, 0))
+
+    # absorb W_uk into the query: q_lat (B, 1, H, R)
+    q_lat = jnp.einsum("bthd,rhd->bthr", q_nope, params["w_uk"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    scale = 1.0 / math.sqrt(dn + dr)
+    scores = (
+        jnp.einsum("bthr,bsr->bhts", q_lat, c_kv,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bthd,bsd->bhts", q_rope, k_rope,
+                     preferred_element_type=jnp.float32)
+    ) * scale
+    valid = (jnp.arange(S) <= idx)[None, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # attend in latent space, then decompress with W_uv
+    o_lat = jnp.einsum("bhts,bsr->bthr", probs, c_kv.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    out = jnp.einsum("bthr,rhd->bthd", o_lat.astype(x.dtype), params["w_uv"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = out.reshape(B, 1, H * dv)
+    y = jnp.einsum("...h,hd->...d", out, params["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return y, {"c_kv": c_kv, "k_rope": k_rope, "index": idx + 1}

@@ -1,0 +1,124 @@
+"""Token-choice Mixture-of-Experts with capacity-bounded scatter dispatch.
+
+Design (DESIGN.md §4):
+  * router in fp32; top-k softmax (or sigmoid, DeepSeek-v3 style) gating
+  * dispatch: each (token, choice) pair is scattered into a per-expert slot
+    buffer ``(E, C, D)`` — C is the capacity; overflowing pairs are dropped
+    (their combine weight is zeroed), exactly like Switch/GShard capacity.
+    This avoids the (T, E, C) one-hot dispatch tensor entirely.
+  * expert FFN: batched einsum over the expert dimension (sharded on the
+    'model'/'expert' mesh axis); slots sharded on 'data'.
+  * combine: gather back + weighted sum over k choices.
+  * aux load-balance loss (Switch-style): E * Σ_e f_e · P_e.
+
+The explicit all-to-all expert-parallel variant (shard_map) lives in
+``moe_a2a.py`` and is a §Perf lever; this module is the portable baseline
+that also runs on CPU for tests and small experiments.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import maybe_shard
+from repro.models.config import MoEConfig
+from repro.models.layers import dense_init, init_mlp, mlp_apply
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, act: str = "silu",
+             dtype=jnp.float32):
+    k = jax.random.split(key, 6)
+    E, F = cfg.num_experts, cfg.d_ff_expert
+    std = 1.0 / math.sqrt(d_model)
+    params = {
+        "router": dense_init(k[0], d_model, E, jnp.float32),
+        "w_gate": (jax.random.normal(k[1], (E, d_model, F)) * std).astype(dtype),
+        "w_up": (jax.random.normal(k[2], (E, d_model, F)) * std).astype(dtype),
+        "w_down": (jax.random.normal(k[3], (E, F, d_model)) / math.sqrt(F)).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        params["shared"] = init_mlp(
+            k[4], d_model, cfg.num_shared_experts * F, act=act, dtype=dtype
+        )
+    return params
+
+
+def router_topk(logits, top_k: int, scoring: str = "softmax"):
+    """Return (weights (N,k), ids (N,k), probs (N,E)) — weights sum<=1 per token."""
+    if scoring == "softmax":
+        probs = jax.nn.softmax(logits, axis=-1)
+        weights, ids = jax.lax.top_k(probs, top_k)
+    elif scoring == "sigmoid":  # DeepSeek-v3: sigmoid scores, renormalized over top-k
+        scores = jax.nn.sigmoid(logits)
+        weights, ids = jax.lax.top_k(scores, top_k)
+        weights = weights / (jnp.sum(weights, axis=-1, keepdims=True) + 1e-20)
+        probs = scores / (jnp.sum(scores, axis=-1, keepdims=True) + 1e-20)
+    else:
+        raise ValueError(scoring)
+    return weights, ids, probs
+
+
+def load_balance_loss(probs, ids, num_experts: int) -> jnp.ndarray:
+    """Switch-Transformer aux loss: E · Σ_e f_e P_e (top-1 dispatch fraction)."""
+    top1 = ids[..., 0]
+    f = jnp.mean(jax.nn.one_hot(top1, num_experts, dtype=jnp.float32), axis=0)
+    p = jnp.mean(probs, axis=0)
+    return num_experts * jnp.sum(f * p)
+
+
+def moe_apply(
+    params,
+    x,  # (B, T, D) or (N, D)
+    cfg: MoEConfig,
+    act: str = "silu",
+    scoring: str = "softmax",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output matching x's shape, aux_loss scalar)."""
+    orig_shape = x.shape
+    D = orig_shape[-1]
+    xf = x.reshape(-1, D)
+    N = xf.shape[0]
+    E, K = cfg.num_experts, cfg.top_k
+    C = max(int(math.ceil(N * K / E * cfg.capacity_factor)), 1)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    weights, ids, probs = router_topk(logits, K, scoring)
+    aux = load_balance_loss(probs, ids, E) * cfg.router_aux_weight
+
+    # slot assignment: position of each (token, choice) within its expert
+    flat_ids = ids.reshape(-1)  # (N*K,) token-major
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)  # (N*K, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1  # running count per expert
+    flat_pos = jnp.take_along_axis(pos, flat_ids[:, None], axis=1)[:, 0]  # (N*K,)
+    keep = flat_pos < C
+    flat_pos_c = jnp.minimum(flat_pos, C - 1)
+
+    # dispatch: (E, C, D) slot buffer, dropped pairs contribute zeros
+    upd = jnp.repeat(xf, K, axis=0) * keep[:, None].astype(xf.dtype)
+    buf = jnp.zeros((E, C, D), dtype=xf.dtype)
+    buf = buf.at[flat_ids, flat_pos_c].add(upd, mode="drop")
+    buf = maybe_shard(buf, "expert", "batch", "none")
+
+    # expert FFN (SwiGLU)
+    gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"],
+                      preferred_element_type=jnp.float32)
+    up = jnp.einsum("ecd,edf->ecf", buf, params["w_up"],
+                    preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(gate) * up).astype(buf.dtype)
+    h = maybe_shard(h, "expert", "batch", "none")
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"],
+                         preferred_element_type=jnp.float32).astype(buf.dtype)
+
+    # combine: gather back each pair's expert output, weight, sum over k
+    gathered = out_buf[flat_ids, flat_pos_c]  # (N*K, D)
+    w = (weights.reshape(-1) * keep.astype(jnp.float32)).astype(xf.dtype)
+    y = (gathered * w[:, None]).reshape(N, K, D).sum(axis=1)
+
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], xf, act=act)
+
+    return y.reshape(orig_shape), aux

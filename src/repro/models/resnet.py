@@ -1,0 +1,169 @@
+"""ResNet family — the paper's client models (ResNet-18/34, He et al. 2016).
+
+Functional JAX implementation with GroupNorm instead of BatchNorm: BN's
+running statistics are ill-defined for non-IID decentralized clients (a
+well-known FL issue), and GN keeps every client step pure/stateless. This
+substitution is recorded in DESIGN.md §7.
+
+The MHD interface every client model implements:
+    apply(params, images) -> {"embedding": (B, E), "logits": (B, C),
+                              "aux_logits": (m, B, C) | None}
+with ``embedding`` the pre-logits feature ξ_i(x) used by embedding
+distillation (Eq. 2) and aux heads the MHD chain (Eq. 5).
+
+``tiny`` presets keep CPU experiments fast while preserving the
+ResNet-18-vs-34 capacity ordering studied in §4.5 of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str = "resnet18"
+    stage_sizes: Tuple[int, ...] = (2, 2, 2, 2)  # resnet18; resnet34=(3,4,6,3)
+    width: int = 64
+    num_classes: int = 1000
+    num_aux_heads: int = 0
+    groups: int = 8  # GroupNorm groups
+    stem_stride: int = 1  # 1 for small images, 2 (+pool) for 224px
+    source: str = "He et al., CVPR 2016 [14 in paper]"
+
+    @property
+    def embed_dim(self) -> int:
+        return self.width * 8
+
+
+def resnet18(num_classes: int, num_aux_heads: int = 0, width: int = 64):
+    return ResNetConfig(name="resnet18", stage_sizes=(2, 2, 2, 2), width=width,
+                        num_classes=num_classes, num_aux_heads=num_aux_heads)
+
+
+def resnet34(num_classes: int, num_aux_heads: int = 0, width: int = 64):
+    return ResNetConfig(name="resnet34", stage_sizes=(3, 4, 6, 3), width=width,
+                        num_classes=num_classes, num_aux_heads=num_aux_heads)
+
+
+def resnet_tiny(num_classes: int, num_aux_heads: int = 0, width: int = 8,
+                stages: Tuple[int, ...] = (1, 1, 1, 1), name: str = "resnet_tiny"):
+    """CPU-scale stand-in preserving the ResNet block structure."""
+    return ResNetConfig(name=name, stage_sizes=stages, width=width,
+                        num_classes=num_classes, num_aux_heads=num_aux_heads,
+                        groups=4)
+
+
+def resnet_tiny34(num_classes: int, num_aux_heads: int = 0, width: int = 8):
+    """Deeper tiny variant: plays ResNet-34's role against resnet_tiny."""
+    return resnet_tiny(num_classes, num_aux_heads, width,
+                       stages=(2, 2, 2, 2), name="resnet_tiny34")
+
+
+# ---------------------------------------------------------------------------
+
+def _conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    fan_in = kh * kw * cin
+    std = math.sqrt(2.0 / fan_in)
+    return (jax.random.normal(key, (kh, kw, cin, cout)) * std).astype(dtype)
+
+
+def _conv(x, w, stride: int = 1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _gn_init(c: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def _gn(params, x, groups: int, eps: float = 1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xg = x.reshape(B, H, W, g, C // g).astype(jnp.float32)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    y = xg.reshape(B, H, W, C)
+    return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+def _init_block(key, cin, cout, dtype):
+    k = jax.random.split(key, 3)
+    p = {
+        "conv1": _conv_init(k[0], 3, 3, cin, cout, dtype),
+        "gn1": _gn_init(cout, dtype),
+        "conv2": _conv_init(k[1], 3, 3, cout, cout, dtype),
+        "gn2": _gn_init(cout, dtype),
+    }
+    if cin != cout:
+        p["proj"] = _conv_init(k[2], 1, 1, cin, cout, dtype)
+        p["gn_proj"] = _gn_init(cout, dtype)
+    return p
+
+
+def _block(params, x, groups: int, stride: int):
+    y = _conv(x, params["conv1"], stride)
+    y = jax.nn.relu(_gn(params["gn1"], y, groups))
+    y = _conv(y, params["conv2"], 1)
+    y = _gn(params["gn2"], y, groups)
+    if "proj" in params:
+        x = _gn(params["gn_proj"], _conv(x, params["proj"], stride), groups)
+    elif stride != 1:
+        x = x[:, ::stride, ::stride, :]
+    return jax.nn.relu(x + y)
+
+
+def init_resnet(key, cfg: ResNetConfig, in_channels: int = 3,
+                dtype=jnp.float32):
+    keys = jax.random.split(key, 4 + sum(cfg.stage_sizes))
+    params: Dict[str, Any] = {
+        "stem": _conv_init(keys[0], 3, 3, in_channels, cfg.width, dtype),
+        "stem_gn": _gn_init(cfg.width, dtype),
+    }
+    ki = 1
+    cin = cfg.width
+    for si, n_blocks in enumerate(cfg.stage_sizes):
+        cout = cfg.width * (2 ** si)
+        for bi in range(n_blocks):
+            params[f"s{si}b{bi}"] = _init_block(keys[ki], cin, cout, dtype)
+            ki += 1
+            cin = cout
+    emb = cfg.embed_dim
+    params["head"] = (jax.random.normal(keys[ki], (emb, cfg.num_classes))
+                      / math.sqrt(emb)).astype(dtype)
+    params["head_b"] = jnp.zeros((cfg.num_classes,), dtype)
+    if cfg.num_aux_heads:
+        params["aux_heads"] = (
+            jax.random.normal(keys[ki + 1],
+                              (cfg.num_aux_heads, emb, cfg.num_classes))
+            / math.sqrt(emb)).astype(dtype)
+        params["aux_heads_b"] = jnp.zeros((cfg.num_aux_heads, cfg.num_classes),
+                                          dtype)
+    return params
+
+
+def apply_resnet(params, cfg: ResNetConfig, images) -> Dict[str, Any]:
+    x = _conv(images, params["stem"], cfg.stem_stride)
+    x = jax.nn.relu(_gn(params["stem_gn"], x, cfg.groups))
+    if cfg.stem_stride == 2:
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME")
+    for si, n_blocks in enumerate(cfg.stage_sizes):
+        for bi in range(n_blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            x = _block(params[f"s{si}b{bi}"], x, cfg.groups, stride)
+    embedding = jnp.mean(x, axis=(1, 2))  # (B, E) — ξ_i(x) for Eq. (2)
+    logits = embedding @ params["head"] + params["head_b"]
+    aux_logits = None
+    if cfg.num_aux_heads:
+        aux_logits = (jnp.einsum("be,mec->mbc", embedding, params["aux_heads"])
+                      + params["aux_heads_b"][:, None, :])
+    return {"embedding": embedding, "logits": logits, "aux_logits": aux_logits}

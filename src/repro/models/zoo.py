@@ -1,0 +1,80 @@
+"""Model zoo: a uniform bundle interface over every architecture family.
+
+A ``ModelBundle`` is what the trainer, server, dry-run and MHD runtime see —
+they never import family-specific code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.registry import Registry
+from repro.models import resnet as RN
+from repro.models import transformer as TF
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    name: str
+    config: Any  # ModelConfig | ResNetConfig
+    init: Callable[[Any], Any]  # key -> params
+    apply: Callable[..., Dict[str, Any]]  # (params, batch) -> outputs
+    loss: Callable[..., Any]  # (params, batch) -> (loss, metrics)
+    init_cache: Optional[Callable[..., Any]] = None  # (batch, cache_len) -> caches
+    decode_step: Optional[Callable[..., Any]] = None  # (params, token, caches)
+
+    @property
+    def is_lm(self) -> bool:
+        return isinstance(self.config, ModelConfig)
+
+
+def build_bundle(cfg: Union[ModelConfig, RN.ResNetConfig],
+                 dtype=jnp.float32) -> ModelBundle:
+    if isinstance(cfg, RN.ResNetConfig):
+        return _resnet_bundle(cfg, dtype)
+    return _lm_bundle(cfg, dtype)
+
+
+def _resnet_bundle(cfg: RN.ResNetConfig, dtype) -> ModelBundle:
+    def init(key):
+        return RN.init_resnet(key, cfg, dtype=dtype)
+
+    def apply(params, batch):
+        return RN.apply_resnet(params, cfg, batch["images"])
+
+    def loss(params, batch):
+        out = apply(params, batch)
+        ce = TF.softmax_xent(out["logits"].astype(jnp.float32), batch["labels"])
+        acc = jnp.mean(
+            (jnp.argmax(out["logits"], -1) == batch["labels"]).astype(jnp.float32))
+        return ce, {"ce": ce, "acc": acc}
+
+    return ModelBundle(name=cfg.name, config=cfg, init=init, apply=apply,
+                       loss=loss)
+
+
+def _lm_bundle(cfg: ModelConfig, dtype) -> ModelBundle:
+    cfg.validate()
+
+    def init(key):
+        return TF.init_lm(key, cfg, dtype=dtype)
+
+    def apply(params, batch):
+        return TF.apply_lm(params, cfg, batch)
+
+    def loss(params, batch):
+        return TF.lm_loss(params, cfg, batch)
+
+    def init_cache(batch, cache_len, cache_dtype=jnp.bfloat16):
+        return TF.init_lm_cache(cfg, batch, cache_len, cache_dtype)
+
+    def decode_step(params, token, caches):
+        return TF.decode_step(params, cfg, token, caches)
+
+    return ModelBundle(name=cfg.name, config=cfg, init=init, apply=apply,
+                       loss=loss, init_cache=init_cache,
+                       decode_step=decode_step)

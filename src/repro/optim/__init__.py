@@ -1,0 +1,21 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd_momentum,
+    adamw,
+    make_optimizer,
+)
+from repro.optim.schedules import (
+    cosine_decay_schedule,
+    constant_schedule,
+    warmup_cosine_schedule,
+)
+
+__all__ = [
+    "Optimizer",
+    "sgd_momentum",
+    "adamw",
+    "make_optimizer",
+    "cosine_decay_schedule",
+    "constant_schedule",
+    "warmup_cosine_schedule",
+]

@@ -1,0 +1,43 @@
+"""Learning-rate schedules.
+
+The paper (§4.1) trains with SGD + momentum 0.9, initial LR 0.1 and cosine
+decay; we implement that exactly, plus linear-warmup cosine for the LLM
+architectures.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def schedule(step):
+        return jnp.asarray(lr, dtype=jnp.float32)
+
+    return schedule
+
+
+def cosine_decay_schedule(init_lr: float, total_steps: int, final_scale: float = 0.0):
+    """Cosine from init_lr to final_scale * init_lr over total_steps."""
+
+    def schedule(step):
+        t = jnp.minimum(jnp.asarray(step, jnp.float32), total_steps) / max(total_steps, 1)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return init_lr * (final_scale + (1.0 - final_scale) * cos)
+
+    return schedule
+
+
+def warmup_cosine_schedule(
+    init_lr: float,
+    total_steps: int,
+    warmup_steps: int = 0,
+    final_scale: float = 0.0,
+):
+    cosine = cosine_decay_schedule(init_lr, max(total_steps - warmup_steps, 1), final_scale)
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = init_lr * step / jnp.maximum(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cosine(step - warmup_steps))
+
+    return schedule

@@ -1,0 +1,20 @@
+from repro.roofline.hlo_parse import collective_bytes_from_hlo, parse_shape_bytes
+from repro.roofline.analysis import (
+    V5E,
+    HardwareSpec,
+    RooflineReport,
+    roofline_from_artifacts,
+    model_flops,
+    active_params,
+)
+
+__all__ = [
+    "collective_bytes_from_hlo",
+    "parse_shape_bytes",
+    "V5E",
+    "HardwareSpec",
+    "RooflineReport",
+    "roofline_from_artifacts",
+    "model_flops",
+    "active_params",
+]

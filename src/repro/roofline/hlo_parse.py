@@ -1,0 +1,82 @@
+"""Extract per-device collective traffic from post-SPMD HLO text.
+
+``cost_analysis()`` does not expose collective bytes, so we parse
+``compiled.as_text()`` and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(including their -start async forms). Shapes in the per-device module are
+already shard-local, so the sums are bytes moved per device.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  bf16[256,1024]{1,0}   f32[]   (tuples handled by iterating matches)
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# result assignment:  %name = <shape-or-tuple> <opname>(operands...)
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"([a-z0-9-]+)\(([^)]*(?:\([^)]*\))?[^)]*)\)"
+)
+
+
+def parse_shape_bytes(text: str) -> int:
+    """Sum bytes of every typed shape literal appearing in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind operand bytes (per device). Keys: op kind + 'total'."""
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        result_part, opname, operands = m.groups()
+        kind = None
+        for c in _COLLECTIVES:
+            if opname == c or opname == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        nbytes = parse_shape_bytes(operands)
+        if nbytes == 0:
+            # operands printed without inline types; fall back to result shape
+            nbytes = parse_shape_bytes(result_part)
+        out[kind] += nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def count_ops(hlo_text: str, opnames=("fusion", "custom-call")) -> Dict[str, int]:
+    """Rough op histogram — used to spot remat-duplicated compute in §Perf."""
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if m:
+            counts[m.group(2)] += 1
+    return dict(counts)

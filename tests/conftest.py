@@ -1,0 +1,11 @@
+import os
+import sys
+
+# tests must see ONE cpu device (the dry-run owns the 512-device trick)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

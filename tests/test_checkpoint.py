@@ -1,0 +1,67 @@
+"""Checkpoint I/O + the paper's rolling pool semantics."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import CheckpointManager, load_pytree, save_pytree
+from repro.checkpoint.pool import CheckpointPool, PoolEntry
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (3, 4)),
+            "nested": {"b": jnp.arange(5, dtype=jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, t)
+    restored = load_pytree(path, jax.tree.map(jnp.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_structure_mismatch_raises(tmp_path):
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, _tree())
+    with pytest.raises(ValueError):
+        load_pytree(path, {"a": jnp.zeros((3, 4))})
+
+
+def test_manager_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "run"), max_to_keep=2)
+    for s in (10, 20, 30):
+        mgr.save(s, _tree(s))
+    assert mgr.steps() == [20, 30]
+    restored = mgr.restore(jax.tree.map(jnp.zeros_like, _tree()))
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(_tree(30)["a"]))
+
+
+def test_pool_capacity_and_replacement():
+    pool = CheckpointPool(capacity=3, update_every=10, seed=0)
+    for i in range(5):
+        pool.insert(PoolEntry(i, {"w": jnp.ones(1) * i}, step=i))
+    assert len(pool) == 3
+
+
+def test_pool_sampling_delta():
+    pool = CheckpointPool(capacity=4, update_every=10, seed=0)
+    for i in range(4):
+        pool.insert(PoolEntry(i, None, step=0))
+    got = pool.sample(2)
+    assert len(got) == 2
+    assert len({id(e) for e in got}) == 2  # distinct entries
+    assert len(pool.sample(10)) == 4  # capped at pool size
+
+
+def test_pool_update_cadence_and_staleness():
+    pool = CheckpointPool(capacity=2, update_every=200)
+    assert pool.should_update(0) and pool.should_update(400)
+    assert not pool.should_update(150)
+    pool.insert(PoolEntry(0, None, step=100))
+    assert pool.staleness(300) == 200.0

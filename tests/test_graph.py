@@ -1,0 +1,50 @@
+"""Communication topology tests (paper §4.4, Fig. 5)."""
+import numpy as np
+import pytest
+
+from repro.core.graph import (
+    chain_graph,
+    complete_graph,
+    cycle_graph,
+    graph_distance_matrix,
+    islands_graph,
+    isolated_graph,
+    validate_adjacency,
+)
+
+
+def test_complete():
+    adj = complete_graph(4)
+    validate_adjacency(adj)
+    assert all(len(n) == 3 for n in adj)
+
+
+def test_cycle_distances():
+    adj = cycle_graph(4)
+    d = graph_distance_matrix(adj)
+    # 0 -> 1 is 1 hop; 0 -> 3 is 3 hops (directed ring)
+    assert d[0, 1] == 1 and d[0, 2] == 2 and d[0, 3] == 3
+
+
+def test_islands_disconnected():
+    adj = islands_graph(4, 2)
+    d = graph_distance_matrix(adj)
+    assert np.isinf(d[0, 2]) and np.isinf(d[0, 3])
+    assert d[0, 1] == 1 and d[2, 3] == 1
+
+
+def test_chain_endpoint():
+    adj = chain_graph(3)
+    assert adj[2] == ()
+    d = graph_distance_matrix(adj)
+    assert d[0, 2] == 2 and np.isinf(d[2, 0])
+
+
+def test_isolated():
+    adj = isolated_graph(3)
+    assert all(n == () for n in adj)
+
+
+def test_validate_rejects_self_edge():
+    with pytest.raises(ValueError):
+        validate_adjacency([(0,), ()])

@@ -1,0 +1,165 @@
+"""Unit tests for the paper's core losses (Eqs. 2, 4, 5) and gating rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mhd import (
+    MHDConfig,
+    embedding_distillation_loss,
+    multi_head_distillation_loss,
+    mhd_total_loss,
+    normalized,
+)
+
+
+def _outs(B=6, C=5, m=2, seed=0, conf_boost=None):
+    """Random client outputs; conf_boost makes one candidate very confident."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    out = {
+        "embedding": jax.random.normal(ks[0], (B, 8)),
+        "logits": jax.random.normal(ks[1], (B, C)),
+        "aux_logits": jax.random.normal(ks[2], (m, B, C)),
+    }
+    return out
+
+
+def _teachers(delta=2, B=6, C=5, m=2, seed=10):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return {
+        "embedding": jax.random.normal(ks[0], (delta, B, 8)),
+        "logits": jax.random.normal(ks[1], (delta, B, C)),
+        "aux_logits": jax.random.normal(ks[2], (delta, m, B, C)),
+    }
+
+
+def test_normalized_unit_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) * 37
+    n = np.linalg.norm(np.asarray(normalized(x)), axis=-1)
+    np.testing.assert_allclose(n, 1.0, rtol=1e-5)
+
+
+def test_embedding_loss_zero_for_identical():
+    e = jax.random.normal(jax.random.PRNGKey(0), (4, 8))
+    loss = embedding_distillation_loss(e, jnp.stack([e * 3.0]), nu_emb=1.0)
+    # scaled teacher has the same direction -> zero distance after norm
+    assert float(loss) < 1e-8
+
+
+def test_embedding_loss_positive_and_scales_with_nu():
+    e1 = jax.random.normal(jax.random.PRNGKey(0), (4, 8))
+    e2 = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 8))
+    l1 = float(embedding_distillation_loss(e1, e2, 1.0))
+    l3 = float(embedding_distillation_loss(e1, e2, 3.0))
+    assert l1 > 0
+    np.testing.assert_allclose(l3, 3 * l1, rtol=1e-6)
+
+
+def test_most_confident_candidate_wins():
+    """Eq. 4: if a teacher is overwhelmingly confident, the distillation
+    target equals (nearly) its one-hot prediction."""
+    B, C, m = 4, 5, 1
+    student = _outs(B, C, m)
+    teachers = _teachers(1, B, C, m)
+    # make teacher main head extremely confident on class 3
+    teachers["logits"] = jnp.zeros((1, B, C)).at[..., 3].set(50.0)
+    cfg = MHDConfig(nu_aux=1.0, num_aux_heads=m, delta=1)
+    loss, metrics = multi_head_distillation_loss(student, teachers, cfg)
+    # loss should equal CE(student aux1, one-hot class 3)
+    logp = jax.nn.log_softmax(student["aux_logits"][0], -1)
+    expected = float(jnp.mean(-logp[:, 3]))
+    np.testing.assert_allclose(float(loss), expected, rtol=1e-3)
+    assert metrics["aux1_teacher_frac"] == 1.0
+
+
+def test_chain_structure_levels():
+    """Eq. 5: aux_k must distill from level k-1 — verify by making the
+    teacher's aux1 confident; only the student's aux2 should chase it."""
+    B, C, m = 4, 6, 2
+    student = _outs(B, C, m)
+    teachers = _teachers(1, B, C, m)
+    teachers["aux_logits"] = teachers["aux_logits"].at[:, 0].set(
+        jnp.zeros((1, B, C)).at[..., 2].set(60.0))
+    # teacher main low-confidence everywhere; student heads low-confidence
+    cfg = MHDConfig(nu_aux=1.0, num_aux_heads=m, delta=1)
+    _, metrics = multi_head_distillation_loss(student, teachers, cfg)
+    # for head 2 the teacher aux1 (level-1 source) is the confident one
+    assert metrics["aux2_teacher_frac"] == 1.0
+
+
+def test_self_target_skips_samples():
+    """SF (App. B.1): when the distilled head itself is the most confident
+    candidate, the sample is skipped."""
+    B, C, m = 4, 5, 1
+    student = _outs(B, C, m)
+    student["aux_logits"] = jnp.zeros((m, B, C)).at[..., 1].set(80.0)
+    teachers = _teachers(1, B, C, m)
+    cfg = MHDConfig(nu_aux=1.0, num_aux_heads=m, delta=1, use_self=True)
+    loss, metrics = multi_head_distillation_loss(student, teachers, cfg)
+    assert metrics["aux1_keep_frac"] == 0.0
+    assert float(loss) == 0.0
+
+
+def test_random_confidence_needs_rng_and_differs():
+    student = _outs()
+    teachers = _teachers()
+    cfg = MHDConfig(num_aux_heads=2, confidence="random")
+    with pytest.raises(AssertionError):
+        multi_head_distillation_loss(student, teachers, cfg, rng=None)
+    l1, _ = multi_head_distillation_loss(student, teachers, cfg,
+                                         rng=jax.random.PRNGKey(0))
+    l2, _ = multi_head_distillation_loss(student, teachers, cfg,
+                                         rng=jax.random.PRNGKey(1))
+    assert np.isfinite(float(l1)) and np.isfinite(float(l2))
+
+
+def test_total_loss_composition():
+    B, C, m = 6, 5, 2
+    priv = _outs(B, C, m, seed=1)
+    pub = _outs(B, C, m, seed=2)
+    teachers = _teachers(2, B, C, m)
+    labels = jnp.zeros((B,), jnp.int32)
+    cfg = MHDConfig(nu_emb=1.0, nu_aux=3.0, num_aux_heads=m, delta=2)
+    loss, metrics = mhd_total_loss(priv, labels, pub, teachers, cfg)
+    recomposed = metrics["ce"] + metrics["emb_dist"] + metrics["aux_dist_total"]
+    np.testing.assert_allclose(float(loss), float(recomposed), rtol=1e-6)
+
+
+def test_gradients_do_not_flow_to_teachers():
+    """Teachers are stop-gradiented: d loss / d teacher == 0."""
+    B, C, m = 4, 5, 1
+    student = _outs(B, C, m)
+    teachers = _teachers(1, B, C, m)
+    cfg = MHDConfig(nu_emb=1.0, nu_aux=1.0, num_aux_heads=m)
+
+    def f(tl):
+        t = dict(teachers)
+        t["logits"] = tl
+        loss, _ = multi_head_distillation_loss(student, t, cfg)
+        return loss
+
+    g = jax.grad(f)(teachers["logits"])
+    assert float(jnp.sum(jnp.abs(g))) == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 4),
+    delta=st.integers(1, 3),
+    sl=st.booleans(),
+    sf=st.booleans(),
+)
+def test_mhd_loss_invariants(m, delta, sl, sf):
+    """Property: loss finite & >= 0; keep fractions in [0,1]; one metric
+    triple per head."""
+    B, C = 5, 7
+    student = _outs(B, C, m, seed=3)
+    teachers = _teachers(delta, B, C, m, seed=4)
+    cfg = MHDConfig(nu_aux=2.0, num_aux_heads=m, delta=delta,
+                    use_same_level=sl, use_self=sf)
+    loss, metrics = multi_head_distillation_loss(student, teachers, cfg)
+    assert np.isfinite(float(loss)) and float(loss) >= 0.0
+    for k in range(1, m + 1):
+        assert 0.0 <= float(metrics[f"aux{k}_keep_frac"]) <= 1.0
+        assert 0.0 <= float(metrics[f"aux{k}_teacher_frac"]) <= 1.0

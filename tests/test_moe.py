@@ -1,0 +1,105 @@
+"""MoE dispatch properties (unit + hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.config import MoEConfig
+from repro.models.moe import init_moe, moe_apply, load_balance_loss, router_topk
+
+
+def _setup(E=4, K=2, D=16, F=32, cf=2.0, scoring="softmax", seed=0):
+    cfg = MoEConfig(num_experts=E, top_k=K, d_ff_expert=F,
+                    capacity_factor=cf)
+    params = init_moe(jax.random.PRNGKey(seed), D, cfg)
+    return cfg, params
+
+
+def test_moe_output_shape_and_finite():
+    cfg, params = _setup()
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+    y, aux = jax.jit(lambda p, x: moe_apply(p, x, cfg))(params, x)
+    assert y.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(y)))
+    assert np.isfinite(float(aux))
+
+
+def test_moe_matches_dense_computation_at_full_capacity():
+    """With capacity_factor high enough that nothing drops, the scatter
+    dispatch must equal the direct per-token expert evaluation."""
+    cfg, params = _setup(E=4, K=2, cf=8.0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, 16))
+    y, _ = moe_apply(params, x, cfg)
+
+    xf = x.reshape(-1, 16)
+    logits = xf @ params["router"]
+    w, ids, _ = router_topk(logits, 2)
+    expected = np.zeros_like(np.asarray(xf))
+    for n in range(xf.shape[0]):
+        for j in range(2):
+            e = int(ids[n, j])
+            h = jax.nn.silu(xf[n] @ params["w_gate"][e]) * (xf[n] @ params["w_up"][e])
+            expected[n] += float(w[n, j]) * np.asarray(h @ params["w_down"][e])
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, 16)), expected,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_capacity_drops_tokens():
+    """With tiny capacity, overflowing pairs contribute nothing (not NaNs)."""
+    cfg, params = _setup(E=2, K=1, cf=0.25)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16))
+    y, _ = moe_apply(params, x, cfg)
+    assert np.all(np.isfinite(np.asarray(y)))
+    # some rows must be exactly zero (dropped)
+    norms = np.linalg.norm(np.asarray(y)[0], axis=-1)
+    assert (norms < 1e-6).any()
+
+
+def test_router_sigmoid_weights_normalized():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (10, 8)) * 2
+    w, ids, probs = router_topk(logits, 3, scoring="sigmoid")
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_load_balance_loss_uniform_is_one():
+    """Perfectly uniform routing gives loss = 1 (E · Σ (1/E)·(1/E) · E)."""
+    E = 8
+    N = 800
+    probs = jnp.full((N, E), 1.0 / E)
+    ids = jnp.stack([jnp.arange(N) % E, (jnp.arange(N) + 1) % E], -1)
+    lb = load_balance_loss(probs, ids, E)
+    np.testing.assert_allclose(float(lb), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    E=st.sampled_from([2, 4, 8]),
+    K=st.integers(1, 2),
+    T=st.integers(2, 24),
+    seed=st.integers(0, 5),
+)
+def test_moe_dispatch_invariants(E, K, T, seed):
+    """Property: outputs finite; aux in [0, weight·E]; shape preserved;
+    dropping monotone in capacity (fewer drops with more capacity)."""
+    cfg = MoEConfig(num_experts=E, top_k=min(K, E), d_ff_expert=8,
+                    capacity_factor=1.0, router_aux_weight=0.01)
+    params = init_moe(jax.random.PRNGKey(seed), 8, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, T, 8))
+    y, aux = moe_apply(params, x, cfg)
+    assert y.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(y)))
+    assert 0.0 <= float(aux) <= 0.01 * E * cfg.top_k * 4
+
+
+def test_shared_expert_added():
+    cfg = MoEConfig(num_experts=2, top_k=1, d_ff_expert=8,
+                    num_shared_experts=1, capacity_factor=4.0)
+    params = init_moe(jax.random.PRNGKey(0), 8, cfg)
+    assert "shared" in params
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 8))
+    y_with, _ = moe_apply(params, x, cfg)
+    p2 = dict(params)
+    p2["shared"] = jax.tree.map(jnp.zeros_like, params["shared"])
+    y_zero_shared, _ = moe_apply(p2, x, cfg)
+    assert float(jnp.sum(jnp.abs(y_with - y_zero_shared))) > 1e-4

@@ -1,0 +1,98 @@
+"""Paper §3.3 data-partition protocol: unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.partition import (
+    PartitionConfig,
+    assign_primary_labels,
+    partition_dataset,
+    shared_test_split,
+)
+
+
+def _labels(n_labels=10, per=30, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, n_labels, size=n_labels * per)
+
+
+def test_public_private_disjoint_and_complete():
+    labels = _labels()
+    cfg = PartitionConfig(num_clients=4, num_labels=10, labels_per_client=3,
+                          gamma_pub=0.2, seed=0)
+    part = partition_dataset(labels, cfg)
+    all_idx = np.concatenate([part.public_indices] + part.client_indices)
+    assert len(all_idx) == len(labels)
+    assert len(np.unique(all_idx)) == len(labels)  # no repetition (paper)
+    assert len(part.public_indices) == round(0.2 * len(labels))
+
+
+def test_skew_zero_is_uniform():
+    labels = _labels(per=200)
+    cfg = PartitionConfig(num_clients=4, num_labels=10, labels_per_client=3,
+                          skew=0.0, gamma_pub=0.0, seed=1)
+    part = partition_dataset(labels, cfg)
+    sizes = [len(ci) for ci in part.client_indices]
+    assert max(sizes) - min(sizes) < 0.25 * np.mean(sizes)
+
+
+def test_high_skew_concentrates_on_primary():
+    labels = _labels(per=100)
+    cfg = PartitionConfig(num_clients=4, num_labels=10, labels_per_client=3,
+                          skew=1000.0, gamma_pub=0.0, seed=2)
+    part = partition_dataset(labels, cfg)
+    for i, idx in enumerate(part.client_indices):
+        mask = part.primary_mask(i)
+        labs = labels[idx]
+        # labels that are primary for nobody are spread uniformly, so only
+        # check: of this client's samples whose label has ANY primary owner,
+        # the overwhelming majority are primary for this client.
+        any_primary = np.zeros(10, dtype=bool)
+        for j in range(4):
+            any_primary |= part.primary_mask(j)
+        relevant = any_primary[labs]
+        if relevant.sum() == 0:
+            continue
+        frac = mask[labs[relevant]].mean()
+        assert frac > 0.9, f"client {i}: {frac}"
+
+
+def test_even_assignment_multiplicity():
+    cfg = PartitionConfig(num_clients=6, num_labels=12, labels_per_client=4,
+                          assignment="even", even_multiplicity=2, seed=0)
+    rng = np.random.default_rng(0)
+    primary = assign_primary_labels(cfg, rng)
+    counts = np.zeros(12, dtype=int)
+    for labs in primary:
+        counts[labs] += 1
+    assert (counts == 2).all()
+
+
+def test_shared_test_split_uniform():
+    labels = _labels(n_labels=5, per=50)
+    idx = shared_test_split(labels, per_label=10, num_labels=5)
+    hist = np.bincount(labels[idx], minlength=5)
+    assert (hist == 10).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    K=st.integers(2, 8),
+    L=st.integers(4, 20),
+    skew=st.sampled_from([0.0, 1.0, 100.0]),
+    gamma=st.sampled_from([0.0, 0.1, 0.3]),
+    seed=st.integers(0, 100),
+)
+def test_partition_invariants(K, L, skew, gamma, seed):
+    """Property: disjoint cover, public fraction, primary sets within range."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, L, size=L * 20)
+    cfg = PartitionConfig(num_clients=K, num_labels=L,
+                          labels_per_client=max(L // K, 1), skew=skew,
+                          gamma_pub=gamma, seed=seed)
+    part = partition_dataset(labels, cfg)
+    all_idx = np.concatenate([part.public_indices] + part.client_indices)
+    assert len(np.unique(all_idx)) == len(labels) == len(all_idx)
+    for labs in part.primary_labels:
+        assert len(labs) <= max(L // K, 1)
+        assert (labs >= 0).all() and (labs < L).all()

@@ -1,0 +1,101 @@
+"""Loop-aware HLO cost analysis vs closed-form expectations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (
+    V5E,
+    active_params,
+    model_flops,
+    roofline_from_artifacts,
+)
+from repro.roofline.hlo_cost import analyze, parse_computations
+from repro.roofline.hlo_parse import collective_bytes_from_hlo, parse_shape_bytes
+
+
+def _compile(f, *shapes):
+    return jax.jit(f).lower(*shapes).compile()
+
+
+def test_dot_flops_exact():
+    f = lambda a, b: a @ b
+    c = _compile(f, jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                 jax.ShapeDtypeStruct((128, 32), jnp.float32))
+    cost = analyze(c.as_text())
+    assert cost.flops == 2 * 64 * 128 * 32
+
+
+def test_scan_trip_count_multiplied():
+    def f(w, x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    s = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    c = _compile(f, s, s)
+    cost = analyze(c.as_text())
+    expected = 2 * 64 * 64 * 64 * 10
+    assert abs(cost.flops - expected) / expected < 0.01
+    # XLA's own analysis counts the body once — ours must be ~10x larger
+    assert cost.flops > 5 * c.cost_analysis()["flops"]
+
+
+def test_nested_scan():
+    def f(w, x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        out, _ = jax.lax.scan(outer, x, None, length=4)
+        return out
+
+    s = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    cost = analyze(_compile(f, s, s).as_text())
+    expected = 2 * 32 ** 3 * 12
+    assert abs(cost.flops - expected) / expected < 0.01
+
+
+def test_bytes_reasonable_for_elementwise():
+    f = lambda x: x * 2.0 + 1.0
+    s = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    cost = analyze(_compile(f, s).as_text())
+    # one fused read + one write = 8 MB; allow copies
+    assert 8e6 <= cost.bytes <= 4e7
+
+
+def test_parse_shape_bytes():
+    assert parse_shape_bytes("bf16[4,8]") == 64
+    assert parse_shape_bytes("f32[10] s32[2,2]") == 56
+    assert parse_shape_bytes("f32[]") == 4
+
+
+def test_model_flops_moe_active():
+    from repro.configs import get_config
+    cfg = get_config("deepseek-v3-671b")
+    total = 100
+    # synthetic: just verify the MoE discount direction on the real config
+    from repro.common.pytree import tree_size
+    from repro.models.zoo import build_bundle
+    shapes = jax.eval_shape(build_bundle(cfg).init, jax.random.PRNGKey(0))
+    n = tree_size(shapes)
+    act = active_params(cfg, n)
+    assert act < 0.2 * n  # 37B active vs 671B total ballpark
+    assert act > 0.02 * n
+
+
+def test_roofline_report_dominant():
+    from repro.configs import get_config
+    cfg = get_config("qwen2.5-32b")
+    rep = roofline_from_artifacts(
+        "qwen2.5-32b", "train_4k", "16x16", 256,
+        cost={"flops": 1e15, "bytes accessed": 1e12},
+        collectives={"total": 1e11},
+        memory={"argument_size_in_bytes": 1e9, "temp_size_in_bytes": 1e9,
+                "output_size_in_bytes": 0},
+        cfg=cfg, total_params=32e9, tokens=256 * 4096, mode="train")
+    assert rep.dominant == "compute"
+    assert rep.fits_hbm
+    assert rep.compute_s == pytest.approx(1e15 / V5E.peak_flops)

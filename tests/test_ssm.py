@@ -1,0 +1,71 @@
+"""Mamba2 SSD: chunked vs sequential reference, decode-step consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import MambaConfig
+from repro.models.ssm import (
+    init_mamba2,
+    init_mamba2_cache,
+    mamba2_apply,
+    mamba2_decode,
+    ssd_chunked,
+    ssd_reference,
+)
+
+
+def _rand_ssd(Bt=2, T=64, H=4, P=16, N=8, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (Bt, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (Bt, T, N))
+    C = jax.random.normal(ks[4], (Bt, T, N))
+    D = jnp.ones((H,))
+    return x, dt, A, B, C, D
+
+
+def test_chunked_matches_sequential():
+    args = _rand_ssd()
+    y_ref, h_ref = ssd_reference(*args)
+    for chunk in (8, 16, 32, 64):
+        y, h = ssd_chunked(*args, chunk_size=chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_chunked_gradients_finite():
+    args = _rand_ssd(T=32)
+
+    def loss(x):
+        y, _ = ssd_chunked(x, *args[1:], chunk_size=8)
+        return jnp.sum(jnp.square(y))
+
+    g = jax.grad(loss)(args[0])
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_mamba2_decode_matches_full_forward():
+    cfg = MambaConfig(d_state=8, d_conv=4, expand=2, head_dim=8, chunk_size=8)
+    D_model = 16
+    params = init_mamba2(jax.random.PRNGKey(0), D_model, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, D_model))
+    full = mamba2_apply(params, x, cfg, use_chunked=True)
+    cache = init_mamba2_cache(2, D_model, cfg)
+    outs = []
+    for t in range(16):
+        y, cache = mamba2_decode(params, x[:, t:t + 1], cache, cfg)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_state_decay_bounded():
+    """With A<0 and bounded inputs the SSD state stays bounded (stability)."""
+    x, dt, A, B, C, D = _rand_ssd(T=128)
+    _, h = ssd_reference(x, dt, A, B, C, D)
+    assert np.all(np.isfinite(np.asarray(h)))
+    assert np.abs(np.asarray(h)).max() < 1e4

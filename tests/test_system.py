@@ -1,0 +1,141 @@
+"""End-to-end behaviour tests for the paper's system (integration).
+
+The heavier qualitative reproductions (MHD vs Separate vs FedAvg orderings,
+topology effects, head-count sweeps) live in benchmarks/; here we verify the
+decentralized runtime *mechanically works end-to-end* and that distillation
+measurably transfers knowledge in a small controlled run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    MHDConfig,
+    DecentralizedTrainer,
+    RunConfig,
+    complete_graph,
+    cycle_graph,
+)
+from repro.data import PartitionConfig, make_synthetic_vision, partition_dataset
+from repro.models.resnet import resnet_tiny
+from repro.models.zoo import build_bundle
+from repro.optim.optimizers import OptimizerConfig, make_optimizer
+
+
+def _setup(K=2, labels=8, skew=1000.0, steps=40, aux_heads=2, seed=0,
+           noise=0.5):
+    ds = make_synthetic_vision(num_labels=labels, samples_per_label=40,
+                               image_size=8, noise=noise, seed=seed)
+    test = make_synthetic_vision(num_labels=labels, samples_per_label=10,
+                                 image_size=8, noise=noise, seed=seed + 99,
+                                 prototype_seed=seed)
+    pcfg = PartitionConfig(num_clients=K, num_labels=labels,
+                           labels_per_client=labels // K, skew=skew,
+                           gamma_pub=0.15, seed=seed)
+    part = partition_dataset(ds.labels, pcfg)
+    arrays = {"images": ds.images, "labels": ds.labels}
+    bundles = [build_bundle(resnet_tiny(labels, num_aux_heads=aux_heads))
+               for _ in range(K)]
+    # calibrated regime (benchmarks/common.py): nu_aux=1 + clipping — the
+    # paper's nu_aux=3 is tuned for 1000-way CE and destabilizes at 8-way
+    opt = make_optimizer(OptimizerConfig(init_lr=0.05, total_steps=steps,
+                                         grad_clip_norm=1.0))
+    mhd = MHDConfig(nu_emb=1.0, nu_aux=1.0, num_aux_heads=aux_heads,
+                    delta=1, pool_size=K, pool_update_every=10)
+    trainer = DecentralizedTrainer(
+        bundles, opt, mhd,
+        RunConfig(steps=steps, batch_size=16, public_batch_size=16,
+                  eval_every=0, seed=seed),
+        arrays, part.client_indices, part.public_indices,
+        complete_graph(K), labels)
+    return trainer, test, steps
+
+
+def test_mhd_end_to_end_losses_decrease():
+    trainer, test, steps = _setup()
+    first = trainer.step(0)
+    for t in range(1, steps):
+        last = trainer.step(t)
+    f = np.mean([v for k, v in first.items() if k.endswith("/ce")])
+    l = np.mean([v for k, v in last.items() if k.endswith("/ce")])
+    assert l < f, f"private CE did not decrease: {f} -> {l}"
+    ev = trainer.evaluate({"images": test.images, "labels": test.labels})
+    # private accuracy well above chance on an 8-class problem
+    assert ev["mean/main/beta_priv"] > 0.3
+
+
+def test_aux_head_learns_other_clients_classes():
+    """The point of the paper: with fully skewed data the MAIN head knows
+    only private classes, while the AUX head picks up the rest via
+    distillation — so aux β_sh must beat main β_sh."""
+    trainer, test, steps = _setup(K=2, labels=8, skew=10_000.0, steps=80,
+                                  noise=0.3)
+    for t in range(steps):
+        trainer.step(t)
+    ev = trainer.evaluate({"images": test.images, "labels": test.labels})
+    assert ev["mean/aux2/beta_sh"] > ev["mean/main/beta_sh"] - 0.02, ev
+
+
+def test_pool_staleness_respected():
+    trainer, _, _ = _setup(steps=5)
+    c = trainer.clients[0]
+    assert len(c.pool) > 0
+    for t in range(5):
+        trainer.step(t)
+    # entries carry the step at which they were inserted
+    assert all(e.step <= 5 for e in c.pool.entries)
+
+
+def test_heterogeneous_architectures_interop():
+    """ResNet-18-like and ResNet-34-like clients distilling to each other
+    (paper §4.5) — mechanically: mixed-arch pools must not retrace/crash."""
+    from repro.models.resnet import resnet_tiny34
+
+    labels = 6
+    ds = make_synthetic_vision(num_labels=labels, samples_per_label=30,
+                               image_size=8, noise=0.5, seed=0)
+    pcfg = PartitionConfig(num_clients=2, num_labels=labels,
+                           labels_per_client=3, skew=100.0, gamma_pub=0.2,
+                           seed=0)
+    part = partition_dataset(ds.labels, pcfg)
+    arrays = {"images": ds.images, "labels": ds.labels}
+    bundles = [build_bundle(resnet_tiny(labels, num_aux_heads=2)),
+               build_bundle(resnet_tiny34(labels, num_aux_heads=2))]
+    opt = make_optimizer(OptimizerConfig(init_lr=0.05, total_steps=10))
+    mhd = MHDConfig(num_aux_heads=2, pool_size=2, pool_update_every=5)
+    trainer = DecentralizedTrainer(
+        bundles, opt, mhd,
+        RunConfig(steps=10, batch_size=8, public_batch_size=8, seed=0),
+        arrays, part.client_indices, part.public_indices,
+        complete_graph(2), labels)
+    for t in range(6):
+        m = trainer.step(t)
+    assert np.isfinite(m["c0/loss"]) and np.isfinite(m["c1/loss"])
+
+
+def test_lm_clients_mhd_loss():
+    """MHD applied to LM clients (reduced assigned archs) via the adapter."""
+    from repro.configs import get_reduced
+    from repro.core.lm_adapter import lm_mhd_loss, lm_mhd_outputs
+
+    cfg = get_reduced("minitron-4b")
+    bundle = build_bundle(cfg)
+    p_student = bundle.init(jax.random.PRNGKey(0))
+    p_teacher = bundle.init(jax.random.PRNGKey(1))
+    B, T = 2, 16
+    priv = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (B, T), 0,
+                                         cfg.vocab_size)}
+    pub = {"tokens": jax.random.randint(jax.random.PRNGKey(3), (B, T), 0,
+                                        cfg.vocab_size)}
+    t_out = lm_mhd_outputs(bundle, p_teacher, pub)
+    teachers = jax.tree.map(lambda x: x[None],
+                            {"embedding": t_out["embedding"],
+                             "logits": t_out["logits"],
+                             "aux_logits": t_out["aux_logits"]})
+    mhd = MHDConfig(nu_emb=1.0, nu_aux=3.0, num_aux_heads=cfg.num_aux_heads)
+    loss, metrics = lm_mhd_loss(bundle, p_student, priv, pub, teachers, mhd)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: lm_mhd_loss(bundle, p, priv, pub, teachers,
+                                       mhd)[0])(p_student)
+    assert all(np.all(np.isfinite(np.asarray(x, np.float32)))
+               for x in jax.tree.leaves(g))
