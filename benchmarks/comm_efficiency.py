@@ -7,6 +7,10 @@ we compute the same accounting for the paper's models AND for the assigned
 LLM architectures (where the full-vocab exchange would be large — motivating
 the top-k wire format measured in §Perf).
 
+The accounting is the shared `repro.comm.wire` byte model — the same code
+the runtime's `PredictionBus` meters — and a real `TopKCodec` encode is
+measured against it (formula vs. actual serialized payload).
+
 Also microbenchmarks the fused dist_ce kernel path (interpret) vs the jnp
 reference on a 262k-vocab batch — the MHD hot spot.
 """
@@ -19,14 +23,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row
+from repro.comm.wire import TopKCodec, topk_frame_nbytes
 from repro.configs import get_config
 from repro.models.zoo import build_bundle
 from repro.common.pytree import tree_size
 
 
-def _mhd_bytes_per_step(batch: int, topk: int, delta: int) -> int:
-    # (value fp16 + index int32) per retained logit + 8-byte sample hash
-    return delta * batch * (topk * (2 + 4) + 8)
+def _mhd_bytes_per_step(batch: int, topk: int, delta: int,
+                        num_heads: int = 1, emb_dim: int = 0) -> int:
+    """Bytes of Δ teachers' top-k predictions for one public batch.
+
+    Defaults reproduce the paper's §3.2 accounting: (f16 value + i32
+    index) per retained logit + 8-byte sample hash, main head only, no
+    embedding. Pass num_heads/emb_dim for the full MHD wire format."""
+    return delta * topk_frame_nbytes(batch, topk, num_heads=num_heads,
+                                     emb_dim=emb_dim)
 
 
 def main(scale=None, full: bool = False) -> list:
@@ -53,6 +64,25 @@ def main(scale=None, full: bool = False) -> list:
                         f"fedavg_round={fedavg:.3e};"
                         f"full_logits={full_ex:.3e};topk32={topk_ex:.3e};"
                         f"full_over_topk={full_ex/topk_ex:.0f}x"))
+
+    # --- measured wire format: an actual TopKCodec encode vs the formula
+    B, C, k, m = 256, 4096, 32, 4
+    key = jax.random.PRNGKey(0)
+    outs = {
+        "embedding": np.asarray(jax.random.normal(key, (1, B, 64))),
+        "logits": np.asarray(jax.random.normal(key, (1, B, C))),
+        "aux_logits": np.asarray(jax.random.normal(key, (1, m, B, C))),
+    }
+    codec = TopKCodec(k, val_dtype="float16", emb_encoding="int8")
+    ids = np.arange(B, dtype=np.uint64)[None]
+    t0 = time.time()
+    payload = codec.encode(0, 0, 0, ids, outs)
+    enc_us = (time.time() - t0) * 1e6
+    formula = topk_frame_nbytes(B, k, num_heads=m + 1, emb_dim=64,
+                                val_bytes=2, idx_bytes=2, lse_bytes=4)
+    rows.append(row("comm/topk_codec_measured", enc_us,
+                    f"payload={len(payload)};formula={formula};"
+                    f"overhead={len(payload)/formula:.3f}x"))
 
     # --- dist_ce hot-spot microbench (jnp reference path, CPU wall time)
     from repro.kernels.ref import dist_ce_ref

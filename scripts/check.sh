@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 check, deterministic and offline: CPU-only jax, no network, no TPU.
+#
+#   scripts/check.sh           # fast tier (skips tests marked slow)
+#   scripts/check.sh --full    # everything, including slow tier
+#
+# Extra args after the mode flag are passed straight to pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+MARK=(-m "not slow")
+if [[ "${1:-}" == "--full" ]]; then
+    MARK=()
+    shift
+fi
+
+exec python -m pytest -x -q "${MARK[@]}" "$@"

@@ -1,0 +1,103 @@
+"""repro.comm — the prediction-exchange wire subsystem (paper §3.2).
+
+The paper's clients learn from each other "without having to share their
+data, weights or weight updates": only a few top-confidence predictions
+per public sample cross the wire. This package is that wire, as an actual
+subsystem instead of a simulation shortcut:
+
+  wire.py       codecs — dense f32/f16, top-k packed (vals, idx, lse)
+                reusing the `kernels/topk_wire` packing, int8-quantized
+                embeddings; byte-exact serialize/decode, byte accounting.
+  transport.py  how bytes move — in-process loopback, and a simulated
+                network with per-edge latency (in steps), bandwidth caps
+                and drop probability.
+  bus.py        per-edge mailboxes driven by the graph G_t from
+                `core/graph.py`; staleness stamps; `PredictionPool`, the
+                prediction twin of the param `CheckpointPool`.
+  metering.py   bytes-per-edge-per-step ledger (measured §3.2 accounting).
+
+`core/runtime.py` consumes all of it via ``exchange="prediction_topk"``
+(or ``"prediction_dense"``): every S_P steps a client *publishes* packed
+predictions on its upcoming public batches, students decode mail instead
+of re-running neighbor forward passes, and params never leave a client.
+`core/mhd_distributed.py` and `benchmarks/comm_efficiency.py` share the
+codecs; `examples/comm_gossip.py` runs a 4-client ring over a lossy,
+bandwidth-capped link.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.comm.bus import (
+    Mail,
+    PredictionBus,
+    PredictionPool,
+    PredictionWindow,
+)
+from repro.comm.metering import CommMeter
+from repro.comm.transport import (
+    Delivery,
+    EdgeSpec,
+    LoopbackTransport,
+    SimulatedNetwork,
+    Transport,
+)
+from repro.comm.wire import (
+    Codec,
+    DenseCodec,
+    PredictionMessage,
+    TopKCodec,
+    dense_frame_nbytes,
+    densify_topk,
+    topk_frame_nbytes,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    """Knobs of the prediction exchange (runtime ``exchange != "params"``).
+
+    horizon: how many upcoming public batches one publish covers (W).
+      0 = auto: S_P (`pool_update_every`) — fresh predictions arrive just
+      as the previous window runs out. Set ≥ pool_size·S_P to emulate the
+      param pool's full staleness range (the equivalence-test setting).
+    """
+    topk: int = 32
+    val_dtype: str = "float16"  # "float16" | "float32"
+    emb_encoding: str = "int8"  # "int8" | "float32" | "none"
+    tail: str = "uniform"  # truncated-mass handling, see wire.densify_topk
+    horizon: int = 0
+
+
+def make_codec(exchange: str, cfg: CommConfig) -> Codec:
+    if exchange == "prediction_topk":
+        return TopKCodec(cfg.topk, val_dtype=cfg.val_dtype,
+                         emb_encoding=cfg.emb_encoding, tail=cfg.tail)
+    if exchange == "prediction_dense":
+        return DenseCodec(logit_dtype="float32",
+                          emb_encoding=cfg.emb_encoding)
+    raise ValueError(f"unknown prediction exchange mode: {exchange!r}")
+
+
+__all__ = [
+    "Codec",
+    "CommConfig",
+    "CommMeter",
+    "Delivery",
+    "DenseCodec",
+    "EdgeSpec",
+    "LoopbackTransport",
+    "Mail",
+    "PredictionBus",
+    "PredictionMessage",
+    "PredictionPool",
+    "PredictionWindow",
+    "SimulatedNetwork",
+    "TopKCodec",
+    "Transport",
+    "dense_frame_nbytes",
+    "densify_topk",
+    "make_codec",
+    "topk_frame_nbytes",
+]

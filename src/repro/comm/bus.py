@@ -1,0 +1,112 @@
+"""Prediction bus: per-edge mailboxes driven by the communication graph.
+
+``publish(src, payload, step)`` fans one client's encoded prediction
+message out along the current graph G_t: every client that lists ``src``
+as an in-neighbor (``src ∈ adj[dst]`` — the same convention as
+`core/graph.py`: adj[i] are the clients i *receives from*) gets a copy on
+its (src, dst) edge. ``deliver(step)`` drains the transport into per-client
+mailboxes; a mailbox keeps the *latest* message per sender together with
+its staleness stamps (sent/received step).
+
+`PredictionPool` is the prediction-mode twin of the param
+`CheckpointPool`: identical capacity / random-replacement / Δ-sampling
+behavior (it *is* a subclass, sharing the rng stream), but entries hold
+decoded prediction windows instead of parameters — so a lossless
+zero-latency prediction run replays the param-pool run's teacher
+schedule exactly, while params never leave their client.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.checkpoint.pool import CheckpointPool, PoolEntry
+from repro.core.graph import Adjacency, GraphFn, as_graph_fn
+from repro.comm.metering import CommMeter
+from repro.comm.transport import Delivery, Transport
+
+
+@dataclasses.dataclass
+class Mail:
+    src: int
+    payload: bytes
+    sent_step: int
+    recv_step: int
+
+    def staleness(self, step: int) -> int:
+        return step - self.sent_step
+
+
+class PredictionBus:
+    def __init__(self, transport: Transport, graph, num_clients: int,
+                 meter: Optional[CommMeter] = None):
+        self.transport = transport
+        self.graph_fn: GraphFn = as_graph_fn(graph)
+        self.num_clients = num_clients
+        self.meter = meter
+        self._mailboxes: Dict[int, Dict[int, Mail]] = {
+            i: {} for i in range(num_clients)}
+
+    def publish(self, src: int, payload: bytes, step: int) -> None:
+        adj: Adjacency = self.graph_fn(step)
+        for dst in range(self.num_clients):
+            if dst == src or src not in adj[dst]:
+                continue
+            self.transport.send(src, dst, payload, step)
+            if self.meter is not None:
+                self.meter.record(step, src, dst, len(payload))
+
+    def deliver(self, step: int) -> int:
+        """Drain arrived messages into mailboxes; returns #deliveries."""
+        n = 0
+        for dst in range(self.num_clients):
+            for d in self.transport.poll(dst, step):
+                cur = self._mailboxes[dst].get(d.src)
+                if cur is None or d.sent_step >= cur.sent_step:
+                    self._mailboxes[dst][d.src] = Mail(
+                        d.src, d.payload, d.sent_step, d.recv_step)
+                n += 1
+        return n
+
+    def mailbox(self, dst: int) -> Dict[int, Mail]:
+        return self._mailboxes[dst]
+
+    def staleness(self, dst: int, step: int) -> float:
+        """Mean staleness (steps) of dst's mailbox — 0.0 if empty."""
+        box = self._mailboxes[dst]
+        if not box:
+            return 0.0
+        return float(np.mean([m.staleness(step) for m in box.values()]))
+
+
+@dataclasses.dataclass
+class PredictionWindow:
+    """A decoded message: dense-view outputs for steps [t0, t0 + W)."""
+    t0: int
+    outs: Dict[str, np.ndarray]  # embedding? (W,B,E), logits (W,B,C), aux…
+
+    @property
+    def window(self) -> int:
+        return int(self.outs["logits"].shape[0])
+
+    def covers(self, t: int) -> bool:
+        return self.t0 <= t < self.t0 + self.window
+
+    def frame(self, t: int) -> Dict[str, np.ndarray]:
+        w = t - self.t0
+        return {k: v[w] for k, v in self.outs.items()}
+
+
+class PredictionPool(CheckpointPool):
+    """A `CheckpointPool` whose entries carry `PredictionWindow`s in the
+    ``params`` slot. Same seed ⇒ same insert/replace/sample rng stream as
+    the param pool, which is what makes the lossless-transport equivalence
+    test exact."""
+
+    def usable(self, entries: List[PoolEntry], t: int) -> List[PoolEntry]:
+        """Entries whose window still covers step t (expired windows can't
+        score the current public batch — predictions, unlike params, are
+        sample-bound)."""
+        return [e for e in entries if e.params.covers(t)]

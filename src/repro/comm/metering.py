@@ -1,0 +1,59 @@
+"""Bytes-per-edge-per-step ledger for the prediction exchange.
+
+Every transport send is recorded as (step, src, dst, nbytes); the ledger
+answers the paper's §3.2 accounting questions from *measured* traffic:
+total bytes, per-edge totals, per-step totals, and amortized
+bytes-per-client-step (publishes happen every S_P steps but cover S_P
+public batches, so the amortized figure is the one comparable to
+`benchmarks/comm_efficiency._mhd_bytes_per_step`).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+Edge = Tuple[int, int]
+
+
+class CommMeter:
+    def __init__(self):
+        self.total_bytes = 0
+        self.num_messages = 0
+        self.by_edge: Dict[Edge, int] = defaultdict(int)
+        self.by_step: Dict[int, int] = defaultdict(int)
+        self.by_src: Dict[int, int] = defaultdict(int)
+        self.by_dst: Dict[int, int] = defaultdict(int)
+
+    def record(self, step: int, src: int, dst: int, nbytes: int) -> None:
+        self.total_bytes += nbytes
+        self.num_messages += 1
+        self.by_edge[(src, dst)] += nbytes
+        self.by_step[step] += nbytes
+        self.by_src[src] += nbytes
+        self.by_dst[dst] += nbytes
+
+    def bytes_per_step(self, num_steps: int) -> float:
+        """Total traffic amortized over the run length."""
+        return self.total_bytes / max(num_steps, 1)
+
+    def received_per_client_step(self, num_steps: int) -> Dict[int, float]:
+        """Amortized inbound bytes per client — the per-student cost the
+        paper compares against FedAvg's full-model transfer."""
+        return {dst: b / max(num_steps, 1)
+                for dst, b in sorted(self.by_dst.items())}
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "total_bytes": float(self.total_bytes),
+            "num_messages": float(self.num_messages),
+            "num_edges": float(len(self.by_edge)),
+            "max_edge_bytes": float(max(self.by_edge.values(), default=0)),
+        }
+
+    def format_table(self) -> str:
+        lines = ["edge          bytes"]
+        for (src, dst), b in sorted(self.by_edge.items()):
+            lines.append(f"{src:>3} -> {dst:<3}  {b:>12,}")
+        lines.append(f"total        {self.total_bytes:>12,} "
+                     f"({self.num_messages} messages)")
+        return "\n".join(lines)

@@ -1,0 +1,133 @@
+"""Transports: how encoded prediction messages move between clients.
+
+A transport is addressed by directed edges (src, dst) and measures time in
+*global training steps* (the runtime's clock). Two implementations:
+
+  * ``LoopbackTransport`` — in-process, lossless, zero latency: a message
+    sent at step t is deliverable at step t. This is the reference
+    transport under which prediction exchange must reproduce the
+    param-pool trainer exactly.
+  * ``SimulatedNetwork`` — store-and-forward edges with per-edge latency
+    (steps), bandwidth caps (bytes per step; messages serialize FIFO on
+    the edge, so a saturated edge delays later messages) and i.i.d. drop
+    probability. Deterministic given its seed.
+
+Both are deliberately synchronous-polling: the runtime calls ``poll(dst,
+step)`` at step boundaries, mirroring how a real deployment would drain a
+message queue between optimization steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+Edge = Tuple[int, int]  # (src, dst)
+
+
+@dataclasses.dataclass
+class Delivery:
+    src: int
+    dst: int
+    payload: bytes
+    sent_step: int
+    recv_step: int
+
+
+class Transport:
+    def send(self, src: int, dst: int, payload: bytes, step: int) -> None:
+        raise NotImplementedError
+
+    def poll(self, dst: int, step: int) -> List[Delivery]:
+        """Messages for ``dst`` that have arrived by ``step`` (FIFO)."""
+        raise NotImplementedError
+
+
+class LoopbackTransport(Transport):
+    """Lossless, zero-latency, infinite-bandwidth in-process queues."""
+
+    def __init__(self):
+        self._queues: Dict[int, List[Delivery]] = defaultdict(list)
+
+    def send(self, src, dst, payload, step) -> None:
+        self._queues[dst].append(Delivery(src, dst, payload, step, step))
+
+    def poll(self, dst, step) -> List[Delivery]:
+        out = [d for d in self._queues[dst] if d.sent_step <= step]
+        self._queues[dst] = [d for d in self._queues[dst]
+                             if d.sent_step > step]
+        for d in out:
+            d.recv_step = step
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeSpec:
+    """Per-edge link model. ``bandwidth`` is bytes per training step
+    (None = unlimited); ``latency`` is propagation delay in steps."""
+    latency: int = 0
+    bandwidth: Optional[int] = None
+    drop_prob: float = 0.0
+
+
+@dataclasses.dataclass
+class _InFlight:
+    payload: bytes
+    sent_step: int
+    arrival_step: int
+
+
+class SimulatedNetwork(Transport):
+    """Store-and-forward network simulation.
+
+    Each edge transmits FIFO at ``bandwidth`` bytes/step: a message sent
+    at t starts transmitting when the edge frees up, takes
+    ceil(len/bandwidth) steps on the wire, then ``latency`` steps of
+    propagation. Drops are decided at send time (the message simply never
+    arrives — the bus's staleness stamps surface the gap).
+    """
+
+    def __init__(self, latency: int = 0, bandwidth: Optional[int] = None,
+                 drop_prob: float = 0.0, seed: int = 0,
+                 per_edge: Optional[Dict[Edge, EdgeSpec]] = None):
+        self.default = EdgeSpec(latency, bandwidth, drop_prob)
+        self.per_edge = dict(per_edge or {})
+        self.rng = np.random.default_rng(seed)
+        self._inflight: Dict[Edge, List[_InFlight]] = defaultdict(list)
+        self._edge_free_at: Dict[Edge, int] = defaultdict(int)
+        self.sent_count = 0
+        self.dropped_count = 0
+
+    def spec(self, edge: Edge) -> EdgeSpec:
+        return self.per_edge.get(edge, self.default)
+
+    def send(self, src, dst, payload, step) -> None:
+        edge = (src, dst)
+        spec = self.spec(edge)
+        self.sent_count += 1
+        if spec.drop_prob > 0.0 and self.rng.random() < spec.drop_prob:
+            self.dropped_count += 1
+            return
+        start = max(step, self._edge_free_at[edge])
+        tx_steps = 0 if not spec.bandwidth else \
+            int(math.ceil(len(payload) / spec.bandwidth))
+        finish = start + tx_steps
+        self._edge_free_at[edge] = finish
+        self._inflight[edge].append(
+            _InFlight(payload, step, finish + spec.latency))
+
+    def poll(self, dst, step) -> List[Delivery]:
+        out: List[Delivery] = []
+        for (src, d), msgs in list(self._inflight.items()):
+            if d != dst:
+                continue
+            ready = [m for m in msgs if m.arrival_step <= step]
+            self._inflight[(src, d)] = [m for m in msgs
+                                        if m.arrival_step > step]
+            for m in ready:
+                out.append(Delivery(src, dst, m.payload, m.sent_step, step))
+        out.sort(key=lambda m: (m.sent_step, m.src))
+        return out

@@ -1,0 +1,412 @@
+"""Wire codecs for teacher predictions (paper §3.2 "Communication
+efficiency").
+
+The exchange unit is a *prediction message*: one client's outputs on a
+window of upcoming public batches (which are deterministic in the global
+step — `PublicPool`), identified per sample by an 8-byte hash. Three
+payload layouts:
+
+  * dense    — full-vocab f32/f16 logits per head (+ embedding): the naive
+               baseline layout.
+  * topk     — per head only the top-k (values, indices, logsumexp), the
+               paper's "several highest-confidence predictions per sample"
+               turned into bytes. Values can travel as f16, indices shrink
+               to u16 when the class count fits, and the retained logsumexp
+               keeps teacher probabilities exact over the retained ids.
+  * int8 embeddings — per-sample symmetric quantization (scale = max|x|/127)
+               of the Eq. 2 embedding vector.
+
+`serialize`/`deserialize` are byte-exact inverses over the quantized
+arrays: decode(encode(msg)) reproduces every wire array bit-for-bit. The
+format is raw little-endian arrays behind a fixed header — no pickle, so a
+message is decodable by any client regardless of its model architecture.
+
+In-graph helpers (`topk_pack_outputs`, `sparse_xent_and_conf`,
+`densify_topk`, ...) are the canonical home of the logic previously
+private to `core/mhd_distributed.py`; that module now imports from here.
+Host-side packing dispatches through `kernels.ops.topk_wire`, i.e. the
+Pallas top-k wire kernel on TPU and the `lax.top_k` reference on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_MAGIC = b"MHDW"
+_VERSION = 1
+
+# dtype codes used in the array header (wire is always little-endian)
+_DTYPES = {
+    0: np.dtype("<f4"),
+    1: np.dtype("<f2"),
+    2: np.dtype("<i4"),
+    3: np.dtype("<u2"),
+    4: np.dtype("<i1"),
+    5: np.dtype("<u8"),
+}
+_DTYPE_CODES = {v: k for k, v in _DTYPES.items()}
+
+
+# ---------------------------------------------------------------------------
+# in-graph packing / sparse losses (shared with core/mhd_distributed.py)
+# ---------------------------------------------------------------------------
+
+def topk_iterative(logits, k: int):
+    """Top-k as k argmax+mask rounds — reduces and selects only.
+
+    XLA's TopK lowers to a full variadic (values, iota) sort whose batch
+    dims the SPMD partitioner refuses to shard at MHD shapes (measured:
+    ~990 GB of replicated f32/s32 sort buffers). k rounds of argmax keep
+    everything elementwise/reduce-shaped, which shards cleanly; compute is
+    k·V per row — fine for k=32 on a distillation batch.
+    """
+    neg = jnp.asarray(-1e30, logits.dtype)
+
+    def round_fn(carry, _):
+        cur = carry
+        idx = jnp.argmax(cur, axis=-1)
+        val = jnp.take_along_axis(cur, idx[..., None], axis=-1)[..., 0]
+        cur = jnp.where(
+            jax.nn.one_hot(idx, cur.shape[-1], dtype=jnp.bool_), neg, cur)
+        return cur, (val, idx)
+
+    _, (vals, idxs) = jax.lax.scan(round_fn, logits, None, length=k)
+    # (k, ...) -> (..., k)
+    vals = jnp.moveaxis(vals, 0, -1)
+    idxs = jnp.moveaxis(idxs, 0, -1)
+    return vals, idxs
+
+
+def topk_pack_outputs(outs: Dict[str, Any], k: int) -> Dict[str, Any]:
+    """Compress prediction tensors to (values, indices, logsumexp)."""
+    def pack(logits):
+        vals, idx = topk_iterative(logits, k)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        return {"vals": vals, "idx": idx, "lse": lse}
+
+    return {
+        "embedding": outs["embedding"],
+        "logits": pack(outs["logits"]),
+        "aux_logits": pack(outs["aux_logits"]),
+    }
+
+
+def sparse_xent_and_conf(student_logits, packed):
+    """CE(student, sparse teacher) + exact teacher confidence.
+
+    teacher p over retained ids: exp(vals - lse); mass beyond k is dropped
+    (an upper-truncated distribution — the approximation of the wire
+    format). Student log-probs gathered at the retained ids.
+    """
+    logp = jax.nn.log_softmax(student_logits.astype(jnp.float32), axis=-1)
+    p = jnp.exp(packed["vals"].astype(jnp.float32) - packed["lse"][..., None])
+    logp_at = jnp.take_along_axis(logp, packed["idx"], axis=-1)
+    ce = -jnp.sum(p * logp_at, axis=-1)
+    conf = p[..., 0]  # top-1 prob = Λ (exact)
+    return ce, conf
+
+
+def dense_xent_and_conf(student_logits, teacher_logits):
+    t = teacher_logits.astype(jnp.float32)
+    p = jax.nn.softmax(t, axis=-1)
+    logp = jax.nn.log_softmax(student_logits.astype(jnp.float32), axis=-1)
+    return -jnp.sum(p * logp, axis=-1), jnp.max(p, axis=-1)
+
+
+def densify_topk(vals: np.ndarray, idx: np.ndarray, lse: np.ndarray,
+                 num_classes: int, tail: str = "uniform") -> np.ndarray:
+    """Reconstruct dense logits from a (vals, idx, lse) pack.
+
+    tail="uniform": the truncated probability mass exp(lse)−Σexp(vals) is
+    spread uniformly over the non-retained classes, so logsumexp(recon) ==
+    lse and the top-1 confidence Λ stays exact. tail="drop": non-retained
+    classes get −inf (renormalized truncated distribution). With k ==
+    num_classes both are exact reconstructions.
+    """
+    vals = np.asarray(vals, np.float32)
+    idx = np.asarray(idx, np.int64)
+    lse = np.asarray(lse, np.float32)
+    k = vals.shape[-1]
+    lead = vals.shape[:-1]
+    if tail == "drop" or k >= num_classes:
+        fill = np.full(lead + (1,), -1e30, np.float32)
+    else:
+        # log of per-class tail mass, in logit space (shift by lse cancels)
+        retained = np.exp(vals - lse[..., None]).sum(axis=-1)
+        tail_mass = np.clip(1.0 - retained, 1e-30, None)
+        fill = (lse + np.log(tail_mass / (num_classes - k)))[..., None]
+    out = np.broadcast_to(fill, lead + (num_classes,)).copy()
+    np.put_along_axis(out, idx, vals, axis=-1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# embedding quantization
+# ---------------------------------------------------------------------------
+
+def quantize_emb_int8(emb: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-vector int8: q = round(x·127/max|x|). Returns (q, scale)
+    with scale shaped like emb without its last axis."""
+    emb = np.asarray(emb, np.float32)
+    amax = np.max(np.abs(emb), axis=-1)
+    scale = (amax / 127.0 + 1e-30).astype(np.float32)
+    q = np.clip(np.rint(emb / scale[..., None]), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def dequantize_emb_int8(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    return q.astype(np.float32) * np.asarray(scale, np.float32)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# message + raw-array serialization
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PredictionMessage:
+    """One client's predictions for public steps [t0, t0 + W).
+
+    arrays (layouts by codec; W = window, H = 1 + num aux heads):
+      sample_ids (W, B) u64      — per-sample hashes of the public batch
+      plus either packed {vals/idx/lse} or dense head logits, and an
+      optional (possibly quantized) embedding.
+    """
+    src: int
+    sent_step: int
+    t0: int
+    num_classes: int
+    arrays: Dict[str, np.ndarray]
+
+    @property
+    def window(self) -> int:
+        return int(self.arrays["sample_ids"].shape[0])
+
+
+def _serialize(msg: PredictionMessage, codec_id: int) -> bytes:
+    parts = [_MAGIC, struct.pack("<BBH", _VERSION, codec_id,
+                                 len(msg.arrays))]
+    parts.append(struct.pack("<qqqq", msg.src, msg.sent_step, msg.t0,
+                             msg.num_classes))
+    for name, arr in msg.arrays.items():
+        arr = np.ascontiguousarray(arr)
+        dt = arr.dtype.newbyteorder("<")
+        code = _DTYPE_CODES[np.dtype(dt)]
+        nm = name.encode()
+        parts.append(struct.pack("<B", len(nm)))
+        parts.append(nm)
+        parts.append(struct.pack("<BB", code, arr.ndim))
+        parts.append(struct.pack(f"<{arr.ndim}q", *arr.shape))
+        parts.append(arr.astype(dt, copy=False).tobytes())
+    return b"".join(parts)
+
+
+def _deserialize(payload: bytes) -> Tuple[PredictionMessage, int]:
+    if payload[:4] != _MAGIC:
+        raise ValueError("not a MHDW prediction message")
+    ver, codec_id, n_arrays = struct.unpack_from("<BBH", payload, 4)
+    if ver != _VERSION:
+        raise ValueError(f"wire version {ver} != {_VERSION}")
+    off = 8
+    src, sent_step, t0, num_classes = struct.unpack_from("<qqqq", payload,
+                                                         off)
+    off += 32
+    arrays: Dict[str, np.ndarray] = {}
+    for _ in range(n_arrays):
+        (nlen,) = struct.unpack_from("<B", payload, off)
+        off += 1
+        name = payload[off:off + nlen].decode()
+        off += nlen
+        code, ndim = struct.unpack_from("<BB", payload, off)
+        off += 2
+        shape = struct.unpack_from(f"<{ndim}q", payload, off)
+        off += 8 * ndim
+        dt = _DTYPES[code]
+        nbytes = int(np.prod(shape)) * dt.itemsize
+        arrays[name] = np.frombuffer(
+            payload, dtype=dt, count=int(np.prod(shape)),
+            offset=off).reshape(shape)
+        off += nbytes
+    return PredictionMessage(int(src), int(sent_step), int(t0),
+                             int(num_classes), arrays), codec_id
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+def _stack_heads(outs: Dict[str, np.ndarray]) -> np.ndarray:
+    """{"logits": (W,B,C), "aux_logits": (W,m,B,C)} -> (W,H,B,C), H=m+1."""
+    main = np.asarray(outs["logits"], np.float32)[:, None]
+    aux = np.asarray(outs["aux_logits"], np.float32)
+    return np.concatenate([main, aux], axis=1)
+
+
+def _split_heads(heads: np.ndarray) -> Dict[str, np.ndarray]:
+    return {"logits": heads[:, 0], "aux_logits": heads[:, 1:]}
+
+
+class Codec:
+    """encode: dense window outputs -> bytes; decode: bytes -> message;
+    densify: message -> dense window outputs (the student-side view)."""
+
+    codec_id: int = 0
+
+    def encode(self, src: int, sent_step: int, t0: int,
+               sample_ids: np.ndarray, outs: Dict[str, np.ndarray]) -> bytes:
+        raise NotImplementedError
+
+    def decode(self, payload: bytes) -> PredictionMessage:
+        msg, codec_id = _deserialize(payload)
+        if codec_id != self.codec_id:
+            raise ValueError(
+                f"payload codec id {codec_id} != {self.codec_id}")
+        return msg
+
+    def densify(self, msg: PredictionMessage) -> Dict[str, np.ndarray]:
+        raise NotImplementedError
+
+    # -- shared embedding handling --------------------------------------
+
+    def _encode_emb(self, arrays: Dict[str, np.ndarray],
+                    outs: Dict[str, np.ndarray]) -> None:
+        if self.emb_encoding == "none" or "embedding" not in outs:
+            return
+        emb = np.asarray(outs["embedding"], np.float32)
+        if self.emb_encoding == "int8":
+            q, scale = quantize_emb_int8(emb)
+            arrays["emb_q"] = q
+            arrays["emb_scale"] = scale
+        else:
+            arrays["embedding"] = emb
+
+    def _decode_emb(self, msg: PredictionMessage) -> Optional[np.ndarray]:
+        if "embedding" in msg.arrays:
+            return np.asarray(msg.arrays["embedding"], np.float32)
+        if "emb_q" in msg.arrays:
+            return dequantize_emb_int8(msg.arrays["emb_q"],
+                                       msg.arrays["emb_scale"])
+        return None
+
+
+class DenseCodec(Codec):
+    """Full-vocab logits per head — the naive wire layout."""
+
+    codec_id = 1
+
+    def __init__(self, logit_dtype: str = "float32",
+                 emb_encoding: str = "float32"):
+        self.logit_dtype = np.dtype("<f2" if logit_dtype == "float16"
+                                    else "<f4")
+        self.emb_encoding = emb_encoding
+
+    def encode(self, src, sent_step, t0, sample_ids, outs) -> bytes:
+        arrays: Dict[str, np.ndarray] = {
+            "sample_ids": np.asarray(sample_ids, np.uint64)}
+        arrays["heads"] = _stack_heads(outs).astype(self.logit_dtype)
+        self._encode_emb(arrays, outs)
+        C = int(outs["logits"].shape[-1])
+        return _serialize(PredictionMessage(src, sent_step, t0, C, arrays),
+                          self.codec_id)
+
+    def densify(self, msg: PredictionMessage) -> Dict[str, np.ndarray]:
+        out = _split_heads(np.asarray(msg.arrays["heads"], np.float32))
+        emb = self._decode_emb(msg)
+        if emb is not None:
+            out["embedding"] = emb
+        return out
+
+
+class TopKCodec(Codec):
+    """Top-k packed heads: (vals, idx, lse) per head per sample.
+
+    idx travels as u16 whenever the class count fits (vocab ≤ 65535),
+    else i32; vals as f16 or f32. Densify spreads the truncated tail mass
+    uniformly so confidence stays exact (see `densify_topk`).
+    """
+
+    codec_id = 2
+
+    def __init__(self, k: int, val_dtype: str = "float16",
+                 emb_encoding: str = "int8", tail: str = "uniform",
+                 use_pallas: Optional[bool] = None):
+        self.k = int(k)
+        self.val_dtype = np.dtype("<f2" if val_dtype == "float16"
+                                  else "<f4")
+        self.emb_encoding = emb_encoding
+        self.tail = tail
+        self.use_pallas = use_pallas
+
+    def _pack(self, heads: np.ndarray) -> Dict[str, np.ndarray]:
+        from repro.kernels import ops
+
+        W, H, B, C = heads.shape
+        k = min(self.k, C)
+        vals, idx, lse = ops.topk_wire(
+            jnp.asarray(heads.reshape(W * H * B, C)), k,
+            use_pallas=self.use_pallas)
+        idx_dt = np.dtype("<u2") if C <= 0xFFFF else np.dtype("<i4")
+        return {
+            "vals": np.asarray(vals).reshape(W, H, B, k)
+            .astype(self.val_dtype),
+            "idx": np.asarray(idx).reshape(W, H, B, k).astype(idx_dt),
+            "lse": np.asarray(lse, np.float32).reshape(W, H, B),
+        }
+
+    def encode(self, src, sent_step, t0, sample_ids, outs) -> bytes:
+        arrays: Dict[str, np.ndarray] = {
+            "sample_ids": np.asarray(sample_ids, np.uint64)}
+        arrays.update(self._pack(_stack_heads(outs)))
+        self._encode_emb(arrays, outs)
+        C = int(outs["logits"].shape[-1])
+        return _serialize(PredictionMessage(src, sent_step, t0, C, arrays),
+                          self.codec_id)
+
+    def densify(self, msg: PredictionMessage) -> Dict[str, np.ndarray]:
+        heads = densify_topk(msg.arrays["vals"],
+                             msg.arrays["idx"].astype(np.int64),
+                             msg.arrays["lse"], msg.num_classes,
+                             tail=self.tail)
+        out = _split_heads(heads)
+        emb = self._decode_emb(msg)
+        if emb is not None:
+            out["embedding"] = emb
+        return out
+
+
+# ---------------------------------------------------------------------------
+# byte accounting (shared with benchmarks/comm_efficiency.py and metering
+# tests — the paper's §3.2 numbers fall out of the defaults)
+# ---------------------------------------------------------------------------
+
+def topk_frame_nbytes(batch: int, k: int, num_heads: int = 1,
+                      emb_dim: int = 0, val_bytes: int = 2,
+                      idx_bytes: int = 4, lse_bytes: int = 0,
+                      emb_bytes_per_dim: int = 1,
+                      emb_scale_bytes: int = 4,
+                      hash_bytes: int = 8) -> int:
+    """Payload bytes of ONE top-k prediction frame (one public batch).
+
+    Defaults (one head, no embedding, f16 vals + i32 idx + 8-byte hash)
+    reproduce the paper's §3.2 accounting exactly; pass the run's real
+    head count / embedding dim / dtypes for measured-format accounting.
+    """
+    per_sample = num_heads * (k * (val_bytes + idx_bytes) + lse_bytes)
+    if emb_dim:
+        per_sample += emb_dim * emb_bytes_per_dim + emb_scale_bytes
+    per_sample += hash_bytes
+    return batch * per_sample
+
+
+def dense_frame_nbytes(batch: int, num_classes: int, num_heads: int = 1,
+                       logit_bytes: int = 4, emb_dim: int = 0,
+                       emb_bytes_per_dim: int = 4,
+                       hash_bytes: int = 8) -> int:
+    """Payload bytes of one dense (full-vocab) prediction frame."""
+    per_sample = num_heads * num_classes * logit_bytes
+    per_sample += emb_dim * emb_bytes_per_dim + hash_bytes
+    return batch * per_sample

@@ -186,10 +186,16 @@ def mhd_total_loss(
     ll = jnp.take_along_axis(logits, private_labels[..., None], axis=-1)[..., 0]
     ce = jnp.mean(logz - ll)
 
-    emb = embedding_distillation_loss(
-        student_out_public["embedding"],
-        jax.lax.stop_gradient(teacher_outs_public["embedding"]),
-        cfg.nu_emb)
+    # teachers may arrive without embeddings (a wire format that ships
+    # predictions only — repro.comm emb_encoding="none"): Eq. 2 drops out
+    teacher_emb = teacher_outs_public.get("embedding")
+    if teacher_emb is None:
+        emb = jnp.zeros((), jnp.float32)
+    else:
+        emb = embedding_distillation_loss(
+            student_out_public["embedding"],
+            jax.lax.stop_gradient(teacher_emb),
+            cfg.nu_emb)
     aux, metrics = multi_head_distillation_loss(
         student_out_public, teacher_outs_public, cfg, rng)
 

@@ -18,6 +18,11 @@ Wire formats (the §Perf lever measured in EXPERIMENTS.md):
     predictions for each sample") turned into a wire format. Confidence
     Λ = max softmax prob is exact (= top-1 prob); CE against the truncated
     teacher distribution drops mass beyond k (documented approximation).
+
+The packing / sparse-CE primitives are the shared `repro.comm.wire`
+codecs (also used by the host-loop prediction exchange and the
+comm_efficiency benchmark); this module keeps only the mesh-aware pieces
+(`_topk_2stage` sharding constraints, the pod-ring collective).
 """
 from __future__ import annotations
 
@@ -28,6 +33,12 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comm.wire import (
+    dense_xent_and_conf as _dense_xent_and_conf,
+    sparse_xent_and_conf as _sparse_xent_and_conf,
+    topk_iterative as _topk_iterative,
+    topk_pack_outputs as _topk_pack,
+)
 from repro.core.mhd import MHDConfig
 from repro.models.zoo import ModelBundle
 
@@ -106,68 +117,6 @@ def _topk_2stage(logits, k: int, block: int = 1024):
     v2, i2 = jax.lax.top_k(flat_v, k)
     idx = jnp.take_along_axis(flat_i, i2, axis=-1)
     return v2, idx
-
-
-def _topk_iterative(logits, k: int):
-    """Top-k as k argmax+mask rounds — reduces and selects only.
-
-    XLA's TopK lowers to a full variadic (values, iota) sort whose batch
-    dims the SPMD partitioner refuses to shard at these shapes (measured:
-    ~990 GB of replicated f32/s32 sort buffers). k rounds of argmax keep
-    everything elementwise/reduce-shaped, which shards cleanly; compute is
-    k·V per row — fine for k=32 on a distillation batch.
-    """
-    neg = jnp.asarray(-1e30, logits.dtype)
-
-    def round_fn(carry, _):
-        cur = carry
-        idx = jnp.argmax(cur, axis=-1)
-        val = jnp.take_along_axis(cur, idx[..., None], axis=-1)[..., 0]
-        cur = jnp.where(
-            jax.nn.one_hot(idx, cur.shape[-1], dtype=jnp.bool_), neg, cur)
-        return cur, (val, idx)
-
-    _, (vals, idxs) = jax.lax.scan(round_fn, logits, None, length=k)
-    # (k, ...) -> (..., k)
-    vals = jnp.moveaxis(vals, 0, -1)
-    idxs = jnp.moveaxis(idxs, 0, -1)
-    return vals, idxs
-
-
-def _topk_pack(outs: Dict[str, Any], k: int):
-    """Compress prediction tensors to (values, indices, logsumexp)."""
-    def pack(logits):
-        vals, idx = _topk_iterative(logits, k)
-        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
-        return {"vals": vals, "idx": idx, "lse": lse}
-
-    return {
-        "embedding": outs["embedding"],
-        "logits": pack(outs["logits"]),
-        "aux_logits": pack(outs["aux_logits"]),
-    }
-
-
-def _sparse_xent_and_conf(student_logits, packed):
-    """CE(student, sparse teacher) + exact teacher confidence.
-
-    teacher p over retained ids: exp(vals - lse); mass beyond k is dropped
-    (an upper-truncated distribution — the approximation of the wire format).
-    student log-probs gathered at the retained ids.
-    """
-    logp = jax.nn.log_softmax(student_logits.astype(jnp.float32), axis=-1)
-    p = jnp.exp(packed["vals"].astype(jnp.float32) - packed["lse"][..., None])
-    logp_at = jnp.take_along_axis(logp, packed["idx"], axis=-1)
-    ce = -jnp.sum(p * logp_at, axis=-1)
-    conf = p[..., 0]  # top-1 prob = Λ (exact)
-    return ce, conf
-
-
-def _dense_xent_and_conf(student_logits, teacher_logits):
-    t = teacher_logits.astype(jnp.float32)
-    p = jax.nn.softmax(t, axis=-1)
-    logp = jax.nn.log_softmax(student_logits.astype(jnp.float32), axis=-1)
-    return -jnp.sum(p * logp, axis=-1), jnp.max(p, axis=-1)
 
 
 def _distill_loss_one_client(student, teacher, mhd: MHDConfig,

@@ -14,6 +14,23 @@ Clients may have different architectures (paper §4.5) as long as their
 embedding dims and class counts agree (the paper's ResNet-18/34 setting).
 Per-architecture jitted functions are cached so heterogeneous ensembles
 don't retrace.
+
+Exchange modes (``exchange=``):
+  * ``"params"`` (legacy) — each client's pool holds neighbors' raw
+    parameters and re-runs their forward passes locally. A simulation
+    shortcut: nothing the paper would put on a wire.
+  * ``"prediction_topk"`` / ``"prediction_dense"`` — the faithful §3.2
+    protocol via `repro.comm`: every S_P steps a client *publishes* an
+    encoded window of predictions on upcoming public batches to the
+    `PredictionBus`; students decode received mail instead of running
+    neighbor forward passes. Params never leave a client; every byte is
+    metered. Under a lossless zero-latency transport (and a horizon
+    covering the pool's staleness range) this reproduces the param-pool
+    teacher schedule exactly — same rng streams, same teacher outputs.
+
+Clients with no usable teachers (isolated topologies, dropped/expired
+mail) fall back to a supervised-only step — every topology in
+`core/graph.py` trains end-to-end.
 """
 from __future__ import annotations
 
@@ -67,8 +84,12 @@ class DecentralizedTrainer:
         public_indices: np.ndarray,
         graph: Adjacency,
         num_labels: int,
+        exchange: str = "params",
+        comm: Optional[Any] = None,  # repro.comm.CommConfig
+        transport: Optional[Any] = None,  # repro.comm.Transport
     ):
-        validate_adjacency(graph)
+        if not callable(graph):
+            validate_adjacency(graph)
         self.graph_fn = as_graph_fn(graph)
         self.mhd_cfg = mhd_cfg
         self.run_cfg = run_cfg
@@ -79,6 +100,26 @@ class DecentralizedTrainer:
                                  run_cfg.public_batch_size, seed=run_cfg.seed)
         self._teacher_apply_cache: Dict[str, Callable] = {}
         self._update_cache: Dict[str, Callable] = {}
+        self._supervised_cache: Dict[str, Callable] = {}
+
+        self.exchange = exchange
+        if exchange == "params":
+            self.comm_cfg = self.codec = self.bus = self.meter = None
+            pool_cls = CheckpointPool
+        else:
+            from repro.comm import (CommConfig, CommMeter, LoopbackTransport,
+                                    PredictionBus, PredictionPool, make_codec)
+
+            self.comm_cfg = comm or CommConfig()
+            self.codec = make_codec(exchange, self.comm_cfg)
+            self.meter = CommMeter()
+            self.bus = PredictionBus(
+                transport if transport is not None else LoopbackTransport(),
+                self.graph_fn, len(bundles), meter=self.meter)
+            self.horizon = self.comm_cfg.horizon or mhd_cfg.pool_update_every
+            pool_cls = PredictionPool
+            self._pending: Dict[int, Dict[int, int]] = {
+                i: {} for i in range(len(bundles))}
 
         self.clients: List[ClientState] = []
         key = jax.random.PRNGKey(run_cfg.seed)
@@ -92,9 +133,9 @@ class DecentralizedTrainer:
                 bundle=bundle,
                 params=params,
                 opt_state=optimizer.init(params),
-                pool=CheckpointPool(mhd_cfg.pool_size,
-                                    mhd_cfg.pool_update_every,
-                                    seed=run_cfg.seed + 101 * i),
+                pool=pool_cls(mhd_cfg.pool_size,
+                              mhd_cfg.pool_update_every,
+                              seed=run_cfg.seed + 101 * i),
                 private_iter=BatchIterator(arrays, client_indices[i],
                                            run_cfg.batch_size,
                                            seed=run_cfg.seed + 13 * i),
@@ -137,42 +178,169 @@ class DecentralizedTrainer:
             self._update_cache[bundle.name] = jax.jit(update)
         return self._update_cache[bundle.name]
 
+    def _supervised_update(self, bundle: ModelBundle) -> Callable:
+        """Fallback step for clients with no usable teachers (isolated
+        topologies, empty mailboxes): Eq. (1) with both distillation terms
+        zero — plain supervised CE on the private batch."""
+        if bundle.name not in self._supervised_cache:
+            opt = self.optimizer
+
+            def loss_fn(params, private_batch):
+                logits = bundle.apply(
+                    params, private_batch)["logits"].astype(jnp.float32)
+                logz = jax.nn.logsumexp(logits, axis=-1)
+                ll = jnp.take_along_axis(
+                    logits, private_batch["labels"][..., None],
+                    axis=-1)[..., 0]
+                ce = jnp.mean(logz - ll)
+                return ce, {"ce": ce}
+
+            def update(params, opt_state, private_batch, step):
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, private_batch)
+                params, opt_state = opt.update(grads, opt_state, params, step)
+                metrics["loss"] = loss
+                return params, opt_state, metrics
+
+            self._supervised_cache[bundle.name] = jax.jit(update)
+        return self._supervised_cache[bundle.name]
+
     # -- pool mechanics ----------------------------------------------------
 
     def _seed_pools(self, step: int) -> None:
-        """Fill each pool with its neighbors' initial checkpoints."""
+        """Fill each pool from its neighbors' initial state: params in
+        legacy mode, published prediction windows in prediction mode."""
+        if self.exchange != "params":
+            self._publish_round(step)
         adj = self.graph_fn(step)
         for c in self.clients:
             nbrs = adj[c.client_id]
             for j in nbrs:
                 if len(c.pool) >= c.pool.capacity:
                     break
-                c.pool.insert(PoolEntry(j, self.clients[j].params, step))
+                entry = self._fetch_entry(c, j, step)
+                if entry is not None:
+                    c.pool.insert(entry)
 
     def _maybe_update_pools(self, step: int) -> None:
         if step % self.mhd_cfg.pool_update_every != 0:
+            if self.exchange != "params":
+                self.bus.deliver(step)  # drain in-flight (latency) mail
+                self._resolve_pending(step)
             return
+        if self.exchange != "params":
+            self._publish_round(step)
+            self._resolve_pending(step)  # older rounds' pulls first
         adj = self.graph_fn(step)
         for c in self.clients:
             nbrs = adj[c.client_id]
             if not nbrs:
                 continue
             j = int(self.rng.choice(list(nbrs)))
-            c.pool.insert(PoolEntry(j, self.clients[j].params, step))
+            entry = self._fetch_entry(c, j, step)
+            if entry is not None:
+                c.pool.insert(entry)
 
-    def _stack_teachers(self, client: ClientState, public_batch) -> Any:
-        """Sample Δ pool entries, score the public batch, stack outputs."""
+    def _fetch_entry(self, client: ClientState, j: int,
+                     step: int) -> Optional[PoolEntry]:
+        """The pool-insert payload for teacher j: its raw params (legacy) or
+        its decoded mailbox window. When j's message is dropped, in flight,
+        or expired, the pull is recorded as *pending*: the insert happens
+        on whatever later step usable mail from j arrives (zero-latency
+        transports never hit this path, keeping the param-pool equivalence
+        exact)."""
+        if self.exchange == "params":
+            return PoolEntry(j, self.clients[j].params, step)
+        mail = self.bus.mailbox(client.client_id).get(j)
+        if mail is None or mail.sent_step + self.horizon <= step:
+            # one pending pull per sender: a newer pull supersedes, so a
+            # single late message can't be inserted multiple times
+            self._pending[client.client_id][j] = step
+            return None
+        return PoolEntry(j, self._decode_window(mail), mail.sent_step)
+
+    def _resolve_pending(self, step: int) -> None:
+        """Late-arriving mail: complete pulls that found no usable message
+        at their pool-update step, as soon as a window that still covers
+        the current step shows up. Pulls whose own round has fully expired
+        are abandoned."""
+        for c in self.clients:
+            keep: Dict[int, int] = {}
+            for j, rnd in self._pending[c.client_id].items():
+                mail = self.bus.mailbox(c.client_id).get(j)
+                if mail is not None and mail.sent_step >= rnd and \
+                        mail.sent_step + self.horizon > step:
+                    c.pool.insert(
+                        PoolEntry(j, self._decode_window(mail),
+                                  mail.sent_step))
+                elif rnd + self.horizon > step:
+                    keep[j] = rnd
+            self._pending[c.client_id] = keep
+
+    # -- prediction exchange (repro.comm) ----------------------------------
+
+    def _publish_round(self, step: int) -> None:
+        """Every client encodes its predictions on the next ``horizon``
+        public batches and publishes them on the bus (paper §3.2: only
+        predictions and sample hashes cross the wire)."""
+        adj = self.graph_fn(step)
+        subscribed = {j for nbrs in adj for j in nbrs}
+        if not subscribed:
+            return
+        W = self.horizon
+        ids = np.stack([self.public.sample_ids(step + w) for w in range(W)])
+        batches = [{k: jnp.asarray(v)
+                    for k, v in self.public.sample(step + w).items()}
+                   for w in range(W)]
+        for c in self.clients:
+            if c.client_id not in subscribed:
+                continue  # no receiver under G_t — skip the forward work
+            apply_fn = self._teacher_apply(c.bundle)
+            frames = [apply_fn(c.params, b) for b in batches]
+            outs = {key: np.stack([np.asarray(f[key], np.float32)
+                                   for f in frames])
+                    for key in ("embedding", "logits", "aux_logits")}
+            payload = self.codec.encode(c.client_id, step, step, ids, outs)
+            self.bus.publish(c.client_id, payload, step)
+        self.bus.deliver(step)
+
+    def _decode_window(self, mail) -> Any:
+        from repro.comm import PredictionWindow
+
+        msg = self.codec.decode(mail.payload)
+        for w in range(msg.window):
+            expect = self.public.sample_ids(msg.t0 + w).astype(np.uint64)
+            if not np.array_equal(msg.arrays["sample_ids"][w], expect):
+                raise ValueError(
+                    f"sample-id mismatch in message from client {msg.src} "
+                    f"at public step {msg.t0 + w}")
+        return PredictionWindow(msg.t0, self.codec.densify(msg))
+
+    # -- teacher assembly ---------------------------------------------------
+
+    def _stack_teachers(self, client: ClientState, public_batch,
+                        step: int) -> Optional[Any]:
+        """Sample Δ pool entries and stack their public-batch outputs —
+        scored locally from raw params in legacy mode, decoded from
+        received predictions in prediction modes. Returns None when the
+        client has no usable teacher (supervised fallback)."""
         entries = client.pool.sample(self.mhd_cfg.delta)
+        if self.exchange != "params":
+            entries = client.pool.usable(entries, step)
         if not entries:
-            raise RuntimeError(
-                f"client {client.client_id} has an empty pool; use the "
-                "supervised baseline for isolated clients")
-        while len(entries) < self.mhd_cfg.delta:  # pad by repetition
-            entries.append(entries[len(entries) % len(entries)])
+            return None
+        # pad to Δ by cycling over the originally sampled entries
+        entries = [entries[i % len(entries)]
+                   for i in range(self.mhd_cfg.delta)]
         outs = []
         for e in entries:
-            teacher_bundle = self.clients[e.client_id].bundle
-            outs.append(self._teacher_apply(teacher_bundle)(e.params, public_batch))
+            if self.exchange == "params":
+                teacher_bundle = self.clients[e.client_id].bundle
+                outs.append(self._teacher_apply(teacher_bundle)(
+                    e.params, public_batch))
+            else:
+                outs.append({k: jnp.asarray(v)
+                             for k, v in e.params.frame(step).items()})
         return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *outs)
 
     # -- training loop -----------------------------------------------------
@@ -184,14 +352,22 @@ class DecentralizedTrainer:
         for c in self.clients:
             private_np = c.private_iter.next()
             private_batch = {k: jnp.asarray(v) for k, v in private_np.items()}
-            teachers = self._stack_teachers(c, public_batch)
+            teachers = self._stack_teachers(c, public_batch, t)
             rng = jax.random.PRNGKey((t << 10) + c.client_id)
-            update = self._client_update(c.bundle)
-            c.params, c.opt_state, metrics = update(
-                c.params, c.opt_state, private_batch, public_batch,
-                teachers, jnp.asarray(t), rng)
+            if teachers is None:
+                update = self._supervised_update(c.bundle)
+                c.params, c.opt_state, metrics = update(
+                    c.params, c.opt_state, private_batch, jnp.asarray(t))
+            else:
+                update = self._client_update(c.bundle)
+                c.params, c.opt_state, metrics = update(
+                    c.params, c.opt_state, private_batch, public_batch,
+                    teachers, jnp.asarray(t), rng)
             for k, v in metrics.items():
                 all_metrics[f"c{c.client_id}/{k}"] = float(v)
+            if self.exchange != "params":
+                all_metrics[f"c{c.client_id}/mail_staleness"] = \
+                    self.bus.staleness(c.client_id, t)
         self._maybe_update_pools(t + 1)
         return all_metrics
 
@@ -239,6 +415,12 @@ class DecentralizedTrainer:
             c.params = state["params"]
             c.opt_state = state["opt"]
             restored_step = mgr.latest_step() if step is None else step
+        if self.exchange != "params":
+            # construction-time windows are expired at the restored step —
+            # drop them (and any stale pulls) so reseeding actually lands
+            for c in self.clients:
+                c.pool.entries.clear()
+            self._pending = {c.client_id: {} for c in self.clients}
         self._seed_pools(step=restored_step)
         return int(restored_step)
 

@@ -70,9 +70,16 @@ class PublicPool:
         self.seed = seed
 
     def sample(self, step: int) -> Dict[str, np.ndarray]:
-        rng = np.random.default_rng((self.seed << 20) ^ step)
-        sel = self.indices[rng.integers(0, self.indices.shape[0], size=self.batch_size)]
+        sel = self.sample_ids(step)
         return {k: v[sel] for k, v in self.arrays.items()}
+
+    def sample_ids(self, step: int) -> np.ndarray:
+        """Dataset indices of the step-t public batch — the per-sample
+        identifiers of the exchange wire format (paper §3.2: samples are
+        referenced by hash, never shipped)."""
+        rng = np.random.default_rng((self.seed << 20) ^ step)
+        return self.indices[rng.integers(0, self.indices.shape[0],
+                                         size=self.batch_size)]
 
     @property
     def size(self) -> int:

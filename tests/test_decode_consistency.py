@@ -9,6 +9,8 @@ from repro.configs import get_reduced
 from repro.models.transformer import prefill_cross_caches
 from repro.models.zoo import build_bundle
 
+pytestmark = pytest.mark.slow  # per-arch decode loops — minutes on CPU
+
 
 def _decode_all(bundle, params, tokens, caches):
     step = jax.jit(bundle.decode_step)

@@ -1,9 +1,12 @@
-"""Unit tests for the paper's core losses (Eqs. 2, 4, 5) and gating rules."""
+"""Unit tests for the paper's core losses (Eqs. 2, 4, 5) and gating rules.
+
+The property-based test imports hypothesis lazily (pytest.importorskip)
+so the example-based tests stay runnable without the dev-only dependency
+(see requirements-dev.txt)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.mhd import (
     MHDConfig,
@@ -143,23 +146,29 @@ def test_gradients_do_not_flow_to_teachers():
     assert float(jnp.sum(jnp.abs(g))) == 0.0
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    m=st.integers(1, 4),
-    delta=st.integers(1, 3),
-    sl=st.booleans(),
-    sf=st.booleans(),
-)
-def test_mhd_loss_invariants(m, delta, sl, sf):
+def test_mhd_loss_invariants():
     """Property: loss finite & >= 0; keep fractions in [0,1]; one metric
     triple per head."""
-    B, C = 5, 7
-    student = _outs(B, C, m, seed=3)
-    teachers = _teachers(delta, B, C, m, seed=4)
-    cfg = MHDConfig(nu_aux=2.0, num_aux_heads=m, delta=delta,
-                    use_same_level=sl, use_self=sf)
-    loss, metrics = multi_head_distillation_loss(student, teachers, cfg)
-    assert np.isfinite(float(loss)) and float(loss) >= 0.0
-    for k in range(1, m + 1):
-        assert 0.0 <= float(metrics[f"aux{k}_keep_frac"]) <= 1.0
-        assert 0.0 <= float(metrics[f"aux{k}_teacher_frac"]) <= 1.0
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(1, 4),
+        delta=st.integers(1, 3),
+        sl=st.booleans(),
+        sf=st.booleans(),
+    )
+    def check(m, delta, sl, sf):
+        B, C = 5, 7
+        student = _outs(B, C, m, seed=3)
+        teachers = _teachers(delta, B, C, m, seed=4)
+        cfg = MHDConfig(nu_aux=2.0, num_aux_heads=m, delta=delta,
+                        use_same_level=sl, use_self=sf)
+        loss, metrics = multi_head_distillation_loss(student, teachers, cfg)
+        assert np.isfinite(float(loss)) and float(loss) >= 0.0
+        for k in range(1, m + 1):
+            assert 0.0 <= float(metrics[f"aux{k}_keep_frac"]) <= 1.0
+            assert 0.0 <= float(metrics[f"aux{k}_teacher_frac"]) <= 1.0
+
+    check()

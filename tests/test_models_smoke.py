@@ -6,6 +6,8 @@ import numpy as np
 import pytest
 
 from repro.configs import arch_ids, get_reduced
+
+pytestmark = pytest.mark.slow  # one jit per assigned arch — minutes on CPU
 from repro.models.zoo import build_bundle
 from repro.optim.optimizers import OptimizerConfig, make_optimizer
 

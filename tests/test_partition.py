@@ -1,7 +1,7 @@
-"""Paper §3.3 data-partition protocol: unit + property tests."""
+"""Paper §3.3 data-partition protocol: unit + property tests (the
+property test skips itself via pytest.importorskip without hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.data.partition import (
     PartitionConfig,
@@ -75,24 +75,30 @@ def test_shared_test_split_uniform():
     assert (hist == 10).all()
 
 
-@settings(max_examples=15, deadline=None)
-@given(
-    K=st.integers(2, 8),
-    L=st.integers(4, 20),
-    skew=st.sampled_from([0.0, 1.0, 100.0]),
-    gamma=st.sampled_from([0.0, 0.1, 0.3]),
-    seed=st.integers(0, 100),
-)
-def test_partition_invariants(K, L, skew, gamma, seed):
+def test_partition_invariants():
     """Property: disjoint cover, public fraction, primary sets within range."""
-    rng = np.random.default_rng(seed)
-    labels = rng.integers(0, L, size=L * 20)
-    cfg = PartitionConfig(num_clients=K, num_labels=L,
-                          labels_per_client=max(L // K, 1), skew=skew,
-                          gamma_pub=gamma, seed=seed)
-    part = partition_dataset(labels, cfg)
-    all_idx = np.concatenate([part.public_indices] + part.client_indices)
-    assert len(np.unique(all_idx)) == len(labels) == len(all_idx)
-    for labs in part.primary_labels:
-        assert len(labs) <= max(L // K, 1)
-        assert (labs >= 0).all() and (labs < L).all()
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        K=st.integers(2, 8),
+        L=st.integers(4, 20),
+        skew=st.sampled_from([0.0, 1.0, 100.0]),
+        gamma=st.sampled_from([0.0, 0.1, 0.3]),
+        seed=st.integers(0, 100),
+    )
+    def check(K, L, skew, gamma, seed):
+        rng = np.random.default_rng(seed)
+        labels = rng.integers(0, L, size=L * 20)
+        cfg = PartitionConfig(num_clients=K, num_labels=L,
+                              labels_per_client=max(L // K, 1), skew=skew,
+                              gamma_pub=gamma, seed=seed)
+        part = partition_dataset(labels, cfg)
+        all_idx = np.concatenate([part.public_indices] + part.client_indices)
+        assert len(np.unique(all_idx)) == len(labels) == len(all_idx)
+        for labs in part.primary_labels:
+            assert len(labs) <= max(L // K, 1)
+            assert (labs >= 0).all() and (labs < L).all()
+
+    check()

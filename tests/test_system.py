@@ -8,6 +8,9 @@ measurably transfers knowledge in a small controlled run.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow  # end-to-end training runs
 
 from repro.core import (
     MHDConfig,
