@@ -1,0 +1,138 @@
+"""Async runtime sweep: ``max_staleness`` × client rate-skew.
+
+The async scheduler lets fast clients run ahead of stragglers; the
+bounded-staleness gate decides how old a teacher may be before a step
+degrades to supervised-only. This benchmark sweeps both knobs on a lossy
+ring and reports the trade the ROADMAP's "Async runtime" lever is about:
+accuracy (β_sh of the best head) versus wall-clock throughput versus
+bytes on the wire.
+
+Each sweep point also appends a row to ``BENCH_async.json`` at the repo
+root — {steps/sec, bytes/edge, final acc} — so the perf trajectory
+accumulates across PRs.
+
+    PYTHONPATH=src python -m benchmarks.run --only async
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+from benchmarks.common import BenchScale, best_aux_sh, make_data, row
+from repro.comm import CommConfig, SimulatedNetwork
+from repro.core import (
+    AsyncScheduler,
+    MHDConfig,
+    DecentralizedTrainer,
+    RunConfig,
+    ScheduleConfig,
+    cycle_graph,
+)
+from repro.models.resnet import resnet_tiny
+from repro.models.zoo import build_bundle
+from repro.optim.optimizers import OptimizerConfig, make_optimizer
+
+_BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_async.json")
+
+
+def _run_point(scale: BenchScale, data, ticks: int, slow_rate: int,
+               max_staleness: Optional[int], s_p: int,
+               aux_heads: int = 2) -> Dict[str, float]:
+    arrays, test_arrays, part = data
+    K = scale.clients
+    rates = ScheduleConfig.skewed(K, slow_rate) if slow_rate > 1 else \
+        ScheduleConfig.uniform(K)
+    bundles = [build_bundle(resnet_tiny(scale.labels,
+                                        num_aux_heads=aux_heads))
+               for _ in range(K)]
+    opt = make_optimizer(OptimizerConfig(init_lr=scale.lr, total_steps=ticks,
+                                         grad_clip_norm=scale.grad_clip))
+    mhd = MHDConfig(nu_emb=1.0, nu_aux=1.0, num_aux_heads=aux_heads,
+                    delta=1, pool_size=2, pool_update_every=s_p)
+    net = SimulatedNetwork(latency=1, bandwidth=64 * 1024, drop_prob=0.05,
+                           seed=scale.seed,
+                           client_rates={i: r for i, r
+                                         in enumerate(rates.rates) if r > 1})
+    trainer = DecentralizedTrainer(
+        bundles, opt, mhd,
+        RunConfig(steps=ticks, batch_size=scale.batch_size,
+                  public_batch_size=scale.batch_size, eval_every=0,
+                  seed=scale.seed, max_staleness=max_staleness),
+        arrays, part.client_indices, part.public_indices,
+        cycle_graph(K), scale.labels,
+        exchange="prediction_topk",
+        comm=CommConfig(topk=5, val_dtype="float16", emb_encoding="int8",
+                        horizon=s_p * rates.max_rate),
+        transport=net)
+    sched = AsyncScheduler(trainer, rates)
+    t0 = time.time()
+    for _ in range(ticks):
+        sched.tick()
+    wall = time.time() - t0
+    ev = trainer.evaluate(test_arrays)
+    meter = trainer.meter
+    num_edges = max(len(meter.by_edge), 1)
+    return {
+        "acc": best_aux_sh(ev),
+        "steps_per_sec": sum(sched.local_steps) / wall,
+        "ticks_per_sec": ticks / wall,
+        "bytes_per_edge": meter.total_bytes / num_edges,
+        "bytes_total": float(meter.total_bytes),
+        "stale_skips": float(sum(meter.gate_stale.values())),
+        "local_steps": float(sum(sched.local_steps)),
+        "us_per_tick": wall / ticks * 1e6,
+    }
+
+
+def _append_bench_rows(rows: List[Dict]) -> None:
+    existing: List[Dict] = []
+    try:
+        with open(_BENCH_JSON) as f:
+            existing = json.load(f)
+        if not isinstance(existing, list):
+            existing = []
+    except (OSError, ValueError):
+        existing = []
+    with open(_BENCH_JSON, "w") as f:
+        json.dump(existing + rows, f, indent=1)
+        f.write("\n")
+
+
+def main(scale=None, full: bool = False) -> list:
+    scale = scale or BenchScale()
+    ticks = min(scale.steps, 400 if full else 150)
+    s_p = scale.pool_every
+    data = make_data(scale)
+    out, bench_rows = [], []
+    for slow_rate in (1, 4):
+        for ms in (None, 2 * s_p, s_p // 2):
+            r = _run_point(scale, data, ticks, slow_rate, ms, s_p)
+            name = (f"async/skew{slow_rate}x_ms"
+                    f"{'inf' if ms is None else ms}")
+            out.append(row(
+                name, r["us_per_tick"],
+                f"acc={r['acc']:.3f};steps_per_sec={r['steps_per_sec']:.1f};"
+                f"bytes_per_edge={r['bytes_per_edge']:.0f};"
+                f"stale_skips={r['stale_skips']:.0f}"))
+            bench_rows.append({
+                "name": name,
+                "slow_rate": slow_rate,
+                "max_staleness": ms,
+                "ticks": ticks,
+                "steps_per_sec": round(r["steps_per_sec"], 2),
+                "bytes_per_edge": round(r["bytes_per_edge"], 1),
+                "final_acc": round(r["acc"], 4),
+            })
+    _append_bench_rows(bench_rows)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, "src")
+    for line in main():
+        print(line)

@@ -22,6 +22,7 @@ def main(argv=None) -> int:
     args = p.parse_args(argv)
 
     from benchmarks import (
+        async_staleness,
         comm_efficiency,
         confidence_ablation,
         fig3_loss_weights,
@@ -39,6 +40,7 @@ def main(argv=None) -> int:
     scale = FULL if args.full else QUICK
     benches = [
         ("comm", lambda: comm_efficiency.main(scale, args.full)),
+        ("async", lambda: async_staleness.main(scale, args.full)),
         ("roofline", lambda: roofline.main(scale, args.full, args.art_dir)),
         ("table1", lambda: table1_baselines.main(scale)),
         ("fig3", lambda: fig3_loss_weights.main(scale, args.full)),

@@ -1,16 +1,22 @@
 """Gossip over a real (simulated) network: a 4-client directed ring
 exchanging ONLY top-k predictions through `repro.comm` — with per-edge
-latency, a bandwidth cap, and 10% message loss.
+latency, a bandwidth cap, 10% message loss, AND heterogeneous client
+speeds driven by the async scheduler.
 
     PYTHONPATH=src python examples/comm_gossip.py
 
-Every S_P steps each client publishes an encoded window of top-5
-predictions (f16 values, u16 indices, int8 embeddings) on upcoming public
-batches; its ring successor decodes whatever survives the link. Params
-never cross the wire. Expected output: training proceeds despite drops
-(clients fall back to supervised-only steps while their mailbox is stale),
-and the metering ledger shows per-edge traffic of a few kilobytes per
-step — versus megabytes for shipping the ResNet itself every round.
+Clients 0-2 run at full speed; client 3 is a 4× slower straggler (think a
+phone among servers). Nobody waits for it: each client publishes an
+encoded window of top-5 predictions (f16 values, u16 indices, int8
+embeddings) every S_P of its *own* local steps, and a bounded-staleness
+gate (``max_staleness``) decides per teacher whether surviving mail is
+still fresh enough to distill from — stale or lost mail degrades a step
+to supervised-only instead of blocking. The straggler's uplink is also
+4× slower on the simulated link (``client_rates``), so its neighbors see
+old predictions both because it publishes rarely and because its bytes
+crawl. Expected output: training proceeds despite drops and skew, the
+staleness column shows the straggler's successor living further in the
+past, and the metering ledger stays at kilobytes per edge per step.
 """
 import sys
 
@@ -18,9 +24,11 @@ sys.path.insert(0, "src")
 
 from repro.comm import CommConfig, SimulatedNetwork
 from repro.core import (
+    AsyncScheduler,
     MHDConfig,
     DecentralizedTrainer,
     RunConfig,
+    ScheduleConfig,
     cycle_graph,
 )
 from repro.data import PartitionConfig, make_synthetic_vision, partition_dataset
@@ -31,7 +39,9 @@ from repro.common.pytree import tree_size
 
 
 def main():
-    K, labels, steps, s_p = 4, 12, 200, 10
+    K, labels, ticks, s_p = 4, 12, 200, 10
+    rates = (1, 1, 1, 4)  # client 3 is the 4× straggler
+    max_staleness = 3 * s_p
 
     ds = make_synthetic_vision(num_labels=labels, samples_per_label=200,
                                noise=2.0, seed=0)
@@ -44,32 +54,44 @@ def main():
     bundles = [build_bundle(resnet_tiny(labels, num_aux_heads=2))
                for _ in range(K)]
     optimizer = make_optimizer(OptimizerConfig(
-        init_lr=0.05, total_steps=steps, grad_clip_norm=1.0))
+        init_lr=0.05, total_steps=ticks, grad_clip_norm=1.0))
     mhd = MHDConfig(nu_emb=1.0, nu_aux=1.0, num_aux_heads=2,
                     delta=1, pool_size=2, pool_update_every=s_p)
 
-    # a lossy, capped, laggy ring link: 1-step propagation delay, 64 KiB
-    # of bandwidth per training step, 10% of messages vanish
+    # a lossy, capped, laggy ring link: 1-tick propagation delay, 64 KiB of
+    # bandwidth per wall tick, 10% of messages vanish — and the straggler's
+    # uplink serializes 4× slower than everyone else's
     net = SimulatedNetwork(latency=1, bandwidth=64 * 1024, drop_prob=0.10,
-                           seed=7)
+                           seed=7, client_rates={3: rates[3]})
     trainer = DecentralizedTrainer(
         bundles, optimizer, mhd,
-        RunConfig(steps=steps, batch_size=32, public_batch_size=32, seed=0),
+        RunConfig(steps=ticks, batch_size=32, public_batch_size=32, seed=0,
+                  max_staleness=max_staleness),
         {"images": ds.images, "labels": ds.labels},
         part.client_indices, part.public_indices,
         cycle_graph(K), labels,
         exchange="prediction_topk",
         comm=CommConfig(topk=5, val_dtype="float16", emb_encoding="int8",
-                        horizon=s_p),
+                        horizon=s_p * rates[3]),  # cover the straggler's gap
         transport=net)
+    sched = AsyncScheduler(trainer, ScheduleConfig(rates))
 
-    for t in range(steps):
-        metrics = trainer.step(t)
+    for t in range(ticks):
+        metrics = sched.tick()
         if t % 50 == 0:
-            stale = sum(metrics[f"c{i}/mail_staleness"]
-                        for i in range(K)) / K
-            print(f"step {t:4d}  client-0 loss {metrics['c0/loss']:.3f}  "
-                  f"mean mailbox staleness {stale:.1f} steps")
+            stales = [metrics.get(f"c{i}/mail_staleness") for i in range(K)]
+            shown = ["  -" if s is None else
+                     ("new" if s < 0 else f"{s:3.0f}") for s in stales]
+            print(f"tick {t:4d}  client-0 loss {metrics['c0/loss']:.3f}  "
+                  f"mailbox staleness per client [{' '.join(shown)}] ticks")
+
+    print(f"\nlocal steps taken: {sched.local_steps} "
+          f"(rates {list(rates)}; nobody waited for client 3)")
+    gs = trainer.meter.gate_summary()
+    for cid in range(K):
+        g = gs.get(cid, {"fresh": 0, "stale": 0, "stale_frac": 0.0})
+        print(f"  client {cid}: {g['fresh']:.0f} fresh teachers, "
+              f"{g['stale']:.0f} gated stale ({g['stale_frac']:.0%})")
 
     ev = trainer.evaluate({"images": test.images, "labels": test.labels})
     print("\nfinal accuracies (ensemble means):")
@@ -83,7 +105,7 @@ def main():
     print(trainer.meter.format_table())
     n_params = tree_size(trainer.clients[0].params)
     print(f"\nper-client inbound ≈ "
-          f"{trainer.meter.total_bytes / K / steps:,.0f} B/step; one FedAvg "
+          f"{trainer.meter.total_bytes / K / ticks:,.0f} B/tick; one FedAvg "
           f"round of this model would be {2 * 4 * n_params:,} B per client.")
 
 

@@ -4,6 +4,11 @@
 #   scripts/check.sh           # fast tier (skips tests marked slow)
 #   scripts/check.sh --full    # everything, including slow tier
 #
+# The fast tier includes the async-scheduler suite (tests/test_scheduler.py:
+# lockstep equivalence + staleness gating) — those tests are sized to stay
+# in the slow-excluded tier; do not mark them slow without moving the
+# bitwise-equivalence acceptance elsewhere.
+#
 # Extra args after the mode flag are passed straight to pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -15,6 +20,21 @@ MARK=(-m "not slow")
 if [[ "${1:-}" == "--full" ]]; then
     MARK=()
     shift
+fi
+
+# the scheduler suite is the async-runtime acceptance gate: fail loudly if
+# a refactor ever empties it out of the fast tier (and show pytest's own
+# output when collection itself breaks — import errors must stay visible)
+collected=$(python -m pytest -q --collect-only -m "not slow" \
+    tests/test_scheduler.py 2>&1) || {
+    printf '%s\n' "$collected" >&2
+    echo "check.sh: collecting tests/test_scheduler.py failed" >&2
+    exit 1
+}
+if ! grep -q "test_async_equals_sync" <<<"$collected"; then
+    printf '%s\n' "$collected" >&2
+    echo "check.sh: async equivalence tests missing from the fast tier" >&2
+    exit 1
 fi
 
 exec python -m pytest -x -q "${MARK[@]}" "$@"

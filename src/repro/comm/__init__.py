@@ -46,6 +46,7 @@ from repro.comm.transport import (
 from repro.comm.wire import (
     Codec,
     DenseCodec,
+    NonFiniteError,
     PredictionMessage,
     TopKCodec,
     dense_frame_nbytes,
@@ -89,6 +90,7 @@ __all__ = [
     "EdgeSpec",
     "LoopbackTransport",
     "Mail",
+    "NonFiniteError",
     "PredictionBus",
     "PredictionMessage",
     "PredictionPool",

@@ -8,6 +8,14 @@ its (src, dst) edge. ``deliver(step)`` drains the transport into per-client
 mailboxes; a mailbox keeps the *latest* message per sender together with
 its staleness stamps (sent/received step).
 
+The bus also keeps a *per-client logical clock* for the async runtime
+(`core/scheduler.py`): ``advance(client, t)`` records the last wall tick
+at which a client took a local step, and ``poll_fresh(client,
+max_staleness)`` filters that client's mailbox down to mail whose age —
+measured against the client's own clock, in wall ticks — is within the
+staleness bound. Under the synchronous trainer every clock advances in
+lockstep, so both APIs degenerate to the global-step behavior.
+
 `PredictionPool` is the prediction-mode twin of the param
 `CheckpointPool`: identical capacity / random-replacement / Δ-sampling
 behavior (it *is* a subclass, sharing the rng stream), but entries hold
@@ -48,6 +56,7 @@ class PredictionBus:
         self.meter = meter
         self._mailboxes: Dict[int, Dict[int, Mail]] = {
             i: {} for i in range(num_clients)}
+        self._clocks: Dict[int, int] = {i: 0 for i in range(num_clients)}
 
     def publish(self, src: int, payload: bytes, step: int) -> None:
         adj: Adjacency = self.graph_fn(step)
@@ -73,11 +82,45 @@ class PredictionBus:
     def mailbox(self, dst: int) -> Dict[int, Mail]:
         return self._mailboxes[dst]
 
+    # -- per-client clocks (async runtime) -------------------------------
+
+    def advance(self, client: int, t: int) -> None:
+        """Record that ``client`` reached wall tick ``t``. Clocks are
+        monotone: a stale advance (t below the recorded clock) is a no-op,
+        so replays/retries can't move time backwards."""
+        if t > self._clocks[client]:
+            self._clocks[client] = t
+
+    def clock(self, client: int) -> int:
+        """The last wall tick ``client`` advanced to (0 before any step)."""
+        return self._clocks[client]
+
+    def poll_fresh(self, client: int,
+                   max_staleness: Optional[int]) -> Dict[int, Mail]:
+        """The subset of ``client``'s mailbox fresh enough to distill from,
+        judged against the client's *own* clock: mail m survives iff
+        ``clock(client) - m.sent_step <= max_staleness``. ``None`` means
+        unbounded (the whole mailbox)."""
+        box = self._mailboxes[client]
+        if max_staleness is None:
+            return dict(box)
+        t = self._clocks[client]
+        return {src: m for src, m in box.items()
+                if m.staleness(t) <= max_staleness}
+
+    EMPTY_STALENESS = -1.0  # sentinel: no mail has ever arrived
+
     def staleness(self, dst: int, step: int) -> float:
-        """Mean staleness (steps) of dst's mailbox — 0.0 if empty."""
+        """Mean staleness (steps) of dst's mailbox.
+
+        Returns ``EMPTY_STALENESS`` (-1.0) when the mailbox is empty —
+        callers reading this as a metric before any mail exists (e.g.
+        `runtime.step()` on a chain's sink client) get a documented
+        sentinel instead of a value indistinguishable from perfectly
+        fresh mail."""
         box = self._mailboxes[dst]
         if not box:
-            return 0.0
+            return self.EMPTY_STALENESS
         return float(np.mean([m.staleness(step) for m in box.values()]))
 
 

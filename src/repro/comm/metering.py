@@ -6,6 +6,12 @@ total bytes, per-edge totals, per-step totals, and amortized
 bytes-per-client-step (publishes happen every S_P steps but cover S_P
 public batches, so the amortized figure is the one comparable to
 `benchmarks/comm_efficiency._mhd_bytes_per_step`).
+
+The ledger also tracks the *bounded-staleness gate* of the async runtime
+(`RunConfig.max_staleness`): every time a client assembles teachers,
+``record_gate`` counts how many sampled pool entries were fresh enough to
+distill from and how many were skipped as stale/expired — the per-client
+freshness economy that `benchmarks/async_staleness.py` sweeps.
 """
 from __future__ import annotations
 
@@ -23,6 +29,10 @@ class CommMeter:
         self.by_step: Dict[int, int] = defaultdict(int)
         self.by_src: Dict[int, int] = defaultdict(int)
         self.by_dst: Dict[int, int] = defaultdict(int)
+        # bounded-staleness gate counters (async runtime)
+        self.gate_fresh: Dict[int, int] = defaultdict(int)
+        self.gate_stale: Dict[int, int] = defaultdict(int)
+        self.rejected_publishes = 0  # non-finite payloads refused by codecs
 
     def record(self, step: int, src: int, dst: int, nbytes: int) -> None:
         self.total_bytes += nbytes
@@ -31,6 +41,26 @@ class CommMeter:
         self.by_step[step] += nbytes
         self.by_src[src] += nbytes
         self.by_dst[dst] += nbytes
+
+    def record_gate(self, client: int, fresh: int, stale: int) -> None:
+        """One teacher-assembly event: ``fresh`` sampled pool entries
+        passed the staleness gate, ``stale`` were skipped (expired window
+        or older than ``max_staleness``)."""
+        self.gate_fresh[client] += fresh
+        self.gate_stale[client] += stale
+
+    def stale_fraction(self, client: int) -> float:
+        """Fraction of this client's sampled teachers skipped as stale
+        (0.0 when the client never sampled any)."""
+        total = self.gate_fresh[client] + self.gate_stale[client]
+        return self.gate_stale[client] / total if total else 0.0
+
+    def gate_summary(self) -> Dict[int, Dict[str, float]]:
+        clients = sorted(set(self.gate_fresh) | set(self.gate_stale))
+        return {c: {"fresh": float(self.gate_fresh[c]),
+                    "stale": float(self.gate_stale[c]),
+                    "stale_frac": self.stale_fraction(c)}
+                for c in clients}
 
     def bytes_per_step(self, num_steps: int) -> float:
         """Total traffic amortized over the run length."""
@@ -48,6 +78,8 @@ class CommMeter:
             "num_messages": float(self.num_messages),
             "num_edges": float(len(self.by_edge)),
             "max_edge_bytes": float(max(self.by_edge.values(), default=0)),
+            "stale_skips": float(sum(self.gate_stale.values())),
+            "rejected_publishes": float(self.rejected_publishes),
         }
 
     def format_table(self) -> str:

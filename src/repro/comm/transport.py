@@ -15,6 +15,18 @@ A transport is addressed by directed edges (src, dst) and measures time in
 Both are deliberately synchronous-polling: the runtime calls ``poll(dst,
 step)`` at step boundaries, mirroring how a real deployment would drain a
 message queue between optimization steps.
+
+Async-runtime clock convention: when the trainer is driven by
+`core/scheduler.AsyncScheduler`, the ``step`` arguments are *wall ticks*
+(real time), not any client's local step count. Latency and bandwidth are
+therefore wall-tick quantities: a fixed 2-tick propagation delay spans two
+local steps of a 1× client but only half a local step of a 4× (slow)
+client — heterogeneity changes how much *training progress* a message
+misses, not how long the wire holds it. ``client_rates`` adds the
+sender-side half of that interaction: a client that steps r× slower is
+modeled with an r× slower uplink (its transmissions occupy the edge r×
+as many wall ticks), so slow clients both publish rarely *and* ship
+slowly.
 """
 from __future__ import annotations
 
@@ -92,9 +104,14 @@ class SimulatedNetwork(Transport):
 
     def __init__(self, latency: int = 0, bandwidth: Optional[int] = None,
                  drop_prob: float = 0.0, seed: int = 0,
-                 per_edge: Optional[Dict[Edge, EdgeSpec]] = None):
+                 per_edge: Optional[Dict[Edge, EdgeSpec]] = None,
+                 client_rates: Optional[Dict[int, int]] = None):
         self.default = EdgeSpec(latency, bandwidth, drop_prob)
         self.per_edge = dict(per_edge or {})
+        # wall ticks per local step of each client (1 = full speed); a
+        # slow sender's uplink serializes r× slower in wall-tick terms
+        self.client_rates = {int(c): int(r)
+                             for c, r in (client_rates or {}).items()}
         self.rng = np.random.default_rng(seed)
         self._inflight: Dict[Edge, List[_InFlight]] = defaultdict(list)
         self._edge_free_at: Dict[Edge, int] = defaultdict(int)
@@ -104,6 +121,9 @@ class SimulatedNetwork(Transport):
     def spec(self, edge: Edge) -> EdgeSpec:
         return self.per_edge.get(edge, self.default)
 
+    def rate(self, client: int) -> int:
+        return max(self.client_rates.get(client, 1), 1)
+
     def send(self, src, dst, payload, step) -> None:
         edge = (src, dst)
         spec = self.spec(edge)
@@ -112,8 +132,11 @@ class SimulatedNetwork(Transport):
             self.dropped_count += 1
             return
         start = max(step, self._edge_free_at[edge])
+        # effective uplink of a rate-r sender is bandwidth/r bytes per
+        # wall tick; propagation latency is a link property and doesn't
+        # scale with the sender's compute
         tx_steps = 0 if not spec.bandwidth else \
-            int(math.ceil(len(payload) / spec.bandwidth))
+            int(math.ceil(len(payload) * self.rate(src) / spec.bandwidth))
         finish = start + tx_steps
         self._edge_free_at[edge] = finish
         self._inflight[edge].append(

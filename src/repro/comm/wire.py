@@ -48,8 +48,25 @@ _DTYPES = {
     3: np.dtype("<u2"),
     4: np.dtype("<i1"),
     5: np.dtype("<u8"),
+    6: np.dtype("<u4"),
 }
 _DTYPE_CODES = {v: k for k, v in _DTYPES.items()}
+
+
+class NonFiniteError(ValueError):
+    """Raised when a codec refuses to put NaN/±inf on the wire."""
+
+
+def _check_finite(name: str, arr: np.ndarray) -> None:
+    """Codecs refuse to put NaN/±inf on the wire: a diverged teacher's
+    predictions would poison every student that decodes them, so the
+    failure surfaces at the *publisher* (the runtime skips that publish
+    and meters it) instead of corrupting remote losses. Checked on the
+    *wire-dtype* arrays as well as the inputs — a finite f32 logit
+    beyond ±65504 overflows to inf in an f16 cast."""
+    if not np.all(np.isfinite(arr)):
+        raise NonFiniteError(
+            f"non-finite values in {name!r}: refusing to encode")
 
 
 # ---------------------------------------------------------------------------
@@ -277,6 +294,7 @@ class Codec:
         if self.emb_encoding == "none" or "embedding" not in outs:
             return
         emb = np.asarray(outs["embedding"], np.float32)
+        _check_finite("embedding", emb)
         if self.emb_encoding == "int8":
             q, scale = quantize_emb_int8(emb)
             arrays["emb_q"] = q
@@ -307,7 +325,12 @@ class DenseCodec(Codec):
     def encode(self, src, sent_step, t0, sample_ids, outs) -> bytes:
         arrays: Dict[str, np.ndarray] = {
             "sample_ids": np.asarray(sample_ids, np.uint64)}
-        arrays["heads"] = _stack_heads(outs).astype(self.logit_dtype)
+        heads = _stack_heads(outs)
+        _check_finite("logits", heads)
+        with np.errstate(over="ignore"):  # _check_finite reports overflow
+            arrays["heads"] = heads.astype(self.logit_dtype)
+        if arrays["heads"].dtype.itemsize < 4:  # f16: catch overflow → inf
+            _check_finite("logits (f16 wire cast)", arrays["heads"])
         self._encode_emb(arrays, outs)
         C = int(outs["logits"].shape[-1])
         return _serialize(PredictionMessage(src, sent_step, t0, C, arrays),
@@ -325,7 +348,7 @@ class TopKCodec(Codec):
     """Top-k packed heads: (vals, idx, lse) per head per sample.
 
     idx travels as u16 whenever the class count fits (vocab ≤ 65535),
-    else i32; vals as f16 or f32. Densify spreads the truncated tail mass
+    else u32; vals as f16 or f32. Densify spreads the truncated tail mass
     uniformly so confidence stays exact (see `densify_topk`).
     """
 
@@ -349,10 +372,15 @@ class TopKCodec(Codec):
         vals, idx, lse = ops.topk_wire(
             jnp.asarray(heads.reshape(W * H * B, C)), k,
             use_pallas=self.use_pallas)
-        idx_dt = np.dtype("<u2") if C <= 0xFFFF else np.dtype("<i4")
+        # u16 while the vocab fits, u32 beyond (vocab ≥ 2**16 — LLM heads)
+        idx_dt = np.dtype("<u2") if C <= 0xFFFF else np.dtype("<u4")
+        with np.errstate(over="ignore"):  # _check_finite reports overflow
+            wire_vals = np.asarray(vals).reshape(W, H, B, k) \
+                .astype(self.val_dtype)
+        if wire_vals.dtype.itemsize < 4:  # f16: catch overflow → inf
+            _check_finite("vals (f16 wire cast)", wire_vals)
         return {
-            "vals": np.asarray(vals).reshape(W, H, B, k)
-            .astype(self.val_dtype),
+            "vals": wire_vals,
             "idx": np.asarray(idx).reshape(W, H, B, k).astype(idx_dt),
             "lse": np.asarray(lse, np.float32).reshape(W, H, B),
         }
@@ -360,7 +388,9 @@ class TopKCodec(Codec):
     def encode(self, src, sent_step, t0, sample_ids, outs) -> bytes:
         arrays: Dict[str, np.ndarray] = {
             "sample_ids": np.asarray(sample_ids, np.uint64)}
-        arrays.update(self._pack(_stack_heads(outs)))
+        heads = _stack_heads(outs)
+        _check_finite("logits", heads)
+        arrays.update(self._pack(heads))
         self._encode_emb(arrays, outs)
         C = int(outs["logits"].shape[-1])
         return _serialize(PredictionMessage(src, sent_step, t0, C, arrays),

@@ -16,6 +16,7 @@ from repro.core.graph import (
     graph_distance_matrix,
 )
 from repro.core.runtime import DecentralizedTrainer, RunConfig
+from repro.core.scheduler import AsyncScheduler, ScheduleConfig, run_async
 
 __all__ = [
     "MHDConfig",
@@ -31,4 +32,7 @@ __all__ = [
     "graph_distance_matrix",
     "DecentralizedTrainer",
     "RunConfig",
+    "AsyncScheduler",
+    "ScheduleConfig",
+    "run_async",
 ]

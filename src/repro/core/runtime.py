@@ -31,6 +31,23 @@ Exchange modes (``exchange=``):
 Clients with no usable teachers (isolated topologies, dropped/expired
 mail) fall back to a supervised-only step — every topology in
 `core/graph.py` trains end-to-end.
+
+Stepping models:
+  * ``step(t)`` — the synchronous loop: every client takes one step at
+    every global step t, pools refresh on the shared S_P cadence.
+  * `core/scheduler.AsyncScheduler` — per-client logical clocks over a
+    shared *wall clock*; drives the same per-client primitives exposed
+    here (``step_client``, ``_publish_clients``, ``_pull_client``,
+    ``_comm_tick``) on heterogeneous cadences. The synchronous loop is
+    the equal-rates special case, and the scheduler reproduces it
+    bitwise (tests/test_scheduler.py).
+
+Bounded staleness (``RunConfig.max_staleness``): when set, a sampled
+teacher older than ``max_staleness`` steps (entry timestamp vs the
+stepping client's current step — params and prediction modes alike) is
+skipped at teacher-assembly time; a client whose whole sample is stale
+falls back to the supervised-only step. Skips surface per client as the
+``stale_skipped`` metric and in `CommMeter.gate_summary()`.
 """
 from __future__ import annotations
 
@@ -59,6 +76,10 @@ class RunConfig:
     eval_every: int = 200
     eval_batch_size: int = 256
     seed: int = 0
+    # bounded-staleness gate: max age (in steps / wall ticks) of a pool
+    # entry that may still serve as a distillation teacher. None =
+    # unbounded (the paper's default — pool lag is part of the method).
+    max_staleness: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -224,22 +245,36 @@ class DecentralizedTrainer:
 
     def _maybe_update_pools(self, step: int) -> None:
         if step % self.mhd_cfg.pool_update_every != 0:
-            if self.exchange != "params":
-                self.bus.deliver(step)  # drain in-flight (latency) mail
-                self._resolve_pending(step)
+            self._comm_tick(step)
             return
         if self.exchange != "params":
             self._publish_round(step)
             self._resolve_pending(step)  # older rounds' pulls first
         adj = self.graph_fn(step)
         for c in self.clients:
-            nbrs = adj[c.client_id]
-            if not nbrs:
-                continue
-            j = int(self.rng.choice(list(nbrs)))
-            entry = self._fetch_entry(c, j, step)
-            if entry is not None:
-                c.pool.insert(entry)
+            self._pull_client(c, step, adj)
+
+    def _comm_tick(self, step: int) -> None:
+        """Between pool rounds: drain in-flight (latency) mail and complete
+        late pulls. No-op in the legacy params mode."""
+        if self.exchange != "params":
+            self.bus.deliver(step)
+            self._resolve_pending(step)
+
+    def _pull_client(self, client: ClientState, step: int,
+                     adj: Optional[Adjacency] = None) -> None:
+        """One pool-refresh pull for one client: draw a random in-neighbor
+        (shared rng — clients pulling at the same step consume the stream
+        in client-id order) and insert its entry if usable. Pass a
+        precomputed ``adj`` when pulling for many clients at one step."""
+        nbrs = (adj if adj is not None
+                else self.graph_fn(step))[client.client_id]
+        if not nbrs:
+            return
+        j = int(self.rng.choice(list(nbrs)))
+        entry = self._fetch_entry(client, j, step)
+        if entry is not None:
+            client.pool.insert(entry)
 
     def _fetch_entry(self, client: ClientState, j: int,
                      step: int) -> Optional[PoolEntry]:
@@ -280,29 +315,51 @@ class DecentralizedTrainer:
     # -- prediction exchange (repro.comm) ----------------------------------
 
     def _publish_round(self, step: int) -> None:
-        """Every client encodes its predictions on the next ``horizon``
-        public batches and publishes them on the bus (paper §3.2: only
-        predictions and sample hashes cross the wire)."""
+        """Synchronous publish: every client with a subscriber encodes and
+        publishes, then mail is delivered. Delivery is unconditional so
+        in-flight (latency) mail keeps flowing even at a boundary where
+        G_t leaves nobody subscribed — every step drains the transport."""
+        self._publish_clients(None, step)
+        self.bus.deliver(step)
+
+    def _publish_clients(self, client_ids: Optional[Sequence[int]],
+                         step: int) -> int:
+        """The selected clients (None = all) encode predictions on the next
+        ``horizon`` public batches and publish them on the bus (paper §3.2:
+        only predictions and sample hashes cross the wire). Returns the
+        number of clients that had a receiver under G_t; the caller is
+        responsible for ``bus.deliver``. A publisher whose outputs the
+        codec refuses (non-finite — a diverged client) is skipped and
+        metered, never crashing the round."""
+        from repro.comm import NonFiniteError
+
         adj = self.graph_fn(step)
         subscribed = {j for nbrs in adj for j in nbrs}
-        if not subscribed:
-            return
+        selected = self.clients if client_ids is None else \
+            [self.clients[i] for i in client_ids]
+        todo = [c for c in selected if c.client_id in subscribed]
+        if not todo:
+            return 0
         W = self.horizon
         ids = np.stack([self.public.sample_ids(step + w) for w in range(W)])
         batches = [{k: jnp.asarray(v)
                     for k, v in self.public.sample(step + w).items()}
                    for w in range(W)]
-        for c in self.clients:
-            if c.client_id not in subscribed:
-                continue  # no receiver under G_t — skip the forward work
+        for c in todo:
             apply_fn = self._teacher_apply(c.bundle)
             frames = [apply_fn(c.params, b) for b in batches]
             outs = {key: np.stack([np.asarray(f[key], np.float32)
                                    for f in frames])
                     for key in ("embedding", "logits", "aux_logits")}
-            payload = self.codec.encode(c.client_id, step, step, ids, outs)
+            try:
+                payload = self.codec.encode(c.client_id, step, step, ids,
+                                            outs)
+            except NonFiniteError:
+                if self.meter is not None:
+                    self.meter.rejected_publishes += 1
+                continue
             self.bus.publish(c.client_id, payload, step)
-        self.bus.deliver(step)
+        return len(todo)
 
     def _decode_window(self, mail) -> Any:
         from repro.comm import PredictionWindow
@@ -319,16 +376,25 @@ class DecentralizedTrainer:
     # -- teacher assembly ---------------------------------------------------
 
     def _stack_teachers(self, client: ClientState, public_batch,
-                        step: int) -> Optional[Any]:
-        """Sample Δ pool entries and stack their public-batch outputs —
-        scored locally from raw params in legacy mode, decoded from
-        received predictions in prediction modes. Returns None when the
-        client has no usable teacher (supervised fallback)."""
+                        step: int) -> Tuple[Optional[Any], int]:
+        """Sample Δ pool entries, drop the ones the bounded-staleness gate
+        rejects, and stack the survivors' public-batch outputs — scored
+        locally from raw params in legacy mode, decoded from received
+        predictions in prediction modes. Returns ``(teachers, skipped)``;
+        teachers is None when nothing survived the gate (supervised
+        fallback, never an error)."""
         entries = client.pool.sample(self.mhd_cfg.delta)
+        sampled = len(entries)
         if self.exchange != "params":
             entries = client.pool.usable(entries, step)
+        ms = self.run_cfg.max_staleness
+        if ms is not None:
+            entries = [e for e in entries if step - e.step <= ms]
+        skipped = sampled - len(entries)
+        if self.meter is not None and sampled:
+            self.meter.record_gate(client.client_id, len(entries), skipped)
         if not entries:
-            return None
+            return None, skipped
         # pad to Δ by cycling over the originally sampled entries
         entries = [entries[i % len(entries)]
                    for i in range(self.mhd_cfg.delta)]
@@ -341,33 +407,48 @@ class DecentralizedTrainer:
             else:
                 outs.append({k: jnp.asarray(v)
                              for k, v in e.params.frame(step).items()})
-        return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *outs)
+        return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *outs), skipped
 
     # -- training loop -----------------------------------------------------
+
+    def step_client(self, c: ClientState, public_batch, t: int,
+                    opt_step: Optional[int] = None) -> Dict[str, float]:
+        """One local optimization step for one client at (wall) step t.
+
+        ``opt_step`` is the client's optimizer/LR-schedule step — its
+        *local* step count under the async scheduler; defaults to t (the
+        synchronous loop, where wall and local clocks coincide)."""
+        opt_step = t if opt_step is None else opt_step
+        if self.exchange != "params":
+            self.bus.advance(c.client_id, t)
+        private_np = c.private_iter.next()
+        private_batch = {k: jnp.asarray(v) for k, v in private_np.items()}
+        teachers, skipped = self._stack_teachers(c, public_batch, t)
+        rng = jax.random.PRNGKey((t << 10) + c.client_id)
+        if teachers is None:
+            update = self._supervised_update(c.bundle)
+            c.params, c.opt_state, metrics = update(
+                c.params, c.opt_state, private_batch, jnp.asarray(opt_step))
+        else:
+            update = self._client_update(c.bundle)
+            c.params, c.opt_state, metrics = update(
+                c.params, c.opt_state, private_batch, public_batch,
+                teachers, jnp.asarray(opt_step), rng)
+        out = {f"c{c.client_id}/{k}": float(v) for k, v in metrics.items()}
+        out[f"c{c.client_id}/stale_skipped"] = float(skipped)
+        out[f"c{c.client_id}/distill_active"] = float(teachers is not None)
+        if self.exchange != "params":
+            # -1.0 = empty mailbox (bus.EMPTY_STALENESS), not "fresh"
+            out[f"c{c.client_id}/mail_staleness"] = \
+                self.bus.staleness(c.client_id, t)
+        return out
 
     def step(self, t: int) -> Dict[str, float]:
         public_np = self.public.sample(t)
         public_batch = {k: jnp.asarray(v) for k, v in public_np.items()}
         all_metrics: Dict[str, float] = {}
         for c in self.clients:
-            private_np = c.private_iter.next()
-            private_batch = {k: jnp.asarray(v) for k, v in private_np.items()}
-            teachers = self._stack_teachers(c, public_batch, t)
-            rng = jax.random.PRNGKey((t << 10) + c.client_id)
-            if teachers is None:
-                update = self._supervised_update(c.bundle)
-                c.params, c.opt_state, metrics = update(
-                    c.params, c.opt_state, private_batch, jnp.asarray(t))
-            else:
-                update = self._client_update(c.bundle)
-                c.params, c.opt_state, metrics = update(
-                    c.params, c.opt_state, private_batch, public_batch,
-                    teachers, jnp.asarray(t), rng)
-            for k, v in metrics.items():
-                all_metrics[f"c{c.client_id}/{k}"] = float(v)
-            if self.exchange != "params":
-                all_metrics[f"c{c.client_id}/mail_staleness"] = \
-                    self.bus.staleness(c.client_id, t)
+            all_metrics.update(self.step_client(c, public_batch, t))
         self._maybe_update_pools(t + 1)
         return all_metrics
 

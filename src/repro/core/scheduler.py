@@ -1,0 +1,228 @@
+"""Async decentralized scheduler: per-client logical clocks over a wall
+clock, with bounded-staleness distillation.
+
+The paper's agents communicate over an arbitrary graph with no global
+synchronization barrier, but `DecentralizedTrainer.step` steps every
+client in lockstep. This module removes the barrier while keeping the
+trainer's per-client primitives intact:
+
+Clock model
+  One integer *wall clock* advances in ticks (real time). Client i has a
+  step-rate ``rates[i] = r`` (wall ticks per local step, r ≥ 1): it takes
+  its n-th local step at wall tick n·r — a 1× client steps every tick, a
+  4× client every fourth. All communication quantities (transport latency
+  and bandwidth, mail timestamps, window horizons, ``max_staleness``) are
+  measured in wall ticks, so a fixed-latency link costs a fast client
+  more local steps of staleness than a slow one.
+
+  Public batches are indexed by wall tick (`PublicPool` is deterministic
+  in the step), so co-stepping clients still score the same samples —
+  the paper's setup — while a slow client simply participates in fewer
+  of them. A client's optimizer/LR schedule advances with its *local*
+  step count, its distillation rng with the wall tick.
+
+Pool cadence
+  The synchronous trainer refreshes pools every S_P global steps; here
+  every client publishes its prediction window and pulls one neighbor
+  entry every S_P *local* steps, i.e. every ``r·S_P`` wall ticks. Between
+  rounds, in-flight mail is drained every tick.
+
+Staleness
+  The bounded-staleness gate lives in the trainer
+  (``RunConfig.max_staleness``, enforced per-teacher at assembly time in
+  ``_stack_teachers``): mail or params older than the bound never teach;
+  a fully-stale client falls back to a supervised-only step rather than
+  crash or block. The bus's per-client clocks (``bus.advance`` /
+  ``bus.poll_fresh``) expose the same freshness view to telemetry.
+
+Lockstep equivalence
+  With equal rates, a lossless zero-latency transport, and
+  ``max_staleness=None``, every tick executes exactly the synchronous
+  loop's operation sequence (same shared-rng draws, same publish/deliver/
+  pull order) — ``AsyncScheduler.tick()`` is then *bitwise* equal to
+  ``DecentralizedTrainer.step()``, which tests/test_scheduler.py asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.runtime import DecentralizedTrainer
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    """Per-client step rates: ``rates[i]`` wall ticks per local step of
+    client i (1 = steps every tick; 4 = a 4× slower client)."""
+
+    rates: Tuple[int, ...]
+
+    def __post_init__(self):
+        if not self.rates:
+            raise ValueError("ScheduleConfig needs at least one client")
+        if any(int(r) < 1 or int(r) != r for r in self.rates):
+            raise ValueError(f"rates must be integers >= 1: {self.rates}")
+
+    @classmethod
+    def uniform(cls, num_clients: int, rate: int = 1) -> "ScheduleConfig":
+        return cls(tuple([rate] * num_clients))
+
+    @classmethod
+    def skewed(cls, num_clients: int, slow_rate: int,
+               num_slow: int = 1) -> "ScheduleConfig":
+        """The benchmark's fast/slow split: the last ``num_slow`` clients
+        step ``slow_rate``× slower than the rest."""
+        fast = num_clients - num_slow
+        if fast < 0:
+            raise ValueError("num_slow exceeds num_clients")
+        return cls(tuple([1] * fast + [slow_rate] * num_slow))
+
+    @property
+    def max_rate(self) -> int:
+        return max(self.rates)
+
+
+class AsyncScheduler:
+    """Drives a `DecentralizedTrainer` tick by tick with per-client
+    clocks. The trainer must be freshly constructed (the scheduler owns
+    time from wall tick 0; construction-time pool seeding is shared with
+    the synchronous path)."""
+
+    def __init__(self, trainer: DecentralizedTrainer,
+                 schedule: Optional[ScheduleConfig] = None):
+        self.trainer = trainer
+        k = len(trainer.clients)
+        self.schedule = schedule or ScheduleConfig.uniform(k)
+        if len(self.schedule.rates) != k:
+            raise ValueError(
+                f"{len(self.schedule.rates)} rates for {k} clients")
+        self.rates = [int(r) for r in self.schedule.rates]
+        self.wall = 0
+        self.local_steps = [0] * k  # completed local steps per client
+        if trainer.exchange != "params":
+            need = self.schedule.max_rate * \
+                trainer.mhd_cfg.pool_update_every
+            if trainer.horizon < need:
+                warnings.warn(
+                    f"prediction horizon {trainer.horizon} < slowest "
+                    f"client's publish gap {need} wall ticks: its windows "
+                    f"will expire between publishes and students will fall "
+                    f"back to supervised-only for the gap (set "
+                    f"CommConfig.horizon >= max_rate * S_P to cover it)",
+                    stacklevel=2)
+
+    # -- cadence predicates ------------------------------------------------
+
+    def due(self, client_id: int, wall: int) -> bool:
+        """Does this client take a local step at this wall tick?"""
+        return wall % self.rates[client_id] == 0
+
+    def pool_due(self, client_id: int, s: int) -> bool:
+        """Is wall tick ``s`` this client's pool-refresh boundary (every
+        S_P local steps = rate·S_P wall ticks)?"""
+        cadence = self.rates[client_id] * \
+            self.trainer.mhd_cfg.pool_update_every
+        return s % cadence == 0
+
+    # -- one wall tick -----------------------------------------------------
+
+    def tick(self) -> Dict[str, float]:
+        """Advance the wall clock by one tick: step every due client (in
+        client-id order, against the tick's shared public batch), then run
+        the communication phase. Returns the due clients' step metrics."""
+        tr = self.trainer
+        wall = self.wall
+        due = [c for c in tr.clients if self.due(c.client_id, wall)]
+        metrics: Dict[str, float] = {}
+        if due:
+            public_np = tr.public.sample(wall)
+            public_batch = {k: jnp.asarray(v) for k, v in public_np.items()}
+            for c in due:
+                cid = c.client_id
+                m = tr.step_client(c, public_batch, wall,
+                                   opt_step=self.local_steps[cid])
+                self.local_steps[cid] += 1
+                m[f"c{cid}/local_step"] = float(self.local_steps[cid])
+                metrics.update(m)
+        self._comm_phase(wall + 1)
+        self.wall = wall + 1
+        return metrics
+
+    def _comm_phase(self, s: int) -> None:
+        """Mirror of the synchronous `_maybe_update_pools(s)`, restricted
+        to the clients whose own pool cadence fires at wall tick ``s``."""
+        tr = self.trainer
+        pool_due = [c for c in tr.clients if self.pool_due(c.client_id, s)]
+        if not pool_due:
+            tr._comm_tick(s)
+            return
+        if tr.exchange != "params":
+            tr._publish_clients([c.client_id for c in pool_due], s)
+            tr.bus.deliver(s)  # unconditional: latency mail flows every tick
+            tr._resolve_pending(s)
+        adj = tr.graph_fn(s)
+        for c in pool_due:
+            tr._pull_client(c, s, adj)
+
+    # -- driving loops -----------------------------------------------------
+
+    def run(self, wall_ticks: int,
+            eval_arrays: Optional[Dict[str, np.ndarray]] = None,
+            eval_every: int = 0,
+            log_every: int = 0) -> List[Tuple[int, Dict[str, float]]]:
+        """Run ``wall_ticks`` ticks; optionally evaluate every
+        ``eval_every`` ticks. Returns the (tick, eval-metrics) history."""
+        history: List[Tuple[int, Dict[str, float]]] = []
+        for _ in range(wall_ticks):
+            metrics = self.tick()
+            t = self.wall - 1
+            if log_every and t % log_every == 0 and metrics:
+                losses = [v for k, v in metrics.items()
+                          if k.endswith("/loss")]
+                print(f"tick {t}: mean stepped-client loss "
+                      f"{float(np.mean(losses)):.4f}")
+            if eval_arrays is not None and eval_every and \
+                    (t + 1) % eval_every == 0:
+                history.append((t + 1, self.trainer.evaluate(eval_arrays)))
+        return history
+
+    # -- telemetry ---------------------------------------------------------
+
+    def freshness_report(self,
+                         max_staleness: Optional[int] = None
+                         ) -> Dict[int, Dict[str, float]]:
+        """Per-client view of mailbox freshness against each client's own
+        clock (prediction modes only): total mailbox size, how much of it
+        passes the staleness bound, and the bus-clock reading."""
+        tr = self.trainer
+        if tr.exchange == "params":
+            return {}
+        ms = max_staleness if max_staleness is not None else \
+            tr.run_cfg.max_staleness
+        out: Dict[int, Dict[str, float]] = {}
+        for c in tr.clients:
+            cid = c.client_id
+            box = tr.bus.mailbox(cid)
+            fresh = tr.bus.poll_fresh(cid, ms)
+            out[cid] = {
+                "clock": float(tr.bus.clock(cid)),
+                "mailbox": float(len(box)),
+                "fresh": float(len(fresh)),
+                "local_steps": float(self.local_steps[cid]),
+            }
+        return out
+
+
+def run_async(trainer: DecentralizedTrainer, wall_ticks: int,
+              rates: Optional[Sequence[int]] = None,
+              **run_kw) -> AsyncScheduler:
+    """Convenience: wrap a trainer in a scheduler and run it."""
+    sched = AsyncScheduler(
+        trainer,
+        ScheduleConfig(tuple(int(r) for r in rates)) if rates else None)
+    sched.run(wall_ticks, **run_kw)
+    return sched

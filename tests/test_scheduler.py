@@ -1,0 +1,224 @@
+"""Tests for the async decentralized scheduler (`core/scheduler.py`):
+lockstep equivalence with the synchronous trainer, bounded-staleness
+gating (stale mail → supervised fallback, never a crash), per-client bus
+clocks, and the empty-mailbox staleness sentinel."""
+import jax
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig, LoopbackTransport, PredictionBus, \
+    SimulatedNetwork
+from repro.core import AsyncScheduler, ScheduleConfig, run_async
+from repro.core.graph import chain_graph, cycle_graph, isolated_graph
+
+from test_comm import _make_trainer
+
+
+def _params_bitwise_equal(clients_a, clients_b) -> bool:
+    for ca, cb in zip(clients_a, clients_b):
+        eq = jax.tree.map(
+            lambda a, b: bool(np.array_equal(np.asarray(a), np.asarray(b))),
+            ca.params, cb.params)
+        if not all(jax.tree.leaves(eq)):
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# schedule config
+# ---------------------------------------------------------------------------
+
+def test_schedule_config_validation():
+    with pytest.raises(ValueError):
+        ScheduleConfig(rates=())
+    with pytest.raises(ValueError):
+        ScheduleConfig(rates=(1, 0))
+    with pytest.raises(ValueError):
+        ScheduleConfig(rates=(1, 1.5))
+    assert ScheduleConfig.uniform(3).rates == (1, 1, 1)
+    assert ScheduleConfig.skewed(4, slow_rate=4).rates == (1, 1, 1, 4)
+    assert ScheduleConfig.skewed(4, 4, num_slow=2).max_rate == 4
+
+
+def test_scheduler_rejects_rate_count_mismatch():
+    tr = _make_trainer("params", K=3, steps=2)
+    with pytest.raises(ValueError):
+        AsyncScheduler(tr, ScheduleConfig(rates=(1, 1)))
+
+
+# ---------------------------------------------------------------------------
+# lockstep equivalence (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_async_equals_sync_params_mode_bitwise():
+    """Equal rates ⇒ every tick replays the synchronous step exactly:
+    identical metrics and bitwise-identical final params."""
+    steps = 6
+    t_sync = _make_trainer("params", steps=steps, delta=2, m=1, s_p=2)
+    t_async = _make_trainer("params", steps=steps, delta=2, m=1, s_p=2)
+    sched = AsyncScheduler(t_async)
+    for t in range(steps):
+        m_sync, m_async = t_sync.step(t), sched.tick()
+        for key, v in m_sync.items():
+            assert m_async[key] == v, (t, key)
+    assert _params_bitwise_equal(t_sync.clients, t_async.clients)
+
+
+def test_async_equals_sync_prediction_mode_bitwise():
+    """Acceptance: async scheduler with equal rates + lossless zero-latency
+    transport + unbounded staleness is bitwise-equal to the synchronous
+    prediction-exchange trainer."""
+    steps = 6
+    kw = dict(steps=steps, delta=1, m=1, s_p=2,
+              comm=CommConfig(topk=8, val_dtype="float32",
+                              emb_encoding="float32", horizon=steps + 4))
+    t_sync = _make_trainer("prediction_topk", **kw)
+    t_async = _make_trainer("prediction_topk", **kw)
+    sched = AsyncScheduler(t_async, ScheduleConfig.uniform(3))
+    for t in range(steps):
+        m_sync, m_async = t_sync.step(t), sched.tick()
+        for key, v in m_sync.items():
+            assert m_async[key] == v, (t, key)
+    assert _params_bitwise_equal(t_sync.clients, t_async.clients)
+    assert t_sync.meter.total_bytes == t_async.meter.total_bytes
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous rates
+# ---------------------------------------------------------------------------
+
+def test_rate_skew_steps_clients_at_their_own_cadence():
+    """A 4× client takes a quarter of the local steps and reports
+    `local_step`; fast clients are unaffected by its presence."""
+    tr = _make_trainer("params", K=3, steps=8)
+    sched = AsyncScheduler(tr, ScheduleConfig(rates=(1, 1, 4)))
+    seen_c2 = 0
+    for w in range(8):
+        m = sched.tick()
+        assert ("c2/loss" in m) == (w % 4 == 0)
+        seen_c2 += int("c2/loss" in m)
+        assert "c0/loss" in m and "c1/loss" in m
+    assert sched.local_steps == [8, 8, 2]
+    assert seen_c2 == 2
+
+
+def test_rate_skewed_lossy_run_completes_with_metrics():
+    """Acceptance: a rate-skewed lossy run completes without error while
+    reporting per-client staleness/skip metrics."""
+    net = SimulatedNetwork(latency=1, bandwidth=32 * 1024, drop_prob=0.25,
+                           seed=3, client_rates={2: 4})
+    tr = _make_trainer("prediction_topk", K=3, steps=16, s_p=2,
+                       graph=cycle_graph(3),
+                       comm=CommConfig(topk=4, horizon=4), transport=net)
+    tr.run_cfg.max_staleness = 5
+    # horizon 4 < the straggler's 8-tick publish gap: the scheduler warns
+    # about the coverage hole instead of failing silently
+    with pytest.warns(UserWarning, match="publish gap"):
+        sched = AsyncScheduler(tr, ScheduleConfig(rates=(1, 1, 4)))
+    for _ in range(16):
+        m = sched.tick()
+        for key in ("loss", "stale_skipped", "mail_staleness"):
+            assert f"c0/{key}" in m
+        assert np.isfinite(m["c0/loss"])
+    # the staleness gate actually fired somewhere in this lossy run
+    assert sum(tr.meter.gate_stale.values()) > 0
+    report = sched.freshness_report()
+    assert report[2]["clock"] == 12.0  # slow client last stepped at tick 12
+    assert report[0]["clock"] == 15.0
+    assert all(r["fresh"] <= r["mailbox"] for r in report.values())
+
+
+# ---------------------------------------------------------------------------
+# bounded-staleness gating: supervised fallback, never a crash
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("graph_fn", [chain_graph, cycle_graph,
+                                      isolated_graph])
+def test_stale_mail_falls_back_to_supervised(graph_fn):
+    """max_staleness=0 with a 2-tick-latency transport means no mail is
+    ever fresh enough: every client must run supervised-only steps on any
+    topology, with no exception raised."""
+    tr = _make_trainer("prediction_topk", K=3, steps=6, s_p=2,
+                       graph=graph_fn(3),
+                       comm=CommConfig(topk=4, horizon=8),
+                       transport=SimulatedNetwork(latency=2, seed=0))
+    tr.run_cfg.max_staleness = 0
+    sched = AsyncScheduler(tr)
+    for _ in range(6):
+        m = sched.tick()
+        for cid in range(3):
+            assert m[f"c{cid}/distill_active"] == 0.0
+            assert np.isfinite(m[f"c{cid}/loss"])
+
+
+@pytest.mark.parametrize("graph_fn", [chain_graph, cycle_graph,
+                                      isolated_graph])
+def test_unbounded_staleness_never_crashes(graph_fn):
+    """The same topologies with the gate wide open and a lossy link also
+    complete; connected clients eventually distill."""
+    tr = _make_trainer("prediction_topk", K=3, steps=6, s_p=2,
+                       graph=graph_fn(3),
+                       comm=CommConfig(topk=4, horizon=8),
+                       transport=SimulatedNetwork(drop_prob=0.5, seed=1))
+    sched = run_async(tr, 6)
+    assert sched.wall == 6
+
+
+def test_params_mode_staleness_gate():
+    """The gate also applies to legacy param pools: entries older than the
+    bound are skipped and counted in `stale_skipped`."""
+    tr = _make_trainer("params", K=3, steps=8, s_p=100)  # pools never refresh
+    tr.run_cfg.max_staleness = 2
+    sched = AsyncScheduler(tr)
+    m = None
+    for _ in range(6):
+        m = sched.tick()
+    # seed entries are from step 0; at t=5 they exceed max_staleness=2
+    assert all(m[f"c{cid}/distill_active"] == 0.0 for cid in range(3))
+    assert sum(m[f"c{cid}/stale_skipped"] for cid in range(3)) > 0
+
+
+# ---------------------------------------------------------------------------
+# bus clocks + staleness sentinel
+# ---------------------------------------------------------------------------
+
+def test_bus_clock_advance_is_monotone():
+    bus = PredictionBus(LoopbackTransport(), [(1,), (0,)], 2)
+    assert bus.clock(0) == 0
+    bus.advance(0, 5)
+    bus.advance(0, 3)  # stale advance: no-op
+    assert bus.clock(0) == 5
+
+
+def test_bus_poll_fresh_filters_by_client_clock():
+    bus = PredictionBus(LoopbackTransport(), [(1,), (0,)], 2)
+    bus.publish(1, b"m", step=2)
+    bus.deliver(2)
+    bus.advance(0, 10)
+    assert set(bus.poll_fresh(0, None)) == {1}  # unbounded
+    assert set(bus.poll_fresh(0, 8)) == {1}  # age 8 <= 8
+    assert bus.poll_fresh(0, 7) == {}  # age 8 > 7
+    assert bus.poll_fresh(1, 0) == {}  # empty mailbox
+
+
+def test_bus_staleness_empty_mailbox_sentinel():
+    """Regression (ISSUE 2 satellite): `bus.staleness()` on a mailbox that
+    has never received mail returns the documented -1.0 sentinel instead
+    of a value indistinguishable from perfectly fresh mail."""
+    bus = PredictionBus(LoopbackTransport(), [(1,), (0,)], 2)
+    assert bus.staleness(0, 0) == bus.EMPTY_STALENESS == -1.0
+    bus.publish(1, b"m", step=0)
+    bus.deliver(0)
+    assert bus.staleness(0, 3) == 3.0  # real mail: real staleness
+    assert bus.staleness(1, 3) == -1.0  # client 1 still has no mail
+
+
+def test_runtime_reports_sentinel_for_mailless_client():
+    """A chain's sink client never receives mail — its `mail_staleness`
+    metric must be the sentinel from the very first step, not garbage."""
+    tr = _make_trainer("prediction_topk", K=3, steps=2, s_p=2,
+                       graph=chain_graph(3),
+                       comm=CommConfig(topk=4, horizon=4))
+    m = tr.step(0)
+    assert m["c2/mail_staleness"] == -1.0
+    assert m["c0/mail_staleness"] >= 0.0  # c0 has mail from c1
