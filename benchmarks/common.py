@@ -5,6 +5,13 @@ scale (DESIGN.md §7.1): same protocol (partition skew s, γ_pub, checkpoint
 pools, confidence gating), synthetic class-conditional data, tiny ResNets.
 The reported numbers are orderings/deltas, not ImageNet absolutes.
 
+All runs go through the declarative `repro.exp` Experiment API: each
+``run_*`` helper builds an `ExperimentSpec` from a `BenchScale` and calls
+`Experiment.run()` — no hand-rolled trainer wiring. Helpers return plain
+JSON-serializable metric dicts; benchmarks that need live-object
+drill-downs (per-client params for hop accuracy) use ``run_mhd_result``
+and read ``result.trainer`` out-of-band.
+
 Output contract (benchmarks/run.py): each experiment prints
 ``name,us_per_call,derived`` CSV rows, where us_per_call is the mean
 wall-time per training step and derived is the headline metric.
@@ -12,24 +19,21 @@ wall-time per training step and derived is the headline metric.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Sequence
 
-import numpy as np
-
-from repro.core import (
-    MHDConfig,
-    DecentralizedTrainer,
-    RunConfig,
-    complete_graph,
-    cycle_graph,
-    islands_graph,
+from repro.exp import (
+    AlgorithmSpec,
+    ClientSpec,
+    DataSpec,
+    Experiment,
+    ExperimentResult,
+    ExperimentSpec,
+    OptimizerSpec,
+    PartitionSpec,
+    TopologySpec,
+    TrainSpec,
+    materialize_data,
 )
-from repro.core.supervised import eval_per_label_accuracy, train_supervised
-from repro.data import PartitionConfig, make_synthetic_vision, partition_dataset
-from repro.models.resnet import resnet_tiny, resnet_tiny34
-from repro.models.zoo import build_bundle
-from repro.optim.optimizers import OptimizerConfig, make_optimizer
 
 
 @dataclasses.dataclass
@@ -62,132 +66,136 @@ FULL = BenchScale(clients=6, labels=20, labels_per_client=5,
                   samples_per_label=300, steps=1200)
 
 
+def base_spec(scale: BenchScale, algorithm: AlgorithmSpec, *,
+              clients: Optional[Sequence[ClientSpec]] = None,
+              gamma_pub: Optional[float] = None,
+              skew: Optional[float] = None,
+              topology: str = "complete",
+              steps: Optional[int] = None) -> ExperimentSpec:
+    """The one place a `BenchScale` becomes an `ExperimentSpec`."""
+    steps = steps or scale.steps
+    return ExperimentSpec(
+        name=f"bench_{algorithm.name}",
+        algorithm=algorithm,
+        data=DataSpec(num_labels=scale.labels,
+                      samples_per_label=scale.samples_per_label,
+                      image_size=scale.image_size, noise=scale.noise,
+                      seed=scale.seed),
+        partition=PartitionSpec(
+            labels_per_client=scale.labels_per_client, assignment="random",
+            skew=scale.skew if skew is None else skew,
+            gamma_pub=scale.gamma_pub if gamma_pub is None else gamma_pub),
+        clients=tuple(clients) if clients is not None
+        else ExperimentSpec.uniform_fleet(scale.clients),
+        topology=TopologySpec(topology, islands=2),
+        optimizer=OptimizerSpec(init_lr=scale.lr, total_steps=steps,
+                                grad_clip_norm=scale.grad_clip),
+        train=TrainSpec(steps=steps, batch_size=scale.batch_size,
+                        public_batch_size=scale.batch_size,
+                        seed=scale.seed))
+
+
 def make_data(scale: BenchScale, gamma_pub: Optional[float] = None,
               skew: Optional[float] = None):
-    ds = make_synthetic_vision(
-        num_labels=scale.labels, samples_per_label=scale.samples_per_label,
-        image_size=scale.image_size, noise=scale.noise, seed=scale.seed)
-    test = make_synthetic_vision(
-        num_labels=scale.labels, samples_per_label=15,
-        image_size=scale.image_size, noise=scale.noise,
-        seed=scale.seed + 991, prototype_seed=scale.seed)
-    pcfg = PartitionConfig(
-        num_clients=scale.clients, num_labels=scale.labels,
-        labels_per_client=scale.labels_per_client, assignment="random",
-        skew=scale.skew if skew is None else skew,
-        gamma_pub=scale.gamma_pub if gamma_pub is None else gamma_pub,
-        seed=scale.seed)
-    part = partition_dataset(ds.labels, pcfg)
-    arrays = {"images": ds.images, "labels": ds.labels}
-    test_arrays = {"images": test.images, "labels": test.labels}
-    return arrays, test_arrays, part
+    """Pre-built data triple, shared across runs for comparability."""
+    spec = base_spec(scale, AlgorithmSpec("supervised"),
+                     gamma_pub=gamma_pub, skew=skew)
+    return materialize_data(spec.data, spec.partition, spec.num_clients)
 
 
-def run_mhd(scale: BenchScale, *, aux_heads: int = 3, nu_emb: float = 1.0,
-            nu_aux: float = 1.0, delta: int = 1, confidence: str = "max",
-            use_sl: bool = False, use_sf: bool = False,
-            skip_confident: bool = False, topology: str = "complete",
-            skew: Optional[float] = None, gamma_pub: Optional[float] = None,
-            bundles=None, steps: Optional[int] = None,
-            data=None) -> Dict[str, float]:
+def run_mhd_result(scale: BenchScale, *, aux_heads: int = 3,
+                   nu_emb: float = 1.0, nu_aux: float = 1.0, delta: int = 1,
+                   confidence: str = "max", use_sl: bool = False,
+                   use_sf: bool = False, skip_confident: bool = False,
+                   topology: str = "complete", skew: Optional[float] = None,
+                   gamma_pub: Optional[float] = None,
+                   clients: Optional[Sequence[ClientSpec]] = None,
+                   steps: Optional[int] = None,
+                   data=None) -> ExperimentResult:
+    """One MHD run; the full result (live trainer rides out-of-band)."""
+    if clients is None:
+        clients = ExperimentSpec.uniform_fleet(scale.clients,
+                                               aux_heads=aux_heads)
+    algo = AlgorithmSpec("mhd", {
+        "nu_emb": nu_emb, "nu_aux": nu_aux, "num_aux_heads": aux_heads,
+        "delta": delta, "confidence": confidence, "use_self": use_sf,
+        "use_same_level": use_sl,
+        "skip_when_student_confident": skip_confident,
+        "pool_size": min(scale.clients, 8),
+        "pool_update_every": scale.pool_every})
+    spec = base_spec(scale, algo, clients=clients, gamma_pub=gamma_pub,
+                     skew=skew, topology=topology, steps=steps)
+    return Experiment(spec, data=data).run()
+
+
+def run_mhd(scale: BenchScale, **kw) -> Dict[str, float]:
     """One MHD run; returns eval metrics + '_step_us' wall time per step."""
-    arrays, test_arrays, part = data or make_data(scale, gamma_pub, skew)
-    K = scale.clients
-    graph = {"complete": complete_graph(K),
-             "cycle": cycle_graph(K),
-             "islands": islands_graph(K, 2)}[topology]
-    if bundles is None:
-        bundles = [build_bundle(resnet_tiny(scale.labels,
-                                            num_aux_heads=aux_heads))
-                   for _ in range(K)]
-    steps = steps or scale.steps
-    opt = make_optimizer(OptimizerConfig(init_lr=scale.lr, total_steps=steps,
-                                         grad_clip_norm=scale.grad_clip))
-    mhd = MHDConfig(nu_emb=nu_emb, nu_aux=nu_aux, num_aux_heads=aux_heads,
-                    delta=delta, confidence=confidence, use_self=use_sf,
-                    use_same_level=use_sl,
-                    skip_when_student_confident=skip_confident,
-                    pool_size=min(K, 8), pool_update_every=scale.pool_every)
-    trainer = DecentralizedTrainer(
-        bundles, opt, mhd,
-        RunConfig(steps=steps, batch_size=scale.batch_size,
-                  public_batch_size=scale.batch_size, eval_every=0,
-                  seed=scale.seed),
-        arrays, part.client_indices, part.public_indices, graph, scale.labels)
-    t0 = time.time()
-    for t in range(steps):
-        trainer.step(t)
-    per_step = (time.time() - t0) / steps
-    ev = trainer.evaluate(test_arrays)
-    ev["_step_us"] = per_step * 1e6
-    ev["_trainer"] = trainer  # for per-client drill-downs (topology bench)
+    res = run_mhd_result(scale, **kw)
+    ev = dict(res.metrics)
+    ev["_step_us"] = res.us_per_step
     return ev
 
 
 def run_separate(scale: BenchScale, *, aux_heads: int = 0,
+                 skew: Optional[float] = None,
+                 gamma_pub: Optional[float] = None,
                  data=None) -> Dict[str, float]:
     """Paper 'Separate': each client trains alone on its private shard."""
-    arrays, test_arrays, part = data or make_data(scale)
-    opt = make_optimizer(OptimizerConfig(init_lr=scale.lr,
-                                         total_steps=scale.steps,
-                                         grad_clip_norm=scale.grad_clip))
-    accs_sh, accs_priv = [], []
-    t0 = time.time()
-    for i in range(scale.clients):
-        bundle = build_bundle(resnet_tiny(scale.labels))
-        params = train_supervised(bundle, opt, arrays,
-                                  part.client_indices[i], steps=scale.steps,
-                                  batch_size=scale.batch_size,
-                                  seed=scale.seed + i)
-        per_label, present = eval_per_label_accuracy(
-            bundle, params, test_arrays, scale.labels)
-        hist = np.bincount(arrays["labels"][part.client_indices[i]],
-                           minlength=scale.labels).astype(float)
-        hist /= hist.sum()
-        accs_sh.append(per_label[present].mean())
-        accs_priv.append((per_label * hist).sum())
-    per_step = (time.time() - t0) / (scale.steps * scale.clients)
-    return {"mean/main/beta_sh": float(np.mean(accs_sh)),
-            "mean/main/beta_priv": float(np.mean(accs_priv)),
-            "_step_us": per_step * 1e6}
+    spec = base_spec(
+        scale, AlgorithmSpec("supervised", {"scope": "separate"}),
+        clients=ExperimentSpec.uniform_fleet(scale.clients,
+                                             aux_heads=aux_heads),
+        skew=skew, gamma_pub=gamma_pub)
+    res = Experiment(spec, data=data).run()
+    ev = dict(res.metrics)
+    ev["_step_us"] = res.us_per_step / scale.clients
+    return ev
+
+
+def run_fedmd(scale: BenchScale, *, digest_weight: float = 1.0,
+              clients: Optional[Sequence[ClientSpec]] = None,
+              skew: Optional[float] = None,
+              gamma_pub: Optional[float] = None,
+              data=None) -> Dict[str, float]:
+    """FedMD (centralized consensus distillation, Table 2 comparison)."""
+    spec = base_spec(
+        scale, AlgorithmSpec("fedmd", {"digest_weight": digest_weight}),
+        clients=clients, skew=skew, gamma_pub=gamma_pub)
+    res = Experiment(spec, data=data).run()
+    ev = dict(res.metrics)
+    ev["_step_us"] = res.us_per_step / scale.clients
+    return ev
 
 
 def run_fedavg_baseline(scale: BenchScale, average_every: int = 20,
+                        skew: Optional[float] = None,
+                        gamma_pub: Optional[float] = None,
                         data=None) -> Dict[str, float]:
-    from repro.core.fedavg import train_fedavg
-
-    arrays, test_arrays, part = data or make_data(scale)
-    bundle = build_bundle(resnet_tiny(scale.labels))
-    opt = make_optimizer(OptimizerConfig(init_lr=scale.lr,
-                                         total_steps=scale.steps,
-                                         grad_clip_norm=scale.grad_clip))
-    t0 = time.time()
-    params = train_fedavg(bundle, opt, arrays, part.client_indices,
-                          steps=scale.steps, batch_size=scale.batch_size,
-                          average_every=average_every, seed=scale.seed)
-    per_step = (time.time() - t0) / (scale.steps * scale.clients)
-    per_label, present = eval_per_label_accuracy(bundle, params, test_arrays,
-                                                 scale.labels)
-    return {"mean/main/beta_sh": float(per_label[present].mean()),
-            "_step_us": per_step * 1e6}
+    spec = base_spec(
+        scale, AlgorithmSpec("fedavg", {"average_every": average_every}),
+        skew=skew, gamma_pub=gamma_pub)
+    res = Experiment(spec, data=data).run()
+    ev = dict(res.metrics)
+    ev["_step_us"] = res.us_per_step / scale.clients
+    return ev
 
 
-def run_supervised_baseline(scale: BenchScale, data=None) -> Dict[str, float]:
-    arrays, test_arrays, part = data or make_data(scale)
-    bundle = build_bundle(resnet_tiny(scale.labels))
-    opt = make_optimizer(OptimizerConfig(init_lr=scale.lr,
-                                         total_steps=scale.steps,
-                                         grad_clip_norm=scale.grad_clip))
-    all_private = np.concatenate(part.client_indices)
-    t0 = time.time()
-    params = train_supervised(bundle, opt, arrays, all_private,
-                              steps=scale.steps,
-                              batch_size=scale.batch_size, seed=scale.seed)
-    per_step = (time.time() - t0) / scale.steps
-    per_label, present = eval_per_label_accuracy(bundle, params, test_arrays,
-                                                 scale.labels)
-    return {"mean/main/beta_sh": float(per_label[present].mean()),
-            "_step_us": per_step * 1e6}
+def run_supervised_baseline(scale: BenchScale,
+                            skew: Optional[float] = None,
+                            gamma_pub: Optional[float] = None,
+                            data=None) -> Dict[str, float]:
+    spec = base_spec(scale, AlgorithmSpec("supervised", {"scope": "pooled"}),
+                     skew=skew, gamma_pub=gamma_pub)
+    res = Experiment(spec, data=data).run()
+    ev = dict(res.metrics)
+    ev["_step_us"] = res.us_per_step
+    return ev
+
+
+def client_beta_sh(ev: Dict[str, float], num_clients: int,
+                   head: str = "main") -> List[float]:
+    """Per-client shared accuracies out of the unified metric namespace."""
+    return [ev[f"c{i}/{head}/beta_sh"] for i in range(num_clients)]
 
 
 def best_aux_sh(ev: Dict[str, float]) -> float:

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import make_data, row, run_mhd
+from benchmarks.common import make_data, row, run_mhd_result
 from repro.core.graph import (
     complete_graph,
     cycle_graph,
@@ -45,9 +45,9 @@ def main(scale, full: bool = False) -> list:
     aux_heads = 3
     for topo_name in ("islands", "cycle", "complete"):
         data = make_data(scale, skew=100.0)
-        ev = run_mhd(scale, aux_heads=aux_heads, skew=100.0,
-                     topology=topo_name, data=data)
-        trainer = ev.pop("_trainer")
+        res = run_mhd_result(scale, aux_heads=aux_heads, skew=100.0,
+                             topology=topo_name, data=data)
+        ev, trainer = res.metrics, res.trainer  # trainer rides out-of-band
         graph = {"complete": complete_graph(scale.clients),
                  "cycle": cycle_graph(scale.clients),
                  "islands": islands_graph(scale.clients, 2)}[topo_name]
@@ -61,5 +61,5 @@ def main(scale, full: bool = False) -> list:
         derived = (f"topology={topo_name};"
                    f"sh_last={ev[f'mean/{last}/beta_sh']:.3f};"
                    f"sh_main={ev['mean/main/beta_sh']:.3f};{hop_str}")
-        rows.append(row("fig6/topology", ev["_step_us"], derived))
+        rows.append(row("fig6/topology", res.us_per_step, derived))
     return rows

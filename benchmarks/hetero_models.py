@@ -6,20 +6,12 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import make_data, row, run_mhd
+from benchmarks.common import client_beta_sh, make_data, row, run_mhd
 from repro.core.supervised import eval_per_label_accuracy, train_supervised
-from repro.models.resnet import resnet_tiny, resnet_tiny34
+from repro.exp import ClientSpec
+from repro.models.resnet import resnet_tiny34
 from repro.models.zoo import build_bundle
 from repro.optim.optimizers import OptimizerConfig, make_optimizer
-
-
-def _client_sh(trainer, test_arrays, labels, head="aux3"):
-    out = []
-    for c in trainer.clients:
-        pl, pres = eval_per_label_accuracy(c.bundle, c.params, test_arrays,
-                                           labels, head=head)
-        out.append(float(pl[pres].mean()))
-    return out
 
 
 def main(scale, full: bool = False) -> list:
@@ -29,23 +21,19 @@ def main(scale, full: bool = False) -> list:
     K = scale.clients
 
     # all-small ensemble
-    small = [build_bundle(resnet_tiny(scale.labels, num_aux_heads=3))
-             for _ in range(K)]
-    ev_small = run_mhd(scale, aux_heads=3, skew=100.0, bundles=small,
+    small = tuple(ClientSpec("resnet_tiny", aux_heads=3) for _ in range(K))
+    ev_small = run_mhd(scale, aux_heads=3, skew=100.0, clients=small,
                        data=data)
-    tr = ev_small.pop("_trainer")
-    small_sh = _client_sh(tr, test_arrays, scale.labels)
+    small_sh = client_beta_sh(ev_small, K, "aux3")
     rows.append(row("hetero/all_small", ev_small["_step_us"],
                     f"mean_sh={np.mean(small_sh):.3f}"))
 
     # one big + (K-1) small
-    mixed = [build_bundle(resnet_tiny34(scale.labels, num_aux_heads=3))] + [
-        build_bundle(resnet_tiny(scale.labels, num_aux_heads=3))
-        for _ in range(K - 1)]
-    ev_mixed = run_mhd(scale, aux_heads=3, skew=100.0, bundles=mixed,
+    mixed = (ClientSpec("resnet_tiny34", aux_heads=3),) + tuple(
+        ClientSpec("resnet_tiny", aux_heads=3) for _ in range(K - 1))
+    ev_mixed = run_mhd(scale, aux_heads=3, skew=100.0, clients=mixed,
                        data=data)
-    tr = ev_mixed.pop("_trainer")
-    mixed_sh = _client_sh(tr, test_arrays, scale.labels)
+    mixed_sh = client_beta_sh(ev_mixed, K, "aux3")
     rows.append(row("hetero/big_plus_small", ev_mixed["_step_us"],
                     f"big_sh={mixed_sh[0]:.3f};"
                     f"smalls_sh={np.mean(mixed_sh[1:]):.3f};"

@@ -6,10 +6,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import make_data, row, run_mhd
-from repro.core.fedmd import train_fedmd
+from benchmarks.common import (client_beta_sh, make_data, row, run_fedmd,
+                               run_mhd)
 from repro.core.supervised import eval_per_label_accuracy, train_supervised
-from repro.models.resnet import resnet_tiny, resnet_tiny34
+from repro.exp import ClientSpec
+from repro.models.resnet import resnet_tiny
 from repro.models.zoo import build_bundle
 from repro.optim.optimizers import OptimizerConfig, make_optimizer
 
@@ -18,11 +19,12 @@ def main(scale, full: bool = False) -> list:
     rows = []
     data = make_data(scale, skew=100.0)
     arrays, test_arrays, part = data
-    # heterogeneous ensemble: alternate two architectures (paper: 10 archs)
-    bundles = [build_bundle(
-        (resnet_tiny34 if i % 2 else resnet_tiny)(scale.labels,
-                                                  num_aux_heads=3))
-        for i in range(scale.clients)]
+    # heterogeneous fleet: alternate two architectures (paper: 10 archs)
+    def fleet(aux_heads):
+        return tuple(
+            ClientSpec(arch=("resnet_tiny34" if i % 2 else "resnet_tiny"),
+                       aux_heads=aux_heads)
+            for i in range(scale.clients))
 
     # pooled-data upper baseline ("Base" in Table 2)
     opt = make_optimizer(OptimizerConfig(init_lr=scale.lr,
@@ -38,31 +40,14 @@ def main(scale, full: bool = False) -> list:
                     f"acc={per_label[present].mean():.3f}"))
 
     # MHD with the heterogeneous ensemble
-    ev = run_mhd(scale, aux_heads=3, skew=100.0, bundles=bundles, data=data)
-    trainer = ev.pop("_trainer")
-    accs = []
-    for c in trainer.clients:
-        pl, pres = eval_per_label_accuracy(c.bundle, c.params, test_arrays,
-                                           scale.labels, head="aux3")
-        accs.append(pl[pres].mean())
+    ev = run_mhd(scale, aux_heads=3, skew=100.0, clients=fleet(3), data=data)
+    accs = client_beta_sh(ev, scale.clients, "aux3")
     rows.append(row("table2/mhd", ev["_step_us"],
                     f"acc={np.mean(accs):.3f};spread={np.std(accs):.3f}"))
 
-    # FedMD
-    fedmd_bundles = [build_bundle(
-        (resnet_tiny34 if i % 2 else resnet_tiny)(scale.labels))
-        for i in range(scale.clients)]
-    import time
-    t0 = time.time()
-    params = train_fedmd(fedmd_bundles, opt, arrays, part.client_indices,
-                         part.public_indices, steps=scale.steps,
-                         batch_size=scale.batch_size,
-                         public_batch_size=scale.batch_size)
-    us = (time.time() - t0) / (scale.steps * scale.clients) * 1e6
-    accs = []
-    for b, p in zip(fedmd_bundles, params):
-        pl, pres = eval_per_label_accuracy(b, p, test_arrays, scale.labels)
-        accs.append(pl[pres].mean())
-    rows.append(row("table2/fedmd", us,
+    # FedMD through the same runner and the same shared evaluator
+    ev = run_fedmd(scale, clients=fleet(0), skew=100.0, data=data)
+    accs = client_beta_sh(ev, scale.clients, "main")
+    rows.append(row("table2/fedmd", ev["_step_us"],
                     f"acc={np.mean(accs):.3f};spread={np.std(accs):.3f}"))
     return rows

@@ -17,73 +17,35 @@ old predictions both because it publishes rarely and because its bytes
 crawl. Expected output: training proceeds despite drops and skew, the
 staleness column shows the straggler's successor living further in the
 past, and the metering ledger stays at kilobytes per edge per step.
+
+The entire scenario — ring topology, async rates, lossy transport, top-k
+wire format, staleness gate — is the declarative ``"gossip"`` preset
+(`repro.exp.presets`); this script only adds the progress printing and
+the post-run drill-downs, which ride out-of-band on the result.
 """
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.comm import CommConfig, SimulatedNetwork
-from repro.core import (
-    AsyncScheduler,
-    MHDConfig,
-    DecentralizedTrainer,
-    RunConfig,
-    ScheduleConfig,
-    cycle_graph,
-)
-from repro.data import PartitionConfig, make_synthetic_vision, partition_dataset
-from repro.models.resnet import resnet_tiny
-from repro.models.zoo import build_bundle
-from repro.optim.optimizers import OptimizerConfig, make_optimizer
 from repro.common.pytree import tree_size
+from repro.exp import Experiment, get_preset
 
 
 def main():
-    K, labels, ticks, s_p = 4, 12, 200, 10
-    rates = (1, 1, 1, 4)  # client 3 is the 4× straggler
-    max_staleness = 3 * s_p
+    spec = get_preset("gossip")
+    K, ticks = spec.num_clients, spec.train.steps
+    rates = spec.schedule.rates
 
-    ds = make_synthetic_vision(num_labels=labels, samples_per_label=200,
-                               noise=2.0, seed=0)
-    test = make_synthetic_vision(num_labels=labels, samples_per_label=15,
-                                 noise=2.0, seed=991, prototype_seed=0)
-    part = partition_dataset(ds.labels, PartitionConfig(
-        num_clients=K, num_labels=labels, labels_per_client=3,
-        assignment="random", skew=100.0, gamma_pub=0.1, seed=0))
-
-    bundles = [build_bundle(resnet_tiny(labels, num_aux_heads=2))
-               for _ in range(K)]
-    optimizer = make_optimizer(OptimizerConfig(
-        init_lr=0.05, total_steps=ticks, grad_clip_norm=1.0))
-    mhd = MHDConfig(nu_emb=1.0, nu_aux=1.0, num_aux_heads=2,
-                    delta=1, pool_size=2, pool_update_every=s_p)
-
-    # a lossy, capped, laggy ring link: 1-tick propagation delay, 64 KiB of
-    # bandwidth per wall tick, 10% of messages vanish — and the straggler's
-    # uplink serializes 4× slower than everyone else's
-    net = SimulatedNetwork(latency=1, bandwidth=64 * 1024, drop_prob=0.10,
-                           seed=7, client_rates={3: rates[3]})
-    trainer = DecentralizedTrainer(
-        bundles, optimizer, mhd,
-        RunConfig(steps=ticks, batch_size=32, public_batch_size=32, seed=0,
-                  max_staleness=max_staleness),
-        {"images": ds.images, "labels": ds.labels},
-        part.client_indices, part.public_indices,
-        cycle_graph(K), labels,
-        exchange="prediction_topk",
-        comm=CommConfig(topk=5, val_dtype="float16", emb_encoding="int8",
-                        horizon=s_p * rates[3]),  # cover the straggler's gap
-        transport=net)
-    sched = AsyncScheduler(trainer, ScheduleConfig(rates))
-
-    for t in range(ticks):
-        metrics = sched.tick()
+    def on_step(t, metrics):
         if t % 50 == 0:
             stales = [metrics.get(f"c{i}/mail_staleness") for i in range(K)]
             shown = ["  -" if s is None else
                      ("new" if s < 0 else f"{s:3.0f}") for s in stales]
             print(f"tick {t:4d}  client-0 loss {metrics['c0/loss']:.3f}  "
                   f"mailbox staleness per client [{' '.join(shown)}] ticks")
+
+    result = Experiment(spec).run(on_step=on_step)
+    trainer, sched, net = result.trainer, result.scheduler, result.transport
 
     print(f"\nlocal steps taken: {sched.local_steps} "
           f"(rates {list(rates)}; nobody waited for client 3)")
@@ -93,7 +55,7 @@ def main():
         print(f"  client {cid}: {g['fresh']:.0f} fresh teachers, "
               f"{g['stale']:.0f} gated stale ({g['stale_frac']:.0%})")
 
-    ev = trainer.evaluate({"images": test.images, "labels": test.labels})
+    ev = result.metrics
     print("\nfinal accuracies (ensemble means):")
     for head in ("main", "aux1", "aux2"):
         print(f"  {head:5s}  private β_priv={ev[f'mean/{head}/beta_priv']:.3f}"
@@ -105,7 +67,7 @@ def main():
     print(trainer.meter.format_table())
     n_params = tree_size(trainer.clients[0].params)
     print(f"\nper-client inbound ≈ "
-          f"{trainer.meter.total_bytes / K / ticks:,.0f} B/tick; one FedAvg "
+          f"{ev['comm/total_bytes'] / K / ticks:,.0f} B/tick; one FedAvg "
           f"round of this model would be {2 * 4 * n_params:,} B per client.")
 
 

@@ -6,55 +6,51 @@ Multi-Headed Distillation — no data, weights or gradients exchanged.
 Takes ~2 minutes on CPU. Expected output: each client's MAIN head is good on
 its private classes; the AUX heads approach the ensemble's knowledge of ALL
 classes (β_sh well above what any isolated client can reach).
+
+The whole experiment is one declarative `ExperimentSpec` — swap the
+algorithm, topology, transport or schedule by editing the spec (see
+docs/experiment_api.md); `spec.to_json()` is a complete, shareable record
+of the run.
 """
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import (
-    MHDConfig,
-    DecentralizedTrainer,
-    RunConfig,
-    complete_graph,
+from repro.exp import (
+    AlgorithmSpec,
+    DataSpec,
+    Experiment,
+    ExperimentSpec,
+    OptimizerSpec,
+    PartitionSpec,
+    TrainSpec,
 )
-from repro.data import PartitionConfig, make_synthetic_vision, partition_dataset
-from repro.models.resnet import resnet_tiny
-from repro.models.zoo import build_bundle
-from repro.optim.optimizers import OptimizerConfig, make_optimizer
 
 
 def main():
     K, labels, steps = 3, 12, 400
 
-    # a labeled corpus, split into a public unlabeled pool + skewed shards
-    ds = make_synthetic_vision(num_labels=labels, samples_per_label=200,
-                               noise=2.0, seed=0)
-    test = make_synthetic_vision(num_labels=labels, samples_per_label=15,
-                                 noise=2.0, seed=991, prototype_seed=0)
-    part = partition_dataset(ds.labels, PartitionConfig(
-        num_clients=K, num_labels=labels, labels_per_client=4,
-        assignment="random", skew=100.0, gamma_pub=0.1, seed=0))
+    spec = ExperimentSpec(
+        name="quickstart",
+        algorithm=AlgorithmSpec("mhd", {
+            "nu_emb": 1.0, "nu_aux": 1.0, "delta": 1,
+            "pool_size": K, "pool_update_every": 10}),
+        # a labeled corpus, split into a public unlabeled pool + skewed shards
+        data=DataSpec(num_labels=labels, samples_per_label=200, noise=2.0,
+                      seed=0),
+        partition=PartitionSpec(labels_per_client=4, assignment="random",
+                                skew=100.0, gamma_pub=0.1),
+        clients=ExperimentSpec.uniform_fleet(K, aux_heads=2),
+        optimizer=OptimizerSpec(init_lr=0.05, grad_clip_norm=1.0),
+        train=TrainSpec(steps=steps, batch_size=32, public_batch_size=32,
+                        seed=0))
 
-    bundles = [build_bundle(resnet_tiny(labels, num_aux_heads=2))
-               for _ in range(K)]
-    optimizer = make_optimizer(OptimizerConfig(
-        init_lr=0.05, total_steps=steps, grad_clip_norm=1.0))
-    mhd = MHDConfig(nu_emb=1.0, nu_aux=1.0, num_aux_heads=2,
-                    delta=1, pool_size=K, pool_update_every=10)
-
-    trainer = DecentralizedTrainer(
-        bundles, optimizer, mhd,
-        RunConfig(steps=steps, batch_size=32, public_batch_size=32, seed=0),
-        {"images": ds.images, "labels": ds.labels},
-        part.client_indices, part.public_indices,
-        complete_graph(K), labels)
-
-    for t in range(steps):
-        metrics = trainer.step(t)
+    def on_step(t, metrics):
         if t % 100 == 0:
             print(f"step {t:4d}  client-0 loss {metrics['c0/loss']:.3f}")
 
-    ev = trainer.evaluate({"images": test.images, "labels": test.labels})
+    ev = Experiment(spec).run(on_step=on_step).metrics
+
     print("\nfinal accuracies (ensemble means):")
     for head in ("main", "aux1", "aux2"):
         print(f"  {head:5s}  private β_priv={ev[f'mean/{head}/beta_priv']:.3f}"

@@ -37,4 +37,11 @@ if ! grep -q "test_async_equals_sync" <<<"$collected"; then
     exit 1
 fi
 
+# experiment-API smoke: spec parsing, JSON round-trip, and algorithm/arch
+# registry wiring must hold on every push (no training — this is seconds)
+python scripts/run_experiment.py --preset quick --dry-run >/dev/null || {
+    echo "check.sh: experiment spec dry-run failed" >&2
+    exit 1
+}
+
 exec python -m pytest -x -q "${MARK[@]}" "$@"

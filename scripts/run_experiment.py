@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Run one declarative experiment: spec file (or preset) in, metrics out.
+
+    PYTHONPATH=src python scripts/run_experiment.py --preset quick
+    PYTHONPATH=src python scripts/run_experiment.py --spec my_exp.json \
+        --out metrics.json
+    PYTHONPATH=src python scripts/run_experiment.py --preset gossip \
+        --save-spec gossip.json          # write the spec, don't run
+    PYTHONPATH=src python scripts/run_experiment.py --preset quick --dry-run
+
+``--dry-run`` exercises the whole declarative surface without training:
+spec JSON round-trip, algorithm/arch registry resolution, capability
+checks, graph/transport/optimizer construction. CI runs it on every push
+(scripts/check.sh) so a spec-schema or registry regression fails fast.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+
+def load_spec(args):
+    from repro.exp import ExperimentSpec
+    from repro.exp.presets import get_preset
+
+    if args.spec:
+        with open(args.spec) as f:
+            return ExperimentSpec.from_json(f.read())
+    return get_preset(args.preset)
+
+
+def dry_run(spec) -> int:
+    """Validate everything constructible without touching data or jit."""
+    from repro.exp import (ExperimentSpec, Experiment, build_bundles,
+                           build_graph, build_optimizer, build_transport,
+                           make_algorithm)
+
+    roundtrip = ExperimentSpec.from_json(spec.to_json())
+    assert roundtrip == spec, "spec JSON round-trip changed the spec"
+    spec.validate()
+    algo = make_algorithm(spec)
+    Experiment(spec)._check_capabilities(algo)
+    bundles = build_bundles(spec)
+    graph = build_graph(spec)
+    transport = build_transport(spec)
+    build_optimizer(spec)
+    print(f"spec OK: {spec.name}")
+    print(f"  algorithm: {spec.algorithm.name} "
+          f"(capabilities: {algo.capabilities})")
+    print(f"  fleet: {len(bundles)} clients "
+          f"[{', '.join(b.name for b in bundles)}]")
+    print(f"  topology: {spec.topology.name} ({sum(map(len, graph))} edges)"
+          f"  schedule: {spec.schedule.mode}")
+    print(f"  wire: {spec.wire.exchange}  transport: "
+          f"{type(transport).__name__ if transport else 'loopback'}")
+    print(f"  train: {spec.train.steps} steps × batch "
+          f"{spec.train.batch_size}")
+    return 0
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    src = p.add_mutually_exclusive_group(required=True)
+    src.add_argument("--spec", help="path to an ExperimentSpec JSON file")
+    src.add_argument("--preset", help="named preset (see --list-presets)")
+    src.add_argument("--list-presets", action="store_true")
+    p.add_argument("--dry-run", action="store_true",
+                   help="parse/validate/wire only; no training")
+    p.add_argument("--save-spec", metavar="PATH",
+                   help="write the resolved spec JSON and exit")
+    p.add_argument("--out", metavar="PATH",
+                   help="write result payload (spec+metrics+history) JSON")
+    p.add_argument("--log-every", type=int, default=100,
+                   help="print a loss line every N steps (0 = quiet)")
+    args = p.parse_args(argv)
+
+    if args.list_presets:
+        from repro.exp.presets import preset_names
+
+        for name in preset_names():
+            print(name)
+        return 0
+
+    spec = load_spec(args)
+    if args.save_spec:
+        with open(args.save_spec, "w") as f:
+            f.write(spec.to_json() + "\n")
+        print(f"wrote {args.save_spec}")
+        return 0
+    if args.dry_run:
+        return dry_run(spec)
+
+    from repro.exp import Experiment
+
+    def on_step(t, metrics):
+        if args.log_every and t % args.log_every == 0 and metrics:
+            losses = [v for k, v in metrics.items() if k.endswith("/loss")]
+            if losses:
+                print(f"step {t}: mean client loss "
+                      f"{sum(losses) / len(losses):.4f}")
+
+    result = Experiment(spec).run(on_step=on_step)
+    print(f"\n{spec.name}: {spec.train.steps} steps, "
+          f"{result.us_per_step:.0f} us/step")
+    for k in sorted(result.metrics):
+        if k.startswith("mean/") or k.startswith("comm/"):
+            print(f"  {k} = {result.metrics[k]:.4f}")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(result.to_json() + "\n")
+        print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -110,3 +110,28 @@ class CheckpointManager:
         steps = self.steps()
         for s in steps[: -self.max_to_keep]:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+
+def save_client_states(directory: str, step: int, states,
+                       max_to_keep: int = 2) -> None:
+    """Per-client `(params, opt_state)` checkpoints under
+    ``directory/client_{i}`` — the layout every fleet trainer
+    (decentralized, FedMD, FedAvg, supervised) shares, so a run is
+    resumable per-client regardless of algorithm."""
+    for i, (params, opt) in enumerate(states):
+        mgr = CheckpointManager(os.path.join(directory, f"client_{i}"),
+                                max_to_keep=max_to_keep)
+        mgr.save(step, {"params": params, "opt": opt})
+
+
+def restore_client_states(directory: str, states, step: Optional[int] = None):
+    """Inverse of `save_client_states`: restores into the given
+    ``(params, opt_state)`` targets; returns ``(step, new_states)``."""
+    restored = 0
+    out = []
+    for i, (params, opt) in enumerate(states):
+        mgr = CheckpointManager(os.path.join(directory, f"client_{i}"))
+        state = mgr.restore({"params": params, "opt": opt}, step)
+        out.append((state["params"], state["opt"]))
+        restored = mgr.latest_step() if step is None else step
+    return int(restored), out

@@ -17,6 +17,14 @@ from repro.core.graph import (
 )
 from repro.core.runtime import DecentralizedTrainer, RunConfig
 from repro.core.scheduler import AsyncScheduler, ScheduleConfig, run_async
+from repro.core.evaluation import (
+    fleet_beta_metrics,
+    label_histogram,
+    per_label_head_accuracy,
+)
+from repro.core.fedavg import FedAvgTrainer, train_fedavg
+from repro.core.fedmd import FedMDTrainer, train_fedmd
+from repro.core.supervised import SupervisedTrainer, train_supervised
 
 __all__ = [
     "MHDConfig",
@@ -35,4 +43,13 @@ __all__ = [
     "AsyncScheduler",
     "ScheduleConfig",
     "run_async",
+    "fleet_beta_metrics",
+    "label_histogram",
+    "per_label_head_accuracy",
+    "FedAvgTrainer",
+    "train_fedavg",
+    "FedMDTrainer",
+    "train_fedmd",
+    "SupervisedTrainer",
+    "train_supervised",
 ]

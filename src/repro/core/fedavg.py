@@ -4,20 +4,120 @@ K clients with *identical* architectures train locally; every ``u`` steps
 parameters are averaged (weight aggregation). In the multi-pod deployment the
 average is a pmean over the client axis; here (single host) it is an exact
 leafwise mean — the math the paper compares against (FA, u=200 / u=1000).
+
+`FedAvgTrainer` exposes the runtime surface the `repro.exp` Algorithm
+protocol expects (per-step metrics, shared β_sh/β_priv evaluator,
+checkpointing); `train_fedavg` remains the one-call wrapper. Private
+batches come from the `client_stream_seed` streams shared by every
+algorithm.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.common.pytree import tree_mean
+from repro.core.evaluation import (
+    fleet_beta_metrics,
+    label_histogram,
+    per_label_head_accuracy,
+)
 from repro.core.supervised import make_train_step
-from repro.data.pipeline import BatchIterator
+from repro.data.pipeline import BatchIterator, client_stream_seed
 from repro.models.zoo import ModelBundle
 from repro.optim.optimizers import Optimizer
+
+
+class FedAvgTrainer:
+    """Stepwise FedAvg: local SGD + periodic exact parameter averaging."""
+
+    def __init__(
+        self,
+        bundle: ModelBundle,
+        optimizer: Optimizer,
+        arrays: Dict[str, np.ndarray],
+        client_indices: Sequence[np.ndarray],
+        num_labels: Optional[int] = None,
+        batch_size: int = 32,
+        average_every: int = 200,  # the paper's u
+        seed: int = 0,
+        eval_batch_size: int = 256,
+    ):
+        self.bundle = bundle
+        self.optimizer = optimizer
+        if num_labels is None:
+            num_labels = int(arrays["labels"].max()) + 1
+        self.num_labels = num_labels
+        self.average_every = average_every
+        self.eval_batch_size = eval_batch_size
+        K = len(client_indices)
+        params = bundle.init(jax.random.PRNGKey(seed))  # common init
+        self.client_params: List[Any] = [params for _ in range(K)]
+        self.opt_states: List[Any] = [optimizer.init(params)
+                                      for _ in range(K)]
+        self.iters = [BatchIterator(arrays, idx, batch_size,
+                                    seed=client_stream_seed(seed, i))
+                      for i, idx in enumerate(client_indices)]
+        self.label_hists = [label_histogram(arrays["labels"], idx, num_labels)
+                            for idx in client_indices]
+        self._train_step = make_train_step(bundle, optimizer)
+        self._apply_fn = jax.jit(bundle.apply)  # eval cache: jit once
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.client_params)
+
+    @property
+    def averaged_params(self) -> Any:
+        """The current global model (exact leafwise mean)."""
+        return tree_mean(self.client_params)
+
+    def step(self, t: int) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for i in range(self.num_clients):
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.iters[i].next().items()}
+            self.client_params[i], self.opt_states[i], metrics = \
+                self._train_step(self.client_params[i], self.opt_states[i],
+                                 batch, jnp.asarray(t))
+            out.update({f"c{i}/{k}": float(v) for k, v in metrics.items()})
+        if (t + 1) % self.average_every == 0:
+            avg = self.averaged_params
+            self.client_params = [avg for _ in range(self.num_clients)]
+            # momentum is client-local state; FedAvg resets it on aggregation
+            self.opt_states = [self.optimizer.init(avg)
+                               for _ in range(self.num_clients)]
+            out["fedavg/averaged"] = 1.0
+        return out
+
+    def evaluate(self, arrays: Dict[str, np.ndarray]) -> Dict[str, float]:
+        """Evaluate the *global* (averaged) model; per-client rows weight
+        its per-label accuracy by each client's private histogram."""
+        per_label, present = per_label_head_accuracy(
+            self._apply_fn, self.averaged_params, arrays,
+            self.num_labels, num_aux_heads=0,
+            batch_size=self.eval_batch_size)
+        per_client = [(i, per_label, present, self.label_hists[i])
+                      for i in range(self.num_clients)]
+        return fleet_beta_metrics(per_client, num_aux_heads=0)
+
+    def save(self, directory: str, step: int) -> None:
+        from repro.checkpoint.io import save_client_states
+
+        save_client_states(directory, step,
+                           zip(self.client_params, self.opt_states))
+
+    def restore(self, directory: str, step: Optional[int] = None) -> int:
+        from repro.checkpoint.io import restore_client_states
+
+        restored, states = restore_client_states(
+            directory, zip(self.client_params, self.opt_states), step)
+        self.client_params = [p for p, _ in states]
+        self.opt_states = [s for _, s in states]
+        return restored
 
 
 def train_fedavg(
@@ -27,27 +127,13 @@ def train_fedavg(
     client_indices: Sequence[np.ndarray],
     steps: int,
     batch_size: int,
-    average_every: int = 200,  # the paper's u
+    average_every: int = 200,
     seed: int = 0,
 ) -> Any:
-    """Returns the final averaged parameters."""
-    K = len(client_indices)
-    key = jax.random.PRNGKey(seed)
-    params = bundle.init(key)  # common init, as in FedAvg
-    client_params = [params for _ in range(K)]
-    opt_states = [optimizer.init(params) for _ in range(K)]
-    iters = [BatchIterator(arrays, idx, batch_size, seed=seed + 7 * i)
-             for i, idx in enumerate(client_indices)]
-    train_step = make_train_step(bundle, optimizer)
-
+    """One-call wrapper: run ``steps`` rounds, return the averaged params."""
+    trainer = FedAvgTrainer(bundle, optimizer, arrays, client_indices,
+                            batch_size=batch_size,
+                            average_every=average_every, seed=seed)
     for t in range(steps):
-        for i in range(K):
-            batch = {k: jnp.asarray(v) for k, v in iters[i].next().items()}
-            client_params[i], opt_states[i], _ = train_step(
-                client_params[i], opt_states[i], batch, jnp.asarray(t))
-        if (t + 1) % average_every == 0:
-            avg = tree_mean(client_params)
-            client_params = [avg for _ in range(K)]
-            # momentum is client-local state; FedAvg resets it on aggregation
-            opt_states = [optimizer.init(avg) for _ in range(K)]
-    return tree_mean(client_params)
+        trainer.step(t)
+    return trainer.averaged_params

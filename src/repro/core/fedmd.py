@@ -6,50 +6,80 @@ class scores into a consensus; clients take gradient steps matching the
 consensus (digest) and then train on their private data (revisit). Unlike
 MHD there is no confidence gating, no aux-head chain, and a central
 aggregator is required.
+
+`FedMDTrainer` exposes the runtime surface the `repro.exp` Algorithm
+protocol expects — per-step metrics, the shared β_sh/β_priv evaluator,
+per-client checkpointing — while `train_fedmd` remains the original
+one-call convenience wrapper. Private-batch rng streams come from
+`client_stream_seed`, the stream every algorithm shares.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.pipeline import BatchIterator, PublicPool
+from repro.core.evaluation import (
+    fleet_beta_metrics,
+    label_histogram,
+    per_label_head_accuracy,
+)
+from repro.data.pipeline import BatchIterator, PublicPool, client_stream_seed
 from repro.models.zoo import ModelBundle
 from repro.optim.optimizers import Optimizer
 
 
-def train_fedmd(
-    bundles: Sequence[ModelBundle],
-    optimizer: Optimizer,
-    arrays: Dict[str, np.ndarray],
-    client_indices: Sequence[np.ndarray],
-    public_indices: np.ndarray,
-    steps: int,
-    batch_size: int,
-    public_batch_size: int = 64,
-    digest_weight: float = 1.0,
-    seed: int = 0,
-) -> List[Any]:
-    K = len(bundles)
-    key = jax.random.PRNGKey(seed)
-    params = []
-    opt_states = []
-    for i, b in enumerate(bundles):
-        key, sub = jax.random.split(key)
-        p = b.init(sub)
-        params.append(p)
-        opt_states.append(optimizer.init(p))
-    iters = [BatchIterator(arrays, idx, batch_size, seed=seed + 7 * i)
-             for i, idx in enumerate(client_indices)]
-    public = PublicPool(arrays, public_indices, public_batch_size, seed=seed)
+class FedMDTrainer:
+    """Stepwise FedMD: heterogeneous clients + a central consensus server."""
 
-    score_fns = {}
-    update_fns = {}
-    for b in bundles:
-        if b.name not in score_fns:
-            score_fns[b.name] = jax.jit(
+    def __init__(
+        self,
+        bundles: Sequence[ModelBundle],
+        optimizer: Optimizer,
+        arrays: Dict[str, np.ndarray],
+        client_indices: Sequence[np.ndarray],
+        public_indices: np.ndarray,
+        num_labels: Optional[int] = None,
+        batch_size: int = 32,
+        public_batch_size: int = 64,
+        digest_weight: float = 1.0,
+        seed: int = 0,
+        eval_batch_size: int = 256,
+    ):
+        self.bundles = list(bundles)
+        self.optimizer = optimizer
+        if num_labels is None:
+            num_labels = int(arrays["labels"].max()) + 1
+        self.num_labels = num_labels
+        self.digest_weight = digest_weight
+        self.eval_batch_size = eval_batch_size
+        K = len(self.bundles)
+        key = jax.random.PRNGKey(seed)
+        self.params: List[Any] = []
+        self.opt_states: List[Any] = []
+        for b in self.bundles:
+            key, sub = jax.random.split(key)
+            p = b.init(sub)
+            self.params.append(p)
+            self.opt_states.append(optimizer.init(p))
+        self.iters = [BatchIterator(arrays, idx, batch_size,
+                                    seed=client_stream_seed(seed, i))
+                      for i, idx in enumerate(client_indices)]
+        self.public = PublicPool(arrays, public_indices, public_batch_size,
+                                 seed=seed)
+        self.label_hists = [label_histogram(arrays["labels"], idx, num_labels)
+                            for idx in client_indices]
+
+        self._score_fns: Dict[str, Any] = {}
+        self._update_fns: Dict[str, Any] = {}
+        self._apply_fns: Dict[str, Any] = {}  # eval cache: jit once per arch
+        for b in self.bundles:
+            if b.name in self._score_fns:
+                continue
+            self._apply_fns[b.name] = jax.jit(b.apply)
+            self._score_fns[b.name] = jax.jit(
                 lambda p, batch, _b=b: _b.apply(p, batch)["logits"])
 
             def update(p, s, private_batch, public_batch, consensus, step,
@@ -65,25 +95,87 @@ def train_fedmd(
                     logp = jax.nn.log_softmax(
                         out_pub["logits"].astype(jnp.float32), axis=-1)
                     digest = -jnp.mean(jnp.sum(consensus * logp, axis=-1))
-                    return ce + digest_weight * digest
+                    loss = ce + self.digest_weight * digest
+                    return loss, {"ce": ce, "digest": digest}
 
-                loss, grads = jax.value_and_grad(loss_fn)(p)
-                p, s = optimizer.update(grads, s, p, step)
-                return p, s, loss
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(p)
+                p, s = self.optimizer.update(grads, s, p, step)
+                metrics["loss"] = loss
+                return p, s, metrics
 
-            update_fns[b.name] = jax.jit(update)
+            self._update_fns[b.name] = jax.jit(update)
 
-    for t in range(steps):
-        public_batch = {k: jnp.asarray(v) for k, v in public.sample(t).items()}
-        # server: consensus class scores (mean softmax)
-        probs = [jax.nn.softmax(score_fns[bundles[i].name](
-            params[i], public_batch).astype(jnp.float32), -1) for i in range(K)]
+    @property
+    def num_clients(self) -> int:
+        return len(self.bundles)
+
+    def step(self, t: int) -> Dict[str, float]:
+        """One round: server consensus on the step-t public batch, then one
+        digest+revisit gradient step per client."""
+        K = self.num_clients
+        public_batch = {k: jnp.asarray(v)
+                        for k, v in self.public.sample(t).items()}
+        probs = [jax.nn.softmax(self._score_fns[self.bundles[i].name](
+            self.params[i], public_batch).astype(jnp.float32), -1)
+            for i in range(K)]
         consensus = jax.lax.stop_gradient(
             jnp.mean(jnp.stack(probs, 0), axis=0))
+        out: Dict[str, float] = {}
         for i in range(K):
             private_batch = {k: jnp.asarray(v)
-                             for k, v in iters[i].next().items()}
-            params[i], opt_states[i], _ = update_fns[bundles[i].name](
-                params[i], opt_states[i], private_batch, public_batch,
-                consensus, jnp.asarray(t))
-    return params
+                             for k, v in self.iters[i].next().items()}
+            self.params[i], self.opt_states[i], metrics = \
+                self._update_fns[self.bundles[i].name](
+                    self.params[i], self.opt_states[i], private_batch,
+                    public_batch, consensus, jnp.asarray(t))
+            out.update({f"c{i}/{k}": float(v) for k, v in metrics.items()})
+        return out
+
+    def evaluate(self, arrays: Dict[str, np.ndarray]) -> Dict[str, float]:
+        per_client = []
+        for i, b in enumerate(self.bundles):
+            per_label, present = per_label_head_accuracy(
+                self._apply_fns[b.name], self.params[i], arrays,
+                self.num_labels, num_aux_heads=0,
+                batch_size=self.eval_batch_size)
+            per_client.append((i, per_label, present, self.label_hists[i]))
+        return fleet_beta_metrics(per_client, num_aux_heads=0)
+
+    def save(self, directory: str, step: int) -> None:
+        from repro.checkpoint.io import save_client_states
+
+        save_client_states(directory, step,
+                           zip(self.params, self.opt_states))
+
+    def restore(self, directory: str, step: Optional[int] = None) -> int:
+        from repro.checkpoint.io import restore_client_states
+
+        restored, states = restore_client_states(
+            directory, zip(self.params, self.opt_states), step)
+        self.params = [p for p, _ in states]
+        self.opt_states = [s for _, s in states]
+        return restored
+
+
+def train_fedmd(
+    bundles: Sequence[ModelBundle],
+    optimizer: Optimizer,
+    arrays: Dict[str, np.ndarray],
+    client_indices: Sequence[np.ndarray],
+    public_indices: np.ndarray,
+    steps: int,
+    batch_size: int,
+    public_batch_size: int = 64,
+    digest_weight: float = 1.0,
+    seed: int = 0,
+) -> List[Any]:
+    """One-call wrapper: run ``steps`` rounds, return final params."""
+    trainer = FedMDTrainer(bundles, optimizer, arrays, client_indices,
+                           public_indices,
+                           batch_size=batch_size,
+                           public_batch_size=public_batch_size,
+                           digest_weight=digest_weight, seed=seed)
+    for t in range(steps):
+        trainer.step(t)
+    return trainer.params

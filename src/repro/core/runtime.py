@@ -52,7 +52,6 @@ falls back to the supervised-only step. Skips surface per client as the
 from __future__ import annotations
 
 import dataclasses
-import os
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -61,9 +60,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.pool import CheckpointPool, PoolEntry
+from repro.core.evaluation import (
+    fleet_beta_metrics,
+    label_histogram,
+    per_label_head_accuracy,
+)
 from repro.core.graph import Adjacency, as_graph_fn, validate_adjacency
 from repro.core.mhd import MHDConfig, mhd_total_loss
-from repro.data.pipeline import BatchIterator, PublicPool
+from repro.data.pipeline import BatchIterator, PublicPool, client_stream_seed
 from repro.models.zoo import ModelBundle
 from repro.optim.optimizers import Optimizer
 
@@ -147,8 +151,6 @@ class DecentralizedTrainer:
         for i, bundle in enumerate(bundles):
             key, sub = jax.random.split(key)
             params = bundle.init(sub)
-            labels_i = arrays["labels"][client_indices[i]]
-            hist = np.bincount(labels_i, minlength=num_labels).astype(np.float64)
             self.clients.append(ClientState(
                 client_id=i,
                 bundle=bundle,
@@ -159,8 +161,10 @@ class DecentralizedTrainer:
                               seed=run_cfg.seed + 101 * i),
                 private_iter=BatchIterator(arrays, client_indices[i],
                                            run_cfg.batch_size,
-                                           seed=run_cfg.seed + 13 * i),
-                label_hist=hist / max(hist.sum(), 1.0),
+                                           seed=client_stream_seed(
+                                               run_cfg.seed, i)),
+                label_hist=label_histogram(arrays["labels"],
+                                           client_indices[i], num_labels),
             ))
         self._seed_pools(step=0)
 
@@ -476,26 +480,19 @@ class DecentralizedTrainer:
         """Persist every client's (params, opt_state) — a decentralized run
         is resumable per-client (each client would own its directory in a
         real deployment)."""
-        from repro.checkpoint.io import CheckpointManager
+        from repro.checkpoint.io import save_client_states
 
-        for c in self.clients:
-            mgr = CheckpointManager(
-                os.path.join(directory, f"client_{c.client_id}"),
-                max_to_keep=2)
-            mgr.save(step, {"params": c.params, "opt": c.opt_state})
+        save_client_states(directory, step,
+                           [(c.params, c.opt_state) for c in self.clients])
 
     def restore(self, directory: str, step: Optional[int] = None) -> int:
-        from repro.checkpoint.io import CheckpointManager
+        from repro.checkpoint.io import restore_client_states
 
-        restored_step = 0
-        for c in self.clients:
-            mgr = CheckpointManager(
-                os.path.join(directory, f"client_{c.client_id}"))
-            target = {"params": c.params, "opt": c.opt_state}
-            state = mgr.restore(target, step)
-            c.params = state["params"]
-            c.opt_state = state["opt"]
-            restored_step = mgr.latest_step() if step is None else step
+        restored_step, states = restore_client_states(
+            directory, [(c.params, c.opt_state) for c in self.clients], step)
+        for c, (params, opt_state) in zip(self.clients, states):
+            c.params = params
+            c.opt_state = opt_state
         if self.exchange != "params":
             # construction-time windows are expired at the restored step —
             # drop them (and any stale pulls) so reseeding actually lands
@@ -509,41 +506,14 @@ class DecentralizedTrainer:
 
     def evaluate(self, arrays: Dict[str, np.ndarray]) -> Dict[str, float]:
         """Per-label accuracies on a uniform test set; β_sh = uniform mean,
-        β_priv = mean weighted by the client's private label distribution."""
-        labels = arrays["labels"]
-        out: Dict[str, float] = {}
-        bs = self.run_cfg.eval_batch_size
-        for c in self.clients:
-            apply_fn = self._teacher_apply(c.bundle)
-            m = self.mhd_cfg.num_aux_heads
-            correct = np.zeros((m + 1, self.num_labels))
-            count = np.zeros(self.num_labels)
-            for s in range(0, labels.shape[0], bs):
-                batch = {k: jnp.asarray(v[s:s + bs]) for k, v in arrays.items()
-                         if k != "labels"}
-                o = apply_fn(c.params, batch)
-                lab = labels[s:s + bs]
-                preds = [np.asarray(jnp.argmax(o["logits"], -1))]
-                for h in range(m):
-                    preds.append(np.asarray(jnp.argmax(o["aux_logits"][h], -1)))
-                np.add.at(count, lab, 1)
-                for hi, p in enumerate(preds):
-                    np.add.at(correct[hi], lab[p == lab], 1)
-            per_label = correct / np.maximum(count, 1)[None]
-            present = count > 0
-            w_priv = c.label_hist * present
-            w_priv = w_priv / max(w_priv.sum(), 1e-9)
-            names = ["main"] + [f"aux{h+1}" for h in range(m)]
-            for hi, nm in enumerate(names):
-                out[f"c{c.client_id}/{nm}/beta_sh"] = float(
-                    per_label[hi][present].mean())
-                out[f"c{c.client_id}/{nm}/beta_priv"] = float(
-                    (per_label[hi] * w_priv).sum())
-        # ensemble means (what the paper's figures report)
+        β_priv = mean weighted by the client's private label distribution.
+        Delegates to the algorithm-agnostic `core.evaluation` reducers, so
+        the baselines report the exact same metric."""
         m = self.mhd_cfg.num_aux_heads
-        for nm in ["main"] + [f"aux{h+1}" for h in range(m)]:
-            for metric in ["beta_sh", "beta_priv"]:
-                vals = [out[f"c{c.client_id}/{nm}/{metric}"]
-                        for c in self.clients]
-                out[f"mean/{nm}/{metric}"] = float(np.mean(vals))
-        return out
+        per_client = []
+        for c in self.clients:
+            per_label, present = per_label_head_accuracy(
+                self._teacher_apply(c.bundle), c.params, arrays,
+                self.num_labels, m, self.run_cfg.eval_batch_size)
+            per_client.append((c.client_id, per_label, present, c.label_hist))
+        return fleet_beta_metrics(per_client, m)

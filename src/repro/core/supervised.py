@@ -1,14 +1,20 @@
 """Supervised trainer — the paper's 'Supervised' upper bound and the
-'Separate' baseline (each client trained in isolation on its shard)."""
+'Separate' baseline (each client trained in isolation on its shard).
+
+`SupervisedTrainer` is the stepwise form the `repro.exp` Algorithm
+protocol drives: ``scope="pooled"`` trains one model on the union of all
+private shards (the upper bound), ``scope="separate"`` trains one model
+per client on its own shard with no communication (the lower bound).
+"""
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.pipeline import BatchIterator
+from repro.data.pipeline import BatchIterator, client_stream_seed
 from repro.models.zoo import ModelBundle
 from repro.optim.optimizers import Optimizer
 
@@ -46,6 +52,114 @@ def train_supervised(
         params, opt_state, _ = train_step(params, opt_state, batch,
                                           jnp.asarray(t))
     return params
+
+
+class SupervisedTrainer:
+    """Stepwise supervised training over a client fleet.
+
+    ``scope="pooled"``   — one model (bundles[0]) on all private shards.
+    ``scope="separate"`` — K isolated models, one per client shard; model
+    inits follow the decentralized trainer's key-split sequence and the
+    private-batch streams come from `client_stream_seed`, so 'Separate'
+    is MHD with the distillation terms removed — sample-order included.
+    """
+
+    def __init__(
+        self,
+        bundles: Sequence[ModelBundle],
+        optimizer: Optimizer,
+        arrays: Dict[str, np.ndarray],
+        client_indices: Sequence[np.ndarray],
+        num_labels: Optional[int] = None,
+        batch_size: int = 32,
+        scope: str = "separate",
+        seed: int = 0,
+        eval_batch_size: int = 256,
+    ):
+        from repro.core.evaluation import label_histogram
+
+        if scope not in ("pooled", "separate"):
+            raise ValueError(f"unknown supervised scope {scope!r}")
+        self.scope = scope
+        self.optimizer = optimizer
+        if num_labels is None:
+            num_labels = int(arrays["labels"].max()) + 1
+        self.num_labels = num_labels
+        self.eval_batch_size = eval_batch_size
+        if scope == "pooled":
+            if any(b.config != bundles[0].config for b in bundles[1:]):
+                raise ValueError(
+                    "scope='pooled' trains ONE model on the pooled shards; "
+                    f"got a heterogeneous fleet "
+                    f"{sorted({b.name for b in bundles})} — pick one "
+                    "architecture or use scope='separate'")
+            self.bundles = [bundles[0]]
+            indices = [np.concatenate(list(client_indices))]
+        else:
+            self.bundles = list(bundles)
+            indices = list(client_indices)
+        key = jax.random.PRNGKey(seed)
+        self.params: List[Any] = []
+        self.opt_states: List[Any] = []
+        for b in self.bundles:
+            key, sub = jax.random.split(key)
+            p = b.init(sub)
+            self.params.append(p)
+            self.opt_states.append(optimizer.init(p))
+        self.iters = [BatchIterator(arrays, idx, batch_size,
+                                    seed=client_stream_seed(seed, i))
+                      for i, idx in enumerate(indices)]
+        self.label_hists = [label_histogram(arrays["labels"], idx, num_labels)
+                            for idx in indices]
+        self._train_steps = {}
+        self._apply_fns = {}  # eval cache: jit once per arch
+        for b in self.bundles:
+            if b.name not in self._train_steps:
+                self._train_steps[b.name] = make_train_step(b, optimizer)
+                self._apply_fns[b.name] = jax.jit(b.apply)
+
+    @property
+    def num_models(self) -> int:
+        return len(self.bundles)
+
+    def step(self, t: int) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for i, b in enumerate(self.bundles):
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.iters[i].next().items()}
+            self.params[i], self.opt_states[i], metrics = \
+                self._train_steps[b.name](self.params[i], self.opt_states[i],
+                                          batch, jnp.asarray(t))
+            out.update({f"c{i}/{k}": float(v) for k, v in metrics.items()})
+        return out
+
+    def evaluate(self, arrays: Dict[str, np.ndarray]) -> Dict[str, float]:
+        from repro.core.evaluation import (fleet_beta_metrics,
+                                           per_label_head_accuracy)
+
+        per_client = []
+        for i, b in enumerate(self.bundles):
+            per_label, present = per_label_head_accuracy(
+                self._apply_fns[b.name], self.params[i], arrays,
+                self.num_labels, num_aux_heads=0,
+                batch_size=self.eval_batch_size)
+            per_client.append((i, per_label, present, self.label_hists[i]))
+        return fleet_beta_metrics(per_client, num_aux_heads=0)
+
+    def save(self, directory: str, step: int) -> None:
+        from repro.checkpoint.io import save_client_states
+
+        save_client_states(directory, step,
+                           zip(self.params, self.opt_states))
+
+    def restore(self, directory: str, step: Optional[int] = None) -> int:
+        from repro.checkpoint.io import restore_client_states
+
+        restored, states = restore_client_states(
+            directory, zip(self.params, self.opt_states), step)
+        self.params = [p for p, _ in states]
+        self.opt_states = [s for _, s in states]
+        return restored
 
 
 def eval_per_label_accuracy(bundle: ModelBundle, params, arrays, num_labels,

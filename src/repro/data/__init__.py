@@ -10,7 +10,7 @@ from repro.data.synthetic import (
     make_synthetic_vision,
     make_synthetic_text,
 )
-from repro.data.pipeline import BatchIterator, PublicPool
+from repro.data.pipeline import BatchIterator, PublicPool, client_stream_seed
 
 __all__ = [
     "PartitionConfig",
@@ -23,4 +23,5 @@ __all__ = [
     "make_synthetic_text",
     "BatchIterator",
     "PublicPool",
+    "client_stream_seed",
 ]

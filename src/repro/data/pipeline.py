@@ -10,6 +10,18 @@ from typing import Dict, Iterator, Optional
 
 import numpy as np
 
+# Stride between per-client private-batch rng streams. Every algorithm
+# (MHD runtime, FedMD, FedAvg, supervised baselines) must derive client
+# iterator seeds through `client_stream_seed` so that cross-algorithm
+# comparisons train on *identical* private sample orders — the paper's
+# tables are comparative, and a different shuffle is a confound.
+PRIVATE_STREAM_STRIDE = 13
+
+
+def client_stream_seed(seed: int, client_id: int) -> int:
+    """Seed of client ``client_id``'s private `BatchIterator` stream."""
+    return seed + PRIVATE_STREAM_STRIDE * client_id
+
 
 class BatchIterator:
     """Infinite shuffled minibatch iterator over index-selected arrays."""

@@ -1,0 +1,80 @@
+"""repro.exp — the declarative Experiment API.
+
+One serializable `ExperimentSpec`, one `Algorithm` protocol, one
+`Experiment.run()` runner for all four algorithms the paper compares:
+MHD (sync or async), FedMD, FedAvg, and supervised (pooled/separate).
+Topology, transport, wire format and schedule are spec edits, not new
+harnesses; results separate JSON-serializable metrics from out-of-band
+live objects (trainer, scheduler, transport).
+
+    from repro.exp import Experiment, get_preset
+    result = Experiment(get_preset("quick")).run()
+    print(result.metrics["mean/aux3/beta_sh"])
+
+Importing this package registers the four paper adapters in
+``ALGORITHMS`` and the named presets in ``PRESETS``.
+"""
+from repro.exp.spec import (
+    CLIENT_ARCHS,
+    AlgorithmSpec,
+    ClientSpec,
+    DataSpec,
+    ExperimentSpec,
+    OptimizerSpec,
+    PartitionSpec,
+    ScheduleSpec,
+    TopologySpec,
+    TrainSpec,
+    TransportSpec,
+    WireSpec,
+)
+from repro.exp.algorithm import (
+    ALGORITHMS,
+    Algorithm,
+    Bindings,
+    Capabilities,
+    make_algorithm,
+)
+from repro.exp import adapters as _adapters  # noqa: F401 — registers algos
+from repro.exp.runner import (
+    Experiment,
+    ExperimentResult,
+    build_bundles,
+    build_graph,
+    build_optimizer,
+    build_transport,
+    materialize_data,
+    run_spec,
+)
+from repro.exp.presets import PRESETS, get_preset, preset_names
+
+__all__ = [
+    "ALGORITHMS",
+    "Algorithm",
+    "AlgorithmSpec",
+    "Bindings",
+    "CLIENT_ARCHS",
+    "Capabilities",
+    "ClientSpec",
+    "DataSpec",
+    "Experiment",
+    "ExperimentResult",
+    "ExperimentSpec",
+    "OptimizerSpec",
+    "PRESETS",
+    "PartitionSpec",
+    "ScheduleSpec",
+    "TopologySpec",
+    "TrainSpec",
+    "TransportSpec",
+    "WireSpec",
+    "build_bundles",
+    "build_graph",
+    "build_optimizer",
+    "build_transport",
+    "get_preset",
+    "make_algorithm",
+    "materialize_data",
+    "preset_names",
+    "run_spec",
+]

@@ -1,0 +1,95 @@
+"""The `Algorithm` protocol: one runtime contract for MHD, FedMD, FedAvg
+and supervised training.
+
+An algorithm adapter is constructed from an `ExperimentSpec`, bound to
+materialized resources (`Bindings`: arrays, partition, bundles, optimizer,
+graph, transport) via ``setup``, and then driven step by step by
+`Experiment.run` — the runner owns the loop, eval cadence, metric
+namespace and checkpoint rhythm; the adapter owns one step.
+
+Adapters advertise `Capabilities` so the runner can reject impossible
+specs up front (an async schedule for a barrier algorithm, a
+heterogeneous fleet for FedAvg) instead of failing deep in a train loop.
+
+Registration goes through ``ALGORITHMS`` (`common/registry.py`): a
+factory ``(spec) -> Algorithm``. `repro.exp` registers the four paper
+algorithms at import; downstream code can register more.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (Any, Callable, Dict, List, Optional, Protocol,
+                    Sequence, Tuple, runtime_checkable)
+
+import numpy as np
+
+from repro.common.registry import Registry
+from repro.core.graph import Adjacency
+from repro.data.partition import Partition
+from repro.exp.spec import ExperimentSpec
+from repro.models.zoo import ModelBundle
+from repro.optim.optimizers import Optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What an algorithm can consume from a spec. The runner enforces
+    these; anything an algorithm doesn't support must make the run fail
+    loudly, not be silently ignored."""
+
+    needs_public_pool: bool = False  # consumes γ_pub public samples
+    supports_async: bool = False  # can run under ScheduleSpec mode="async"
+    heterogeneous_clients: bool = False  # per-client architectures OK
+    uses_topology: bool = False  # consumes the communication graph G_t
+    decentralized: bool = False  # no central aggregator on the wire
+
+
+@dataclasses.dataclass
+class Bindings:
+    """Materialized resources the runner hands to ``Algorithm.setup``."""
+
+    spec: ExperimentSpec
+    arrays: Dict[str, np.ndarray]
+    test_arrays: Dict[str, np.ndarray]
+    partition: Partition
+    bundles: List[ModelBundle]
+    optimizer: Optimizer
+    graph: Adjacency
+    transport: Optional[Any]  # repro.comm.Transport | None (loopback)
+    num_labels: int
+
+
+@runtime_checkable
+class Algorithm(Protocol):
+    """The uniform runtime surface `Experiment.run` drives."""
+
+    name: str
+    capabilities: Capabilities
+
+    def setup(self, bindings: Bindings) -> None:
+        """Build internal state (models, iterators, comm) from resources."""
+        ...
+
+    def step(self, t: int) -> Dict[str, float]:
+        """Advance one step (one wall tick when async); returns the step's
+        metrics under the ``c{i}/...`` namespace."""
+        ...
+
+    def evaluate(self, arrays: Dict[str, np.ndarray]) -> Dict[str, float]:
+        """β_sh/β_priv metrics under ``c{i}/...`` + ``mean/...``."""
+        ...
+
+    def save(self, directory: str, step: int) -> None:
+        ...
+
+    def restore(self, directory: str, step: Optional[int] = None) -> int:
+        ...
+
+
+# name -> factory(spec) -> Algorithm
+ALGORITHMS: Registry[Callable[[ExperimentSpec], Algorithm]] = Registry(
+    "algorithm")
+
+
+def make_algorithm(spec: ExperimentSpec) -> Algorithm:
+    return ALGORITHMS.get(spec.algorithm.name)(spec)

@@ -1,0 +1,132 @@
+"""Named experiment presets — spec-file starting points for the CLI
+(`scripts/run_experiment.py --preset <name>`) and the smoke tier.
+
+Presets are factories (specs are frozen; a factory per call keeps them
+trivially safe to mutate via ``dataclasses.replace``).
+"""
+from __future__ import annotations
+
+from typing import Callable, List
+
+from repro.common.registry import Registry
+from repro.exp.spec import (
+    AlgorithmSpec,
+    ClientSpec,
+    DataSpec,
+    ExperimentSpec,
+    OptimizerSpec,
+    PartitionSpec,
+    ScheduleSpec,
+    TopologySpec,
+    TrainSpec,
+    TransportSpec,
+    WireSpec,
+)
+
+PRESETS: Registry[Callable[[], ExperimentSpec]] = Registry(
+    "experiment preset")
+
+
+def get_preset(name: str) -> ExperimentSpec:
+    return PRESETS.get(name)().validate()
+
+
+def preset_names() -> List[str]:
+    return PRESETS.names()
+
+
+@PRESETS.register("quick")
+def _quick() -> ExperimentSpec:
+    """The benchmark QUICK scale: 4 MHD clients, complete graph, sync."""
+    return ExperimentSpec(
+        name="mhd_quick",
+        algorithm=AlgorithmSpec("mhd", {
+            "nu_emb": 1.0, "nu_aux": 1.0, "delta": 1,
+            "pool_size": 4, "pool_update_every": 10}),
+        data=DataSpec(num_labels=16, samples_per_label=200),
+        partition=PartitionSpec(labels_per_client=4, skew=100.0,
+                                gamma_pub=0.1),
+        clients=ExperimentSpec.uniform_fleet(4, aux_heads=3),
+        optimizer=OptimizerSpec(init_lr=0.05, grad_clip_norm=1.0),
+        train=TrainSpec(steps=600, batch_size=32, public_batch_size=32))
+
+
+@PRESETS.register("gossip")
+def _gossip() -> ExperimentSpec:
+    """The comm_gossip example: async heterogeneous-rate lossy ring with
+    top-k prediction exchange (client 3 is a 4× straggler)."""
+    s_p, straggler = 10, 4
+    return ExperimentSpec(
+        name="gossip_ring",
+        algorithm=AlgorithmSpec("mhd", {
+            "nu_emb": 1.0, "nu_aux": 1.0, "delta": 1,
+            "pool_size": 2, "pool_update_every": s_p}),
+        data=DataSpec(num_labels=12, samples_per_label=200),
+        partition=PartitionSpec(labels_per_client=3, skew=100.0,
+                                gamma_pub=0.1),
+        clients=ExperimentSpec.uniform_fleet(4, aux_heads=2),
+        topology=TopologySpec("cycle"),
+        schedule=ScheduleSpec(mode="async", rates=(1, 1, 1, straggler)),
+        transport=TransportSpec(kind="simulated", latency=1,
+                                bandwidth=64 * 1024, drop_prob=0.10,
+                                seed=7, client_rates={3: straggler}),
+        wire=WireSpec(exchange="prediction_topk", topk=5,
+                      val_dtype="float16", emb_encoding="int8",
+                      horizon=s_p * straggler),
+        optimizer=OptimizerSpec(init_lr=0.05, grad_clip_norm=1.0),
+        train=TrainSpec(steps=200, batch_size=32, public_batch_size=32,
+                        max_staleness=3 * s_p))
+
+
+@PRESETS.register("fedmd_quick")
+def _fedmd_quick() -> ExperimentSpec:
+    """FedMD at the QUICK scale, heterogeneous two-arch fleet (Table 2)."""
+    return ExperimentSpec(
+        name="fedmd_quick",
+        algorithm=AlgorithmSpec("fedmd", {"digest_weight": 1.0}),
+        data=DataSpec(num_labels=16, samples_per_label=200),
+        partition=PartitionSpec(labels_per_client=4, skew=100.0),
+        clients=tuple(ClientSpec(arch=("resnet_tiny34" if i % 2
+                                       else "resnet_tiny"))
+                      for i in range(4)),
+        optimizer=OptimizerSpec(init_lr=0.05, grad_clip_norm=1.0),
+        train=TrainSpec(steps=600, batch_size=32, public_batch_size=32))
+
+
+@PRESETS.register("fedavg_quick")
+def _fedavg_quick() -> ExperimentSpec:
+    """FedAvg at the QUICK scale (Table 1's FA row)."""
+    return ExperimentSpec(
+        name="fedavg_quick",
+        algorithm=AlgorithmSpec("fedavg", {"average_every": 20}),
+        data=DataSpec(num_labels=16, samples_per_label=200),
+        partition=PartitionSpec(labels_per_client=4, skew=100.0),
+        clients=ExperimentSpec.uniform_fleet(4),
+        optimizer=OptimizerSpec(init_lr=0.05, grad_clip_norm=1.0),
+        train=TrainSpec(steps=600, batch_size=32))
+
+
+@PRESETS.register("supervised_quick")
+def _supervised_quick() -> ExperimentSpec:
+    """Pooled-data supervised upper bound at the QUICK scale."""
+    return ExperimentSpec(
+        name="supervised_quick",
+        algorithm=AlgorithmSpec("supervised", {"scope": "pooled"}),
+        data=DataSpec(num_labels=16, samples_per_label=200),
+        partition=PartitionSpec(labels_per_client=4, skew=100.0),
+        clients=ExperimentSpec.uniform_fleet(4),
+        optimizer=OptimizerSpec(init_lr=0.05, grad_clip_norm=1.0),
+        train=TrainSpec(steps=600, batch_size=32))
+
+
+@PRESETS.register("separate_quick")
+def _separate_quick() -> ExperimentSpec:
+    """The 'Separate' isolated-clients baseline at the QUICK scale."""
+    return ExperimentSpec(
+        name="separate_quick",
+        algorithm=AlgorithmSpec("supervised", {"scope": "separate"}),
+        data=DataSpec(num_labels=16, samples_per_label=200),
+        partition=PartitionSpec(labels_per_client=4, skew=100.0),
+        clients=ExperimentSpec.uniform_fleet(4),
+        optimizer=OptimizerSpec(init_lr=0.05, grad_clip_norm=1.0),
+        train=TrainSpec(steps=600, batch_size=32))

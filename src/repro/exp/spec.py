@@ -1,0 +1,305 @@
+"""`ExperimentSpec` — the declarative, JSON-serializable description of one
+decentralized-learning experiment.
+
+A spec says *what* to run — data + partition protocol, the client fleet
+(per-client architectures), the algorithm and its config, communication
+topology, schedule (sync or per-client async rates), transport + wire
+format, optimizer, and the train/eval cadence — and `repro.exp.runner`
+says *how*. Every block is a frozen dataclass; ``to_json``/``from_json``
+round-trip exactly (asserted in tests), so a spec file is a complete,
+shareable record of an experiment and new scenarios are spec edits, not
+new harnesses.
+
+Client architectures are resolved through the ``CLIENT_ARCHS`` registry
+(`common/registry.py`), which maps an arch name to a model-config factory
+``(num_labels, aux_heads, width) -> config`` consumable by
+`models.zoo.build_bundle`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple
+
+from repro.common.registry import Registry
+from repro.models import resnet as _RN
+
+# -- client architecture registry -------------------------------------------
+
+CLIENT_ARCHS: Registry = Registry("client architecture")
+
+
+@CLIENT_ARCHS.register("resnet_tiny")
+def _resnet_tiny(num_labels: int, aux_heads: int, width: int):
+    return _RN.resnet_tiny(num_labels, num_aux_heads=aux_heads, width=width)
+
+
+@CLIENT_ARCHS.register("resnet_tiny34")
+def _resnet_tiny34(num_labels: int, aux_heads: int, width: int):
+    return _RN.resnet_tiny34(num_labels, num_aux_heads=aux_heads, width=width)
+
+
+# -- spec blocks -------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    """Synthetic class-conditional dataset (DESIGN.md §7.1 CPU scale).
+
+    The test set is drawn from the same class prototypes
+    (``prototype_seed = seed``) with sample seed ``seed + 991`` — the
+    convention every benchmark harness used."""
+
+    kind: str = "synthetic_vision"
+    num_labels: int = 16
+    samples_per_label: int = 200
+    image_size: int = 8
+    noise: float = 2.0
+    test_samples_per_label: int = 15
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionSpec:
+    """Paper §3.3 protocol: public pool fraction γ_pub + skewed shards."""
+
+    labels_per_client: int = 4
+    assignment: str = "random"  # "random" | "even"
+    skew: float = 100.0  # the paper's s
+    gamma_pub: float = 0.1
+    even_multiplicity: int = 2
+    seed: Optional[int] = None  # None = DataSpec.seed
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientSpec:
+    """One fleet member. Heterogeneous fleets list different archs."""
+
+    arch: str = "resnet_tiny"
+    aux_heads: int = 0
+    width: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgorithmSpec:
+    """Which `Algorithm` adapter runs, plus its free-form config.
+
+    ``params`` is passed to the adapter (e.g. MHD: ``nu_emb``, ``nu_aux``,
+    ``delta``, ``pool_size``, ``pool_update_every``, ...; fedmd:
+    ``digest_weight``; fedavg: ``average_every``; supervised: ``scope``).
+    Adapters validate the keys they understand."""
+
+    name: str = "mhd"
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """Communication graph G_t (`core/graph.py`)."""
+
+    name: str = "complete"  # complete|cycle|chain|islands|isolated
+    hops: int = 1  # cycle reach
+    islands: int = 2  # islands count
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleSpec:
+    """Stepping model: lockstep or per-client async rates.
+
+    ``mode="async"`` drives the algorithm with per-client logical clocks
+    (`core/scheduler.AsyncScheduler`); ``train.steps`` then counts wall
+    ticks. ``rates[i]`` is wall ticks per local step of client i
+    (None = uniform 1×)."""
+
+    mode: str = "sync"  # "sync" | "async"
+    rates: Optional[Tuple[int, ...]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportSpec:
+    """How published bytes move (`repro.comm.transport`)."""
+
+    kind: str = "loopback"  # "loopback" | "simulated"
+    latency: int = 0  # wall ticks of propagation
+    bandwidth: Optional[int] = None  # bytes per wall tick; None = unlimited
+    drop_prob: float = 0.0
+    seed: int = 0
+    client_rates: Optional[Dict[int, int]] = None  # slow uplinks (async)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireSpec:
+    """What crosses the wire (`repro.comm.wire`).
+
+    ``exchange="params"`` is the legacy simulation shortcut (raw
+    parameters, nothing metered); the prediction modes are the paper's
+    §3.2 protocol."""
+
+    exchange: str = "params"  # params|prediction_topk|prediction_dense
+    topk: int = 32
+    val_dtype: str = "float16"
+    emb_encoding: str = "int8"
+    tail: str = "uniform"
+    horizon: int = 0  # 0 = auto (S_P)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec:
+    """Mirror of `optim.optimizers.OptimizerConfig`; ``total_steps=None``
+    follows ``train.steps``."""
+
+    name: str = "sgd_momentum"
+    init_lr: float = 0.05
+    total_steps: Optional[int] = None
+    warmup_steps: int = 0
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    grad_clip_norm: Optional[float] = None
+    state_dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSpec:
+    """Loop cadence: steps (wall ticks when async), batching, eval and
+    checkpoint rhythm. ``eval_every=0`` = final evaluation only."""
+
+    steps: int = 600
+    batch_size: int = 32
+    public_batch_size: int = 32
+    eval_every: int = 0
+    eval_batch_size: int = 256
+    max_staleness: Optional[int] = None
+    seed: int = 0
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0  # 0 = final only (when checkpoint_dir is set)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    name: str = "experiment"
+    algorithm: AlgorithmSpec = dataclasses.field(default_factory=AlgorithmSpec)
+    data: DataSpec = dataclasses.field(default_factory=DataSpec)
+    partition: PartitionSpec = dataclasses.field(
+        default_factory=PartitionSpec)
+    clients: Tuple[ClientSpec, ...] = (ClientSpec(),) * 4
+    topology: TopologySpec = dataclasses.field(default_factory=TopologySpec)
+    schedule: ScheduleSpec = dataclasses.field(default_factory=ScheduleSpec)
+    transport: TransportSpec = dataclasses.field(
+        default_factory=TransportSpec)
+    wire: WireSpec = dataclasses.field(default_factory=WireSpec)
+    optimizer: OptimizerSpec = dataclasses.field(
+        default_factory=OptimizerSpec)
+    train: TrainSpec = dataclasses.field(default_factory=TrainSpec)
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.clients)
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExperimentSpec":
+        d = dict(d)
+        sub = {
+            "algorithm": AlgorithmSpec,
+            "data": DataSpec,
+            "partition": PartitionSpec,
+            "topology": TopologySpec,
+            "schedule": ScheduleSpec,
+            "transport": TransportSpec,
+            "wire": WireSpec,
+            "optimizer": OptimizerSpec,
+            "train": TrainSpec,
+        }
+        kwargs: Dict[str, Any] = {}
+        for key, val in d.items():
+            if key == "name":
+                kwargs[key] = val
+            elif key == "clients":
+                kwargs[key] = tuple(_build(ClientSpec, c) for c in val)
+            elif key in sub:
+                kwargs[key] = _build(sub[key], val)
+            else:
+                raise ValueError(f"unknown ExperimentSpec field {key!r}")
+        return cls(**kwargs)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(text))
+
+    def validate(self) -> "ExperimentSpec":
+        """Cheap structural checks (registry membership is the runner's
+        job — it owns the Algorithm registry)."""
+        if not self.clients:
+            raise ValueError("an experiment needs at least one client")
+        for c in self.clients:
+            if c.arch not in CLIENT_ARCHS:
+                raise ValueError(
+                    f"unknown client arch {c.arch!r}; "
+                    f"known: {CLIENT_ARCHS.names()}")
+        if self.schedule.mode not in ("sync", "async"):
+            raise ValueError(f"unknown schedule mode {self.schedule.mode!r}")
+        if self.schedule.rates is not None and \
+                len(self.schedule.rates) != self.num_clients:
+            raise ValueError(
+                f"{len(self.schedule.rates)} schedule rates for "
+                f"{self.num_clients} clients")
+        if self.schedule.mode == "sync" and self.schedule.rates is not None:
+            raise ValueError(
+                "schedule.rates only applies to mode='async'; a sync run "
+                "would silently ignore them")
+        if self.transport.kind not in ("loopback", "simulated"):
+            raise ValueError(f"unknown transport kind "
+                             f"{self.transport.kind!r}")
+        if self.wire.exchange == "params" and \
+                self.transport.kind != "loopback":
+            raise ValueError(
+                "wire.exchange='params' puts nothing on a transport — a "
+                f"{self.transport.kind!r} transport would silently not "
+                "apply; use a prediction exchange or transport 'loopback'")
+        if self.wire.exchange not in ("params", "prediction_topk",
+                                      "prediction_dense"):
+            raise ValueError(f"unknown exchange {self.wire.exchange!r}")
+        if self.topology.name not in ("complete", "cycle", "chain",
+                                      "islands", "isolated"):
+            raise ValueError(f"unknown topology {self.topology.name!r}")
+        if self.data.kind != "synthetic_vision":
+            raise ValueError(f"unknown data kind {self.data.kind!r}")
+        return self
+
+    # -- convenience constructors ------------------------------------------
+
+    @staticmethod
+    def uniform_fleet(num_clients: int, arch: str = "resnet_tiny",
+                      aux_heads: int = 0,
+                      width: int = 8) -> Tuple[ClientSpec, ...]:
+        return tuple(ClientSpec(arch=arch, aux_heads=aux_heads, width=width)
+                     for _ in range(num_clients))
+
+
+def _build(cls, d: Any) -> Any:
+    """Rebuild one frozen spec block from its asdict/JSON form, restoring
+    the non-JSON-native types (tuples, int dict keys)."""
+    if isinstance(d, cls):
+        return d
+    if not isinstance(d, dict):
+        raise TypeError(f"expected a dict for {cls.__name__}, got {d!r}")
+    known = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(
+            f"unknown {cls.__name__} fields {sorted(unknown)}; "
+            f"known: {sorted(known)}")
+    kwargs = dict(d)
+    if cls is ScheduleSpec and kwargs.get("rates") is not None:
+        kwargs["rates"] = tuple(int(r) for r in kwargs["rates"])
+    if cls is TransportSpec and kwargs.get("client_rates") is not None:
+        kwargs["client_rates"] = {int(k): int(v)
+                                  for k, v in kwargs["client_rates"].items()}
+    return cls(**kwargs)

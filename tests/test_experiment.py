@@ -1,0 +1,322 @@
+"""The declarative Experiment API: spec round-trip, registry wiring,
+runner equivalence with direct trainer construction, metrics parity for
+the baselines, and the unified private-batch rng streams."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DecentralizedTrainer,
+    MHDConfig,
+    RunConfig,
+    complete_graph,
+)
+from repro.data import (
+    PartitionConfig,
+    client_stream_seed,
+    make_synthetic_vision,
+    partition_dataset,
+)
+from repro.exp import (
+    ALGORITHMS,
+    AlgorithmSpec,
+    ClientSpec,
+    DataSpec,
+    Experiment,
+    ExperimentSpec,
+    OptimizerSpec,
+    PartitionSpec,
+    ScheduleSpec,
+    TopologySpec,
+    TrainSpec,
+    TransportSpec,
+    WireSpec,
+    get_preset,
+    preset_names,
+)
+from repro.models.resnet import resnet_tiny
+from repro.models.zoo import build_bundle
+from repro.optim.optimizers import OptimizerConfig, make_optimizer
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def tiny_spec(algo="mhd", params=None, clients=None, *, steps=4,
+              eval_every=0, schedule=None, **train_kw):
+    return ExperimentSpec(
+        name="tiny",
+        algorithm=AlgorithmSpec(algo, params or {}),
+        data=DataSpec(num_labels=6, samples_per_label=30),
+        partition=PartitionSpec(labels_per_client=3, gamma_pub=0.15),
+        clients=clients or ExperimentSpec.uniform_fleet(2),
+        schedule=schedule or ScheduleSpec(),
+        optimizer=OptimizerSpec(init_lr=0.05, total_steps=steps),
+        train=TrainSpec(steps=steps, batch_size=16, public_batch_size=16,
+                        eval_every=eval_every, **train_kw))
+
+
+# -- spec serialization ------------------------------------------------------
+
+
+def test_spec_json_roundtrip_heterogeneous():
+    spec = ExperimentSpec(
+        name="rt",
+        algorithm=AlgorithmSpec("mhd", {"nu_aux": 2.0, "pool_size": 3}),
+        data=DataSpec(num_labels=10, samples_per_label=50, noise=1.5),
+        partition=PartitionSpec(labels_per_client=2, assignment="even",
+                                skew=10.0, seed=7),
+        clients=(ClientSpec("resnet_tiny", aux_heads=2),
+                 ClientSpec("resnet_tiny34", aux_heads=2, width=16),
+                 ClientSpec("resnet_tiny", aux_heads=2)),
+        topology=TopologySpec("cycle", hops=2),
+        schedule=ScheduleSpec(mode="async", rates=(1, 4, 2)),
+        transport=TransportSpec(kind="simulated", latency=2,
+                                bandwidth=4096, drop_prob=0.25, seed=3,
+                                client_rates={1: 4, 2: 2}),
+        wire=WireSpec(exchange="prediction_topk", topk=5, horizon=20),
+        optimizer=OptimizerSpec(init_lr=0.1, grad_clip_norm=1.0),
+        train=TrainSpec(steps=40, eval_every=10, max_staleness=30, seed=5))
+    text = spec.to_json()
+    json.loads(text)  # valid JSON
+    restored = ExperimentSpec.from_json(text)
+    assert restored == spec
+    # types survive JSON (not just equality under coercion)
+    assert isinstance(restored.clients, tuple)
+    assert isinstance(restored.schedule.rates, tuple)
+    assert all(isinstance(k, int)
+               for k in restored.transport.client_rates)
+
+
+def test_spec_roundtrip_all_presets():
+    for name in preset_names():
+        spec = get_preset(name)
+        assert ExperimentSpec.from_json(spec.to_json()) == spec, name
+
+
+def test_spec_rejects_unknown_fields_and_values():
+    spec = tiny_spec()
+    d = json.loads(spec.to_json())
+    d["train"]["warp_factor"] = 9
+    with pytest.raises(ValueError, match="warp_factor"):
+        ExperimentSpec.from_dict(d)
+    with pytest.raises(ValueError, match="unknown client arch"):
+        tiny_spec(clients=(ClientSpec("resnet_huge"),)).validate()
+    with pytest.raises(ValueError, match="rates"):
+        tiny_spec(schedule=ScheduleSpec(mode="async",
+                                        rates=(1, 1, 1))).validate()
+
+
+def test_adapter_rejects_unknown_algorithm_params():
+    from repro.exp import make_algorithm
+
+    with pytest.raises(ValueError, match="nu_typo"):
+        Experiment(tiny_spec(params={"nu_typo": 1.0})).run()
+    # caught at adapter construction — the CLI --dry-run path — without
+    # building data or models
+    with pytest.raises(ValueError, match="nu_typo"):
+        make_algorithm(tiny_spec(params={"nu_typo": 1.0}))
+    with pytest.raises(ValueError, match="scoop"):
+        make_algorithm(tiny_spec("supervised", params={"scoop": "pooled"}))
+
+
+def test_registry_capabilities():
+    for name in ("mhd", "fedmd", "fedavg", "supervised"):
+        assert name in ALGORITHMS
+    mhd = ALGORITHMS.get("mhd")(tiny_spec())
+    assert mhd.capabilities.supports_async and mhd.capabilities.decentralized
+    fedavg = ALGORITHMS.get("fedavg")(tiny_spec("fedavg"))
+    assert not fedavg.capabilities.heterogeneous_clients
+    assert not fedavg.capabilities.supports_async
+
+
+def test_capability_checks_reject_impossible_specs():
+    with pytest.raises(ValueError, match="async"):
+        Experiment(tiny_spec("fedavg",
+                             schedule=ScheduleSpec(mode="async"))).run()
+    het = (ClientSpec("resnet_tiny"), ClientSpec("resnet_tiny34"))
+    with pytest.raises(ValueError, match="identical"):
+        Experiment(tiny_spec("fedavg", clients=het)).run()
+    # pooled supervised needs a uniform fleet (one model is trained)
+    with pytest.raises(ValueError, match="pooled"):
+        Experiment(tiny_spec("supervised", {"scope": "pooled"},
+                             clients=het)).run()
+    # distillation algorithms need a public pool
+    spec = tiny_spec("mhd")
+    spec = spec.from_dict({**json.loads(spec.to_json()),
+                           "partition": {**json.loads(spec.to_json())
+                                         ["partition"], "gamma_pub": 0.0}})
+    with pytest.raises(ValueError, match="gamma_pub"):
+        Experiment(spec).run()
+    # fleet must carry at least num_aux_heads heads everywhere
+    mixed_heads = (ClientSpec("resnet_tiny", aux_heads=2),
+                   ClientSpec("resnet_tiny", aux_heads=1))
+    with pytest.raises(ValueError, match="aux heads"):
+        Experiment(tiny_spec("mhd", {"pool_size": 2, "pool_update_every": 2},
+                             clients=mixed_heads)).run()
+    # spec blocks an algorithm cannot consume must fail loudly, not be
+    # silently ignored: transports, staleness gates, rates under sync
+    def replace(spec, **kw):
+        import dataclasses
+        return dataclasses.replace(spec, **kw)
+
+    with pytest.raises(ValueError, match="transport"):
+        Experiment(replace(
+            tiny_spec("fedmd"),
+            transport=TransportSpec(kind="simulated", drop_prob=0.9))).run()
+    with pytest.raises(ValueError, match="max_staleness"):
+        Experiment(tiny_spec("supervised", max_staleness=10)).run()
+    with pytest.raises(ValueError, match="rates"):
+        tiny_spec(schedule=ScheduleSpec(mode="sync",
+                                        rates=(1, 1))).validate()
+
+
+# -- runner equivalence with direct construction -----------------------------
+
+
+def test_mhd_experiment_matches_direct_trainer():
+    """Acceptance: Experiment.run() on an MHD spec reproduces direct
+    DecentralizedTrainer construction — same step metrics, same eval
+    history, metric for metric."""
+    steps, s_p, labels, K = 6, 2, 6, 2
+    spec = tiny_spec(
+        "mhd", {"pool_size": K, "pool_update_every": s_p, "delta": 1,
+                "nu_emb": 1.0, "nu_aux": 1.0},
+        clients=ExperimentSpec.uniform_fleet(K, aux_heads=1),
+        steps=steps, eval_every=3)
+
+    runner_steps = []
+    result = Experiment(spec).run(
+        on_step=lambda t, m: runner_steps.append(m))
+
+    # -- direct path: hand-rolled construction, old-harness style --------
+    ds = make_synthetic_vision(num_labels=labels, samples_per_label=30,
+                               image_size=8, noise=2.0, seed=0)
+    test = make_synthetic_vision(num_labels=labels, samples_per_label=15,
+                                 image_size=8, noise=2.0, seed=991,
+                                 prototype_seed=0)
+    part = partition_dataset(ds.labels, PartitionConfig(
+        num_clients=K, num_labels=labels, labels_per_client=3,
+        assignment="random", skew=100.0, gamma_pub=0.15, seed=0))
+    bundles = [build_bundle(resnet_tiny(labels, num_aux_heads=1))
+               for _ in range(K)]
+    opt = make_optimizer(OptimizerConfig(init_lr=0.05, total_steps=steps))
+    trainer = DecentralizedTrainer(
+        bundles, opt,
+        MHDConfig(nu_emb=1.0, nu_aux=1.0, num_aux_heads=1, delta=1,
+                  pool_size=K, pool_update_every=s_p),
+        RunConfig(steps=steps, batch_size=16, public_batch_size=16,
+                  eval_every=0, seed=0),
+        {"images": ds.images, "labels": ds.labels},
+        part.client_indices, part.public_indices, complete_graph(K), labels)
+    test_arrays = {"images": test.images, "labels": test.labels}
+    direct_steps, direct_history = [], []
+    for t in range(steps):
+        direct_steps.append(trainer.step(t))
+        if (t + 1) % 3 == 0:
+            direct_history.append((t + 1, trainer.evaluate(test_arrays)))
+
+    assert len(runner_steps) == len(direct_steps)
+    for m_run, m_dir in zip(runner_steps, direct_steps):
+        assert m_run == m_dir
+    assert [t for t, _ in result.history] == [t for t, _ in direct_history]
+    for (_, ev_run), (_, ev_dir) in zip(result.history, direct_history):
+        assert ev_run == ev_dir
+    assert result.metrics == direct_history[-1][1]
+
+
+# -- all four algorithms through one runner ----------------------------------
+
+
+@pytest.mark.parametrize("algo,params,clients", [
+    ("mhd", {"pool_size": 2, "pool_update_every": 2}, "aux"),
+    ("fedmd", {"digest_weight": 0.5}, "het"),
+    ("fedavg", {"average_every": 2}, None),
+    ("supervised", {"scope": "pooled"}, None),
+    ("supervised", {"scope": "separate"}, None),
+])
+def test_algorithms_share_runner_and_metric_namespace(algo, params, clients):
+    fleets = {"aux": ExperimentSpec.uniform_fleet(2, aux_heads=1),
+              "het": (ClientSpec("resnet_tiny"), ClientSpec("resnet_tiny34")),
+              None: None}
+    result = Experiment(tiny_spec(algo, params, fleets[clients])).run()
+    # metrics parity: every algorithm reports both betas per client + mean
+    for key in ("mean/main/beta_sh", "mean/main/beta_priv",
+                "c0/main/beta_sh", "c0/main/beta_priv"):
+        assert key in result.metrics, (algo, key)
+        assert np.isfinite(result.metrics[key])
+    # the _trainer leak is gone: results are JSON-serializable
+    json.dumps(result.metrics)
+    json.dumps(result.to_payload())
+    assert result.trainer is not None  # live object rides out-of-band
+
+
+def test_unified_private_streams_across_algorithms():
+    """MHD, FedMD, FedAvg and separate-supervised draw client i's private
+    batches from the same client_stream_seed stream."""
+    from repro.core.fedavg import FedAvgTrainer
+    from repro.core.fedmd import FedMDTrainer
+    from repro.core.supervised import SupervisedTrainer
+
+    assert client_stream_seed(5, 3) == 5 + 13 * 3
+    spec = tiny_spec()
+    exp = Experiment(spec)
+    b = exp.build_bindings()
+    opt = b.optimizer
+    mhd = DecentralizedTrainer(
+        b.bundles, opt, MHDConfig(num_aux_heads=0, pool_size=2,
+                                  pool_update_every=2),
+        RunConfig(steps=2, batch_size=16, public_batch_size=16, seed=0),
+        b.arrays, b.partition.client_indices, b.partition.public_indices,
+        b.graph, b.num_labels)
+    fedmd = FedMDTrainer(b.bundles, opt, b.arrays,
+                         b.partition.client_indices,
+                         b.partition.public_indices, b.num_labels,
+                         batch_size=16, seed=0)
+    fedavg = FedAvgTrainer(b.bundles[0], opt, b.arrays,
+                           b.partition.client_indices, b.num_labels,
+                           batch_size=16, seed=0)
+    sup = SupervisedTrainer(b.bundles, opt, b.arrays,
+                            b.partition.client_indices, b.num_labels,
+                            batch_size=16, scope="separate", seed=0)
+    for i in range(2):
+        want = mhd.clients[i].private_iter.next()
+        for other in (fedmd.iters[i], fedavg.iters[i], sup.iters[i]):
+            got = other.next()
+            np.testing.assert_array_equal(got["labels"], want["labels"])
+            np.testing.assert_array_equal(got["images"], want["images"])
+
+
+# -- runner extras -----------------------------------------------------------
+
+
+def test_runner_checkpointing(tmp_path):
+    ck = str(tmp_path / "ckpt")
+    spec = tiny_spec("supervised", {"scope": "separate"}, steps=2,
+                     checkpoint_dir=ck)
+    Experiment(spec).run()
+    # final checkpoint for both isolated clients
+    for i in range(2):
+        assert os.path.isdir(os.path.join(ck, f"client_{i}",
+                                          f"step_{2:010d}"))
+
+
+def test_spec_file_and_dry_run_cli(tmp_path):
+    spec_path = str(tmp_path / "exp.json")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu")
+    script = os.path.join(REPO, "scripts", "run_experiment.py")
+    out = subprocess.run(
+        [sys.executable, script, "--preset", "gossip",
+         "--save-spec", spec_path],
+        env=env, capture_output=True, text=True, cwd=REPO)
+    assert out.returncode == 0, out.stderr
+    out = subprocess.run(
+        [sys.executable, script, "--spec", spec_path, "--dry-run"],
+        env=env, capture_output=True, text=True, cwd=REPO)
+    assert out.returncode == 0, out.stderr
+    assert "spec OK" in out.stdout
+    assert "SimulatedNetwork" in out.stdout
