@@ -30,6 +30,7 @@ def main(argv=None) -> int:
         fig6_topology,
         hetero_models,
         roofline,
+        socket_gossip,
         table1_baselines,
         table2_fedmd,
         table3_variants,
@@ -41,6 +42,7 @@ def main(argv=None) -> int:
     benches = [
         ("comm", lambda: comm_efficiency.main(scale, args.full)),
         ("async", lambda: async_staleness.main(scale, args.full)),
+        ("socket", lambda: socket_gossip.main(scale, args.full)),
         ("roofline", lambda: roofline.main(scale, args.full, args.art_dir)),
         ("table1", lambda: table1_baselines.main(scale)),
         ("fig3", lambda: fig3_loss_weights.main(scale, args.full)),

@@ -1,0 +1,119 @@
+"""Real-wire smoke benchmark: socket transport (multi-process) vs the
+simulated network (in-process), same spec.
+
+Two runs of the ``gossip_socket`` preset's ring:
+
+  * ``simulated`` — `Experiment.run()` in this process with a lossless
+    zero-latency `SimulatedNetwork` (the baseline everything before this
+    PR measured against);
+  * ``socket`` — `launch_gossip`: one OS process per client over real
+    localhost TCP, so the wall-clock number includes process spawn, jax
+    warmup per process, and actual kernel socket I/O.
+
+Each run appends a row to ``BENCH_socket.json`` at the repo root —
+{wall seconds, bytes/edge offered + delivered, distillation steps} — so
+the simulation-vs-reality gap accumulates across PRs.
+
+    PYTHONPATH=src python -m benchmarks.run --only socket
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List
+
+from benchmarks.common import row
+
+_BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_socket.json")
+
+
+def _append_bench_rows(rows: List[Dict]) -> None:
+    existing: List[Dict] = []
+    try:
+        with open(_BENCH_JSON) as f:
+            existing = json.load(f)
+        if not isinstance(existing, list):
+            existing = []
+    except (OSError, ValueError):
+        existing = []
+    with open(_BENCH_JSON, "w") as f:
+        json.dump(existing + rows, f, indent=1)
+        f.write("\n")
+
+
+def _spec(steps: int, kind: str):
+    from repro.exp import TransportSpec, get_preset
+
+    spec = get_preset("gossip_socket")
+    spec = dataclasses.replace(
+        spec, train=dataclasses.replace(spec.train, steps=steps),
+        transport=TransportSpec(kind=kind))
+    return spec
+
+
+def main(scale=None, full: bool = False) -> list:
+    from repro.exp import Experiment
+    from repro.launch.gossip import fleet_summary, launch_gossip
+
+    steps = 40 if full else 16
+    out, bench_rows = [], []
+
+    # in-process baseline over the simulated (lossless, zero-latency) net
+    sim_spec = _spec(steps, "simulated")
+    t0 = time.time()
+    result = Experiment(sim_spec).run()
+    sim_wall = time.time() - t0
+    meter = result.trainer.meter
+    edges = max(len(meter.by_edge), 1)
+    sim = {
+        "name": "socket/simulated_inprocess",
+        "transport": "simulated",
+        "ticks": steps,
+        "wall_s": round(sim_wall, 2),
+        "offered_bytes_per_edge": round(meter.total_bytes / edges, 1),
+        "delivered_bytes_per_edge": round(
+            meter.delivered_bytes / edges, 1),
+    }
+    out.append(row(sim["name"], sim_wall / steps * 1e6,
+                   f"wall_s={sim['wall_s']};bytes_per_edge="
+                   f"{sim['offered_bytes_per_edge']:.0f}"))
+    bench_rows.append(sim)
+
+    # the real wire: one OS process per client over localhost TCP
+    sock_spec = _spec(steps, "socket")
+    t0 = time.time()
+    fleet = fleet_summary(launch_gossip(sock_spec, timeout=240.0))
+    sock_wall = time.time() - t0
+    edges = sock_spec.num_clients  # directed ring: one out-edge per client
+    sock = {
+        "name": "socket/tcp_multiprocess",
+        "transport": "socket",
+        "ticks": steps,
+        "wall_s": round(sock_wall, 2),
+        "offered_bytes_per_edge": round(
+            fleet["offered_bytes"] / edges, 1),
+        "delivered_bytes_per_edge": round(
+            fleet["delivered_bytes"] / edges, 1),
+        "distill_steps": fleet["distill_steps_total"],
+        "wall_s_slowest_client": round(fleet["wall_seconds_max"], 2),
+    }
+    out.append(row(sock["name"], sock_wall / steps * 1e6,
+                   f"wall_s={sock['wall_s']};bytes_per_edge="
+                   f"{sock['offered_bytes_per_edge']:.0f};"
+                   f"delivered_per_edge="
+                   f"{sock['delivered_bytes_per_edge']:.0f}"))
+    bench_rows.append(sock)
+
+    _append_bench_rows(bench_rows)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, "src")
+    for line in main():
+        print(line)

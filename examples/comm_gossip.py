@@ -66,8 +66,11 @@ def main():
     print("\nmetered traffic (predictions only — params stayed home):")
     print(trainer.meter.format_table())
     n_params = tree_size(trainer.clients[0].params)
+    # inbound = *delivered* bytes: a dropped message costs the sender
+    # (offered) but never the student
     print(f"\nper-client inbound ≈ "
-          f"{ev['comm/total_bytes'] / K / ticks:,.0f} B/tick; one FedAvg "
+          f"{ev['comm/delivered_bytes'] / K / ticks:,.0f} B/tick (of "
+          f"{ev['comm/total_bytes'] / K / ticks:,.0f} offered); one FedAvg "
           f"round of this model would be {2 * 4 * n_params:,} B per client.")
 
 

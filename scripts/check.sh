@@ -44,4 +44,12 @@ python scripts/run_experiment.py --preset quick --dry-run >/dev/null || {
     exit 1
 }
 
+# socket-transport smoke: 2 OS processes gossiping over real TCP. The hard
+# `timeout` guarantees a hung socket can never wedge the fast tier; the
+# script itself fails if a client never distilled or delivered > offered.
+timeout 60 python scripts/run_gossip_procs.py --smoke >/dev/null || {
+    echo "check.sh: 2-process socket gossip smoke failed" >&2
+    exit 1
+}
+
 exec python -m pytest -x -q "${MARK[@]}" "$@"

@@ -47,8 +47,10 @@ def dry_run(spec) -> int:
     Experiment(spec)._check_capabilities(algo)
     bundles = build_bundles(spec)
     graph = build_graph(spec)
-    transport = build_transport(spec)
     build_optimizer(spec)
+    transport = build_transport(spec)  # built last: a socket kind binds
+    if transport is not None:          # real listeners — release them now
+        transport.close()
     print(f"spec OK: {spec.name}")
     print(f"  algorithm: {spec.algorithm.name} "
           f"(capabilities: {algo.capabilities})")

@@ -11,6 +11,10 @@ subsystem instead of a simulation shortcut:
   transport.py  how bytes move — in-process loopback, and a simulated
                 network with per-edge latency (in steps), bandwidth caps
                 and drop probability.
+  socket.py     the same interface over real TCP on localhost: length-
+                prefixed frames, per-edge connections from the graph, a
+                non-blocking drain — the transport behind the
+                multi-process gossip runner (`launch/gossip.py`).
   bus.py        per-edge mailboxes driven by the graph G_t from
                 `core/graph.py`; staleness stamps; `PredictionPool`, the
                 prediction twin of the param `CheckpointPool`.
@@ -36,6 +40,7 @@ from repro.comm.bus import (
     PredictionWindow,
 )
 from repro.comm.metering import CommMeter
+from repro.comm.socket import SocketTransport, allocate_ports
 from repro.comm.transport import (
     Delivery,
     EdgeSpec,
@@ -96,8 +101,10 @@ __all__ = [
     "PredictionPool",
     "PredictionWindow",
     "SimulatedNetwork",
+    "SocketTransport",
     "TopKCodec",
     "Transport",
+    "allocate_ports",
     "dense_frame_nbytes",
     "densify_topk",
     "make_codec",

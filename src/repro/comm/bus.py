@@ -68,7 +68,10 @@ class PredictionBus:
                 self.meter.record(step, src, dst, len(payload))
 
     def deliver(self, step: int) -> int:
-        """Drain arrived messages into mailboxes; returns #deliveries."""
+        """Drain arrived messages into mailboxes; returns #deliveries.
+        Each arrival is metered as *delivered* traffic — the receiver-side
+        book, which excludes messages the transport dropped (those were
+        metered as offered at ``publish`` time and nowhere else)."""
         n = 0
         for dst in range(self.num_clients):
             for d in self.transport.poll(dst, step):
@@ -76,6 +79,9 @@ class PredictionBus:
                 if cur is None or d.sent_step >= cur.sent_step:
                     self._mailboxes[dst][d.src] = Mail(
                         d.src, d.payload, d.sent_step, d.recv_step)
+                if self.meter is not None:
+                    self.meter.record_delivery(step, d.src, dst,
+                                               len(d.payload))
                 n += 1
         return n
 

@@ -1,8 +1,18 @@
 """Bytes-per-edge-per-step ledger for the prediction exchange.
 
-Every transport send is recorded as (step, src, dst, nbytes); the ledger
-answers the paper's §3.2 accounting questions from *measured* traffic:
-total bytes, per-edge totals, per-step totals, and amortized
+The ledger keeps two books:
+
+  * **offered** traffic — every ``bus.publish`` send is recorded as
+    (step, src, dst, nbytes) via ``record``: the sender-side cost, spent
+    whether or not the network drops the message.
+  * **delivered** traffic — every message that actually reaches a
+    mailbox is recorded via ``record_delivery`` (called by
+    ``bus.deliver``): the receiver-side §3.2 accounting. On a lossless
+    transport the books agree; with drops, delivered ≤ offered and the
+    gap is exactly the lost bytes.
+
+It answers the paper's §3.2 accounting questions from *measured*
+traffic: total bytes, per-edge totals, per-step totals, and amortized
 bytes-per-client-step (publishes happen every S_P steps but cover S_P
 public batches, so the amortized figure is the one comparable to
 `benchmarks/comm_efficiency._mhd_bytes_per_step`).
@@ -29,18 +39,34 @@ class CommMeter:
         self.by_step: Dict[int, int] = defaultdict(int)
         self.by_src: Dict[int, int] = defaultdict(int)
         self.by_dst: Dict[int, int] = defaultdict(int)
+        # delivered (receiver-side) book — see record_delivery
+        self.delivered_bytes = 0
+        self.delivered_messages = 0
+        self.by_edge_delivered: Dict[Edge, int] = defaultdict(int)
+        self.by_dst_delivered: Dict[int, int] = defaultdict(int)
         # bounded-staleness gate counters (async runtime)
         self.gate_fresh: Dict[int, int] = defaultdict(int)
         self.gate_stale: Dict[int, int] = defaultdict(int)
         self.rejected_publishes = 0  # non-finite payloads refused by codecs
 
     def record(self, step: int, src: int, dst: int, nbytes: int) -> None:
+        """One *offered* send (sender-side cost; drops included)."""
         self.total_bytes += nbytes
         self.num_messages += 1
         self.by_edge[(src, dst)] += nbytes
         self.by_step[step] += nbytes
         self.by_src[src] += nbytes
         self.by_dst[dst] += nbytes
+
+    def record_delivery(self, step: int, src: int, dst: int,
+                        nbytes: int) -> None:
+        """One message that actually arrived in ``dst``'s mailbox —
+        dropped/in-flight messages never reach this book, so receiver-side
+        statistics exclude them."""
+        self.delivered_bytes += nbytes
+        self.delivered_messages += 1
+        self.by_edge_delivered[(src, dst)] += nbytes
+        self.by_dst_delivered[dst] += nbytes
 
     def record_gate(self, client: int, fresh: int, stale: int) -> None:
         """One teacher-assembly event: ``fresh`` sampled pool entries
@@ -67,15 +93,19 @@ class CommMeter:
         return self.total_bytes / max(num_steps, 1)
 
     def received_per_client_step(self, num_steps: int) -> Dict[int, float]:
-        """Amortized inbound bytes per client — the per-student cost the
-        paper compares against FedAvg's full-model transfer."""
+        """Amortized *delivered* inbound bytes per client — the
+        per-student cost the paper compares against FedAvg's full-model
+        transfer. Counts the delivered book: a dropped message costs the
+        sender (offered) but never the student."""
         return {dst: b / max(num_steps, 1)
-                for dst, b in sorted(self.by_dst.items())}
+                for dst, b in sorted(self.by_dst_delivered.items())}
 
     def summary(self) -> Dict[str, float]:
         return {
             "total_bytes": float(self.total_bytes),
             "num_messages": float(self.num_messages),
+            "delivered_bytes": float(self.delivered_bytes),
+            "delivered_messages": float(self.delivered_messages),
             "num_edges": float(len(self.by_edge)),
             "max_edge_bytes": float(max(self.by_edge.values(), default=0)),
             "stale_skips": float(sum(self.gate_stale.values())),
@@ -83,9 +113,16 @@ class CommMeter:
         }
 
     def format_table(self) -> str:
-        lines = ["edge          bytes"]
-        for (src, dst), b in sorted(self.by_edge.items()):
-            lines.append(f"{src:>3} -> {dst:<3}  {b:>12,}")
-        lines.append(f"total        {self.total_bytes:>12,} "
-                     f"({self.num_messages} messages)")
+        lines = ["edge         offered bytes   delivered"]
+        # union of both books: a multi-process per-rank meter has
+        # outbound-only offered edges and inbound-only delivered edges
+        edges = sorted(set(self.by_edge) | set(self.by_edge_delivered))
+        for (src, dst) in edges:
+            b = self.by_edge.get((src, dst), 0)
+            d = self.by_edge_delivered.get((src, dst), 0)
+            lines.append(f"{src:>3} -> {dst:<3}  {b:>12,}  {d:>12,}")
+        lines.append(f"total        {self.total_bytes:>12,}  "
+                     f"{self.delivered_bytes:>12,} "
+                     f"({self.num_messages} sent, "
+                     f"{self.delivered_messages} delivered)")
         return "\n".join(lines)

@@ -57,6 +57,10 @@ class Transport:
         """Messages for ``dst`` that have arrived by ``step`` (FIFO)."""
         raise NotImplementedError
 
+    def close(self) -> None:
+        """Release held resources. In-process transports hold none; the
+        socket transport overrides this to close real listeners."""
+
 
 class LoopbackTransport(Transport):
     """Lossless, zero-latency, infinite-bandwidth in-process queues."""
@@ -128,9 +132,7 @@ class SimulatedNetwork(Transport):
         edge = (src, dst)
         spec = self.spec(edge)
         self.sent_count += 1
-        if spec.drop_prob > 0.0 and self.rng.random() < spec.drop_prob:
-            self.dropped_count += 1
-            return
+        dropped = spec.drop_prob > 0.0 and self.rng.random() < spec.drop_prob
         start = max(step, self._edge_free_at[edge])
         # effective uplink of a rate-r sender is bandwidth/r bytes per
         # wall tick; propagation latency is a link property and doesn't
@@ -138,7 +140,13 @@ class SimulatedNetwork(Transport):
         tx_steps = 0 if not spec.bandwidth else \
             int(math.ceil(len(payload) * self.rate(src) / spec.bandwidth))
         finish = start + tx_steps
+        # the uplink is occupied for dropped messages too: on a real wire
+        # the sender spends the transmit time either way (the loss happens
+        # downstream), so a drop still delays the edge's later messages
         self._edge_free_at[edge] = finish
+        if dropped:
+            self.dropped_count += 1
+            return
         self._inflight[edge].append(
             _InFlight(payload, step, finish + spec.latency))
 

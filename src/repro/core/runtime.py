@@ -112,7 +112,18 @@ class DecentralizedTrainer:
         exchange: str = "params",
         comm: Optional[Any] = None,  # repro.comm.CommConfig
         transport: Optional[Any] = None,  # repro.comm.Transport
+        local_clients: Optional[Sequence[int]] = None,
     ):
+        # ``local_clients`` restricts which clients this *process* drives
+        # (multi-process gossip: one trainer per OS process, each stepping
+        # and publishing only its own clients over a socket transport;
+        # remote clients exist only as mailbox senders). None = all — the
+        # single-process behavior, unchanged.
+        if local_clients is not None and exchange == "params":
+            raise ValueError(
+                "local_clients requires a prediction exchange: the legacy "
+                "params mode reads neighbor parameters from shared memory, "
+                "which other processes don't have")
         if not callable(graph):
             validate_adjacency(graph)
         self.graph_fn = as_graph_fn(graph)
@@ -166,6 +177,14 @@ class DecentralizedTrainer:
                 label_hist=label_histogram(arrays["labels"],
                                            client_indices[i], num_labels),
             ))
+        if local_clients is None:
+            self.local_ids = [c.client_id for c in self.clients]
+        else:
+            self.local_ids = sorted({int(c) for c in local_clients})
+            if any(i < 0 or i >= len(self.clients) for i in self.local_ids):
+                raise ValueError(f"local_clients {self.local_ids} out of "
+                                 f"range for {len(self.clients)} clients")
+        self.local = [self.clients[i] for i in self.local_ids]
         self._seed_pools(step=0)
 
     # -- jitted function caches ------------------------------------------
@@ -238,7 +257,7 @@ class DecentralizedTrainer:
         if self.exchange != "params":
             self._publish_round(step)
         adj = self.graph_fn(step)
-        for c in self.clients:
+        for c in self.local:
             nbrs = adj[c.client_id]
             for j in nbrs:
                 if len(c.pool) >= c.pool.capacity:
@@ -255,7 +274,7 @@ class DecentralizedTrainer:
             self._publish_round(step)
             self._resolve_pending(step)  # older rounds' pulls first
         adj = self.graph_fn(step)
-        for c in self.clients:
+        for c in self.local:
             self._pull_client(c, step, adj)
 
     def _comm_tick(self, step: int) -> None:
@@ -303,7 +322,7 @@ class DecentralizedTrainer:
         at their pool-update step, as soon as a window that still covers
         the current step shows up. Pulls whose own round has fully expired
         are abandoned."""
-        for c in self.clients:
+        for c in self.local:
             keep: Dict[int, int] = {}
             for j, rnd in self._pending[c.client_id].items():
                 mail = self.bus.mailbox(c.client_id).get(j)
@@ -339,7 +358,7 @@ class DecentralizedTrainer:
 
         adj = self.graph_fn(step)
         subscribed = {j for nbrs in adj for j in nbrs}
-        selected = self.clients if client_ids is None else \
+        selected = self.local if client_ids is None else \
             [self.clients[i] for i in client_ids]
         todo = [c for c in selected if c.client_id in subscribed]
         if not todo:
@@ -451,7 +470,7 @@ class DecentralizedTrainer:
         public_np = self.public.sample(t)
         public_batch = {k: jnp.asarray(v) for k, v in public_np.items()}
         all_metrics: Dict[str, float] = {}
-        for c in self.clients:
+        for c in self.local:
             all_metrics.update(self.step_client(c, public_batch, t))
         self._maybe_update_pools(t + 1)
         return all_metrics
@@ -511,7 +530,7 @@ class DecentralizedTrainer:
         the baselines report the exact same metric."""
         m = self.mhd_cfg.num_aux_heads
         per_client = []
-        for c in self.clients:
+        for c in self.local:
             per_label, present = per_label_head_accuracy(
                 self._teacher_apply(c.bundle), c.params, arrays,
                 self.num_labels, m, self.run_cfg.eval_batch_size)

@@ -46,12 +46,17 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.runtime import DecentralizedTrainer
+
+# "argument not passed" sentinel: freshness_report must distinguish an
+# explicit max_staleness=None (unbounded view) from no argument at all
+# (fall back to the trainer's configured bound)
+_UNSET = object()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,7 +141,7 @@ class AsyncScheduler:
         the communication phase. Returns the due clients' step metrics."""
         tr = self.trainer
         wall = self.wall
-        due = [c for c in tr.clients if self.due(c.client_id, wall)]
+        due = [c for c in tr.local if self.due(c.client_id, wall)]
         metrics: Dict[str, float] = {}
         if due:
             public_np = tr.public.sample(wall)
@@ -156,7 +161,7 @@ class AsyncScheduler:
         """Mirror of the synchronous `_maybe_update_pools(s)`, restricted
         to the clients whose own pool cadence fires at wall tick ``s``."""
         tr = self.trainer
-        pool_due = [c for c in tr.clients if self.pool_due(c.client_id, s)]
+        pool_due = [c for c in tr.local if self.pool_due(c.client_id, s)]
         if not pool_due:
             tr._comm_tick(s)
             return
@@ -192,19 +197,23 @@ class AsyncScheduler:
 
     # -- telemetry ---------------------------------------------------------
 
-    def freshness_report(self,
-                         max_staleness: Optional[int] = None
+    def freshness_report(self, max_staleness: Any = _UNSET
                          ) -> Dict[int, Dict[str, float]]:
         """Per-client view of mailbox freshness against each client's own
         clock (prediction modes only): total mailbox size, how much of it
-        passes the staleness bound, and the bus-clock reading."""
+        passes the staleness bound, and the bus-clock reading.
+
+        ``max_staleness`` defaults to the trainer's configured
+        ``run_cfg.max_staleness``; passing ``None`` explicitly requests
+        the *unbounded* view (the whole mailbox counts as fresh) rather
+        than falling back to the configured bound."""
         tr = self.trainer
         if tr.exchange == "params":
             return {}
-        ms = max_staleness if max_staleness is not None else \
-            tr.run_cfg.max_staleness
+        ms = tr.run_cfg.max_staleness if max_staleness is _UNSET \
+            else max_staleness
         out: Dict[int, Dict[str, float]] = {}
-        for c in tr.clients:
+        for c in tr.local:
             cid = c.client_id
             box = tr.bus.mailbox(cid)
             fresh = tr.bus.poll_fresh(cid, ms)

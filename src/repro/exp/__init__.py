@@ -16,6 +16,7 @@ Importing this package registers the four paper adapters in
 """
 from repro.exp.spec import (
     CLIENT_ARCHS,
+    TRANSPORTS,
     AlgorithmSpec,
     ClientSpec,
     DataSpec,
@@ -64,6 +65,7 @@ __all__ = [
     "PRESETS",
     "PartitionSpec",
     "ScheduleSpec",
+    "TRANSPORTS",
     "TopologySpec",
     "TrainSpec",
     "TransportSpec",

@@ -42,6 +42,11 @@ def _take_params(spec: ExperimentSpec, allowed: Dict[str, Any],
 class _AdapterBase:
     """Common scaffolding: hold the spec, delegate to ``self.trainer``.
 
+    ``_require_whole_fleet`` guards ``Bindings.local_clients``: only
+    decentralized algorithms can drive a subset of the fleet from one
+    process; centralized baselines must fail loudly instead of silently
+    training the whole fleet in every process.
+
     Everything validatable from the spec alone happens at construction
     (``_resolve_params``), so `make_algorithm(spec)` — and therefore the
     CLI's ``--dry-run`` — rejects typo'd knobs and impossible fleets
@@ -57,6 +62,13 @@ class _AdapterBase:
 
     def _resolve_params(self, spec: ExperimentSpec) -> Dict[str, Any]:
         return _take_params(spec, {}, self.name)
+
+    def _require_whole_fleet(self, bindings: Bindings) -> None:
+        if bindings.local_clients is not None:
+            raise ValueError(
+                f"algorithm {self.name!r} has a central aggregation step "
+                "and cannot drive a subset of the fleet per process "
+                "(Bindings.local_clients)")
 
     def step(self, t: int) -> Dict[str, float]:
         return self.trainer.step(t)
@@ -131,7 +143,8 @@ class MHDAdapter(_AdapterBase):
             bindings.arrays, bindings.partition.client_indices,
             bindings.partition.public_indices, bindings.graph,
             bindings.num_labels, exchange=spec.wire.exchange,
-            comm=comm_cfg, transport=bindings.transport)
+            comm=comm_cfg, transport=bindings.transport,
+            local_clients=bindings.local_clients)
         if spec.schedule.mode == "async":
             rates = spec.schedule.rates or \
                 tuple([1] * len(bindings.bundles))
@@ -160,6 +173,7 @@ class FedMDAdapter(_AdapterBase):
     def setup(self, bindings: Bindings) -> None:
         from repro.core.fedmd import FedMDTrainer
 
+        self._require_whole_fleet(bindings)
         spec = self.spec
         public_bs = self.params["public_batch_size"]
         self.trainer = FedMDTrainer(
@@ -191,6 +205,7 @@ class FedAvgAdapter(_AdapterBase):
     def setup(self, bindings: Bindings) -> None:
         from repro.core.fedavg import FedAvgTrainer
 
+        self._require_whole_fleet(bindings)
         spec = self.spec
         self.trainer = FedAvgTrainer(
             bindings.bundles[0], bindings.optimizer, bindings.arrays,
@@ -221,6 +236,7 @@ class SupervisedAdapter(_AdapterBase):
     def setup(self, bindings: Bindings) -> None:
         from repro.core.supervised import SupervisedTrainer
 
+        self._require_whole_fleet(bindings)
         spec = self.spec
         self.trainer = SupervisedTrainer(
             bindings.bundles, bindings.optimizer, bindings.arrays,

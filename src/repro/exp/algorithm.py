@@ -57,6 +57,10 @@ class Bindings:
     graph: Adjacency
     transport: Optional[Any]  # repro.comm.Transport | None (loopback)
     num_labels: int
+    # multi-process gossip: the client ids THIS process drives (None =
+    # all — the single-process runner). Algorithms that cannot restrict
+    # (centralized baselines) must reject a non-None value in setup.
+    local_clients: Optional[Sequence[int]] = None
 
 
 @runtime_checkable

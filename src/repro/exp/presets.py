@@ -78,6 +78,36 @@ def _gossip() -> ExperimentSpec:
                         max_staleness=3 * s_p))
 
 
+@PRESETS.register("gossip_socket")
+def _gossip_socket() -> ExperimentSpec:
+    """A 4-client prediction-exchange ring over real TCP sockets.
+
+    In-process (`Experiment.run()`), one `SocketTransport` hosts all four
+    clients over localhost TCP. The same spec drives the multi-process
+    runner (`scripts/run_gossip_procs.py`): one OS process per client,
+    each stepping only its own client — heterogeneous speeds are then
+    real wall-clock differences. The generous horizon / staleness bound
+    tolerate inter-process clock drift (a peer mid-jit-compile)."""
+    s_p = 5
+    return ExperimentSpec(
+        name="gossip_socket_ring",
+        algorithm=AlgorithmSpec("mhd", {
+            "nu_emb": 1.0, "nu_aux": 1.0, "delta": 1,
+            "pool_size": 2, "pool_update_every": s_p}),
+        data=DataSpec(num_labels=12, samples_per_label=60),
+        partition=PartitionSpec(labels_per_client=3, skew=100.0,
+                                gamma_pub=0.1),
+        clients=ExperimentSpec.uniform_fleet(4, aux_heads=2),
+        topology=TopologySpec("cycle"),
+        transport=TransportSpec(kind="socket"),
+        wire=WireSpec(exchange="prediction_topk", topk=5,
+                      val_dtype="float16", emb_encoding="int8",
+                      horizon=4 * s_p),
+        optimizer=OptimizerSpec(init_lr=0.05, grad_clip_norm=1.0),
+        train=TrainSpec(steps=40, batch_size=16, public_batch_size=16,
+                        max_staleness=4 * s_p))
+
+
 @PRESETS.register("fedmd_quick")
 def _fedmd_quick() -> ExperimentSpec:
     """FedMD at the QUICK scale, heterogeneous two-arch fleet (Table 2)."""

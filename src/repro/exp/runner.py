@@ -33,6 +33,7 @@ from repro.data import (
 from repro.exp.algorithm import Algorithm, Bindings, make_algorithm
 from repro.exp.spec import (
     CLIENT_ARCHS,
+    TRANSPORTS,
     DataSpec,
     ExperimentSpec,
     PartitionSpec,
@@ -95,14 +96,9 @@ def build_graph(spec: ExperimentSpec):
 
 
 def build_transport(spec: ExperimentSpec) -> Optional[Any]:
-    t = spec.transport
-    if t.kind == "loopback":
-        return None  # the trainer's default
-    from repro.comm import SimulatedNetwork
-
-    return SimulatedNetwork(latency=t.latency, bandwidth=t.bandwidth,
-                            drop_prob=t.drop_prob, seed=t.seed,
-                            client_rates=t.client_rates)
+    """Resolve the spec's transport kind through the ``TRANSPORTS``
+    registry (None = the trainer's default in-process loopback)."""
+    return TRANSPORTS.get(spec.transport.kind)(spec)
 
 
 def build_optimizer(spec: ExperimentSpec):
@@ -219,35 +215,42 @@ class Experiment:
         algo = make_algorithm(spec)
         self._check_capabilities(algo)
         bindings = self.build_bindings()
-        algo.setup(bindings)
 
         train = spec.train
         history: List[Tuple[int, Dict[str, float]]] = []
         step_seconds = 0.0
-        for t in range(train.steps):
-            t0 = time.perf_counter()
-            metrics = algo.step(t)
-            step_seconds += time.perf_counter() - t0
-            if on_step is not None:
-                on_step(t, metrics)
-            if train.eval_every and (t + 1) % train.eval_every == 0:
-                ev = algo.evaluate(bindings.test_arrays)
-                history.append((t + 1, ev))
-                if on_eval is not None:
-                    on_eval(t + 1, ev)
-            if train.checkpoint_dir and train.checkpoint_every and \
-                    (t + 1) % train.checkpoint_every == 0:
-                algo.save(train.checkpoint_dir, t + 1)
+        try:
+            algo.setup(bindings)
+            for t in range(train.steps):
+                t0 = time.perf_counter()
+                metrics = algo.step(t)
+                step_seconds += time.perf_counter() - t0
+                if on_step is not None:
+                    on_step(t, metrics)
+                if train.eval_every and (t + 1) % train.eval_every == 0:
+                    ev = algo.evaluate(bindings.test_arrays)
+                    history.append((t + 1, ev))
+                    if on_eval is not None:
+                        on_eval(t + 1, ev)
+                if train.checkpoint_dir and train.checkpoint_every and \
+                        (t + 1) % train.checkpoint_every == 0:
+                    algo.save(train.checkpoint_dir, t + 1)
 
-        if not history or history[-1][0] != train.steps:
-            ev = algo.evaluate(bindings.test_arrays)
-            history.append((train.steps, ev))
-            if on_eval is not None:
-                on_eval(train.steps, ev)
-        if train.checkpoint_dir and not (
-                train.checkpoint_every and
-                train.steps % train.checkpoint_every == 0):
-            algo.save(train.checkpoint_dir, train.steps)
+            if not history or history[-1][0] != train.steps:
+                ev = algo.evaluate(bindings.test_arrays)
+                history.append((train.steps, ev))
+                if on_eval is not None:
+                    on_eval(train.steps, ev)
+            if train.checkpoint_dir and not (
+                    train.checkpoint_every and
+                    train.steps % train.checkpoint_every == 0):
+                algo.save(train.checkpoint_dir, train.steps)
+        finally:
+            # a socket transport binds real listeners — release them when
+            # the loop is over (post-run drill-downs read attributes, not
+            # live sockets); Transport.close is a no-op for the others
+            if bindings.transport is not None:
+                bindings.transport.close()
 
         metrics = dict(history[-1][1])
         metrics.update(_comm_metrics(algo))
@@ -263,6 +266,7 @@ def _comm_metrics(algo: Algorithm) -> Dict[str, float]:
     if meter is None:
         return {}
     out = {"comm/total_bytes": float(meter.total_bytes),
+           "comm/delivered_bytes": float(meter.delivered_bytes),
            "comm/rejected_publishes": float(meter.rejected_publishes)}
     for cid, g in meter.gate_summary().items():
         out[f"c{cid}/comm/fresh_teachers"] = float(g["fresh"])

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 from repro.common.registry import Registry
 from repro.models import resnet as _RN
@@ -27,6 +27,74 @@ from repro.models import resnet as _RN
 # -- client architecture registry -------------------------------------------
 
 CLIENT_ARCHS: Registry = Registry("client architecture")
+
+
+# -- transport registry ------------------------------------------------------
+#
+# kind -> builder(spec) -> repro.comm.Transport | None (None = the trainer's
+# default in-process loopback). ``validate`` checks membership and calls the
+# builder's optional ``validate_spec`` attribute (structural checks, no
+# construction); the runner's `build_transport` dispatches here — a new
+# transport is a registry entry, not an edit to a hard-coded kind list.
+
+TRANSPORTS: Registry[Callable[["ExperimentSpec"], Any]] = Registry(
+    "transport kind")
+
+
+def _reject_socket_fields(spec: "ExperimentSpec") -> None:
+    t = spec.transport
+    if t.base_port is not None or t.host != "127.0.0.1":
+        raise ValueError(
+            "transport base_port/host configure the socket transport; "
+            f"kind={t.kind!r} would silently ignore them")
+
+
+@TRANSPORTS.register("loopback")
+def _loopback_transport(spec: "ExperimentSpec") -> Any:
+    return None  # DecentralizedTrainer's default LoopbackTransport
+
+
+_loopback_transport.validate_spec = _reject_socket_fields
+
+
+@TRANSPORTS.register("simulated")
+def _simulated_transport(spec: "ExperimentSpec") -> Any:
+    from repro.comm import SimulatedNetwork
+
+    t = spec.transport
+    return SimulatedNetwork(latency=t.latency, bandwidth=t.bandwidth,
+                            drop_prob=t.drop_prob, seed=t.seed,
+                            client_rates=t.client_rates)
+
+
+_simulated_transport.validate_spec = _reject_socket_fields
+
+
+@TRANSPORTS.register("socket")
+def _socket_transport(spec: "ExperimentSpec") -> Any:
+    """One in-process instance hosting the whole fleet over real TCP —
+    `Experiment.run()`'s view of ``kind="socket"``. The multi-process
+    launcher (`launch/gossip.py`) builds one single-client instance per
+    OS process instead, with ports rendezvoused between them."""
+    from repro.comm import SocketTransport
+
+    t = spec.transport
+    ports = None
+    if t.base_port is not None:
+        ports = {i: t.base_port + i for i in range(spec.num_clients)}
+    return SocketTransport(spec.num_clients, ports=ports, host=t.host)
+
+
+def _socket_validate(spec: "ExperimentSpec") -> None:
+    t = spec.transport
+    if t.latency or t.bandwidth or t.drop_prob or t.client_rates:
+        raise ValueError(
+            "transport latency/bandwidth/drop_prob/client_rates "
+            "parameterize the simulated network; a socket transport "
+            "is a real wire and would silently ignore them")
+
+
+_socket_transport.validate_spec = _socket_validate
 
 
 @CLIENT_ARCHS.register("resnet_tiny")
@@ -117,14 +185,24 @@ class ScheduleSpec:
 
 @dataclasses.dataclass(frozen=True)
 class TransportSpec:
-    """How published bytes move (`repro.comm.transport`)."""
+    """How published bytes move — resolved through the ``TRANSPORTS``
+    registry (built-in kinds: "loopback", "simulated", "socket").
 
-    kind: str = "loopback"  # "loopback" | "simulated"
+    ``latency``/``bandwidth``/``drop_prob``/``client_rates`` parameterize
+    the simulated network only; a socket transport is a real wire whose
+    behavior comes from the host network. ``base_port``/``host`` apply to
+    sockets: ``base_port=None`` binds OS-assigned ports (in-process runs);
+    an explicit base gives client i port ``base_port + i`` (the
+    fixed-rendezvous option for multi-process runs)."""
+
+    kind: str = "loopback"  # any registered TRANSPORTS kind
     latency: int = 0  # wall ticks of propagation
     bandwidth: Optional[int] = None  # bytes per wall tick; None = unlimited
     drop_prob: float = 0.0
     seed: int = 0
     client_rates: Optional[Dict[int, int]] = None  # slow uplinks (async)
+    base_port: Optional[int] = None  # socket: client i listens on base+i
+    host: str = "127.0.0.1"  # socket: bind/connect address
 
 
 @dataclasses.dataclass(frozen=True)
@@ -254,9 +332,14 @@ class ExperimentSpec:
             raise ValueError(
                 "schedule.rates only applies to mode='async'; a sync run "
                 "would silently ignore them")
-        if self.transport.kind not in ("loopback", "simulated"):
+        if self.transport.kind not in TRANSPORTS:
             raise ValueError(f"unknown transport kind "
-                             f"{self.transport.kind!r}")
+                             f"{self.transport.kind!r}; "
+                             f"known: {TRANSPORTS.names()}")
+        kind_check = getattr(TRANSPORTS.get(self.transport.kind),
+                             "validate_spec", None)
+        if kind_check is not None:
+            kind_check(self)
         if self.wire.exchange == "params" and \
                 self.transport.kind != "loopback":
             raise ValueError(

@@ -1,0 +1,256 @@
+"""Multi-process gossip launcher: one OS process per client over TCP.
+
+The paper's agents are independent learners exchanging predictions over
+a network; this launcher makes that literal on one host. Given an
+`ExperimentSpec` with ``transport.kind == "socket"`` and a decentralized
+algorithm, ``launch_gossip(spec)`` spawns one OS process per client.
+Each child:
+
+  1. builds a `SocketTransport` hosting only its own client (binding an
+     OS-assigned port) and reports the port to the launcher, which
+     gathers the full port map and broadcasts it back — a race-free
+     rendezvous, no pre-allocated ports needed;
+  2. opens its outgoing per-edge connections from the communication
+     graph (with retries, so processes may start in any order);
+  3. constructs the trainer restricted to its client
+     (``Bindings.local_clients``) — model init consumes the same rng
+     stream in every process, so client i's params are identical no
+     matter which process materializes them — and drives an
+     AsyncScheduler-style local loop: its local step count is its own
+     clock, public batches are sampled from the shared deterministic
+     `PublicPool` indices, publishes happen every S_P *local* steps, and
+     the socket is drained every step. Heterogeneous step rates are real
+     wall-clock speed differences between processes (``throttle_ms``
+     makes a deliberate straggler), not simulation ticks.
+
+Every child reports its metrics (loss, distillation activity, offered /
+delivered meter books) through a pipe; the launcher aggregates them.
+A *finish* barrier keeps every child draining its socket through the bus
+(metered) until all peers have sent their last frame — so a fast
+client's exit never truncates a slow one's run, and on a lossless
+localhost wire the fleet's delivered book equals its offered book — and
+an *exit* barrier holds sockets open until every result is collected.
+A hard ``timeout`` tears the fleet down rather than hanging.
+"""
+from __future__ import annotations
+
+import contextlib
+import multiprocessing as mp
+import os
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+_DRAIN_ALL = 1 << 60  # poll step high enough to release every held frame
+
+
+def _child_run(spec_json: str, rank: int, conn, throttle_ms: float) -> None:
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    from repro.comm import SocketTransport
+    from repro.exp import ExperimentSpec, make_algorithm
+    from repro.exp.algorithm import Bindings
+    from repro.exp.runner import (build_bundles, build_graph,
+                                  build_optimizer, materialize_data)
+
+    spec = ExperimentSpec.from_json(spec_json).validate()
+    t_spec = spec.transport
+    ports = ({rank: t_spec.base_port + rank}
+             if t_spec.base_port is not None else None)
+    transport = SocketTransport(spec.num_clients, clients=[rank],
+                                ports=ports, host=t_spec.host,
+                                wait_inflight=False)
+    conn.send(("port", rank, transport.ports[rank]))
+    ports = conn.recv()
+    transport.set_ports(ports)
+    graph = build_graph(spec)
+    transport.connect_edges(graph)
+
+    arrays, test_arrays, part = materialize_data(
+        spec.data, spec.partition, spec.num_clients)
+    algo = make_algorithm(spec)
+    bindings = Bindings(
+        spec=spec, arrays=arrays, test_arrays=test_arrays, partition=part,
+        bundles=build_bundles(spec), optimizer=build_optimizer(spec),
+        graph=graph, transport=transport, num_labels=spec.data.num_labels,
+        local_clients=(rank,))
+    algo.setup(bindings)
+    trainer = algo.trainer
+
+    distill_steps = 0
+    last: Dict[str, float] = {}
+    t0 = time.perf_counter()
+    for t in range(spec.train.steps):
+        last = trainer.step(t)
+        distill_steps += int(last.get(f"c{rank}/distill_active", 0.0))
+        if throttle_ms:
+            time.sleep(throttle_ms / 1000.0)
+    wall = time.perf_counter() - t0
+    ev = trainer.evaluate(test_arrays)
+
+    # finish barrier: keep draining *through the bus* (so late arrivals
+    # from slower peers are metered as delivered and never back up against
+    # a full kernel buffer) until every client has finished sending — only
+    # then are the meter books final. On a lossless localhost wire this
+    # makes delivered == offered fleet-wide.
+    conn.send(("finished", rank, None))
+    while not conn.poll(0.05):
+        trainer.bus.deliver(_DRAIN_ALL)
+    conn.recv()  # "all_finished"
+    grace = time.monotonic() + 0.5
+    while time.monotonic() < grace:
+        trainer.bus.deliver(_DRAIN_ALL)
+        time.sleep(0.02)
+
+    meter = trainer.meter
+    conn.send(("result", rank, {
+        "rank": rank,
+        "steps": spec.train.steps,
+        "wall_seconds": wall,
+        "distill_steps": distill_steps,
+        "final_loss": float(last.get(f"c{rank}/loss", float("nan"))),
+        "eval": {k: float(v) for k, v in ev.items()},
+        "offered_bytes": float(meter.total_bytes),
+        "delivered_bytes": float(meter.delivered_bytes),
+        "offered_messages": float(meter.num_messages),
+        "delivered_messages": float(meter.delivered_messages),
+        "fresh_teachers": float(sum(meter.gate_fresh.values())),
+        "stale_teachers": float(sum(meter.gate_stale.values())),
+        "failed_sends": transport.failed_sends,
+    }))
+    conn.recv()  # "done": every result is in; sockets may now close
+    transport.close()
+
+
+def _child_main(spec_json: str, rank: int, conn,
+                throttle_ms: float = 0.0) -> None:
+    try:
+        _child_run(spec_json, rank, conn, throttle_ms)
+    except Exception:
+        with contextlib.suppress(Exception):
+            conn.send(("error", rank, traceback.format_exc()))
+        raise
+
+
+def _recv(conn, timeout: float, rank: int, proc) -> Any:
+    if not conn.poll(max(timeout, 0.0)):
+        raise TimeoutError(
+            f"gossip client {rank} sent nothing within {timeout:.0f}s "
+            f"(alive={proc.is_alive()})")
+    try:
+        return conn.recv()
+    except EOFError:
+        raise RuntimeError(
+            f"gossip client {rank} died (exit code {proc.exitcode}) "
+            "before reporting") from None
+
+
+def launch_gossip(spec, timeout: float = 300.0,
+                  start_timeout: float = 120.0,
+                  throttle_ms: Optional[Dict[int, float]] = None,
+                  ) -> Dict[int, Dict[str, Any]]:
+    """Run ``spec`` as one OS process per client; returns per-rank results.
+
+    ``throttle_ms`` sleeps that many milliseconds after each local step of
+    the given ranks — a real (wall-clock) straggler. ``timeout`` bounds
+    the whole run: on expiry every child is terminated and TimeoutError
+    raised, so a hung socket can never wedge the caller (or CI)."""
+    spec = spec.validate()
+    if spec.transport.kind != "socket":
+        raise ValueError(
+            f"launch_gossip needs transport kind 'socket', got "
+            f"{spec.transport.kind!r}")
+    if spec.schedule.mode != "sync":
+        raise ValueError(
+            "launch_gossip drives each client's own local loop — step "
+            "rates are real wall-clock differences between processes, "
+            "not ScheduleSpec rates, which a multi-process run would "
+            "silently ignore; use schedule mode 'sync' and throttle_ms "
+            "for deliberate stragglers")
+    throttle = {int(k): float(v) for k, v in (throttle_ms or {}).items()}
+    K = spec.num_clients
+    ctx = mp.get_context("spawn")
+    spec_json = spec.to_json()
+    conns, procs = [], []
+    try:
+        for rank in range(K):
+            parent_conn, child_conn = ctx.Pipe()
+            p = ctx.Process(target=_child_main,
+                            args=(spec_json, rank, child_conn,
+                                  throttle.get(rank, 0.0)),
+                            daemon=True)
+            p.start()
+            child_conn.close()
+            conns.append(parent_conn)
+            procs.append(p)
+
+        # phase 1: gather every child's listening port, broadcast the map
+        ports: Dict[int, int] = {}
+        start_deadline = time.monotonic() + start_timeout
+        for rank, conn in enumerate(conns):
+            msg = _recv(conn, start_deadline - time.monotonic(),
+                        rank, procs[rank])
+            if msg[0] == "error":
+                raise RuntimeError(
+                    f"gossip client {msg[1]} failed during setup:\n{msg[2]}")
+            ports[msg[1]] = msg[2]
+        for conn in conns:
+            conn.send(ports)
+
+        # phase 2: finish barrier — every child reports that it has sent
+        # its last frame; only then do the meter books stop moving
+        deadline = time.monotonic() + timeout
+        for rank, conn in enumerate(conns):
+            msg = _recv(conn, deadline - time.monotonic(),
+                        rank, procs[rank])
+            if msg[0] == "error":
+                raise RuntimeError(
+                    f"gossip client {msg[1]} failed:\n{msg[2]}")
+            assert msg[0] == "finished", msg
+        for conn in conns:
+            conn.send("all_finished")
+
+        # phase 3: collect results under the hard run deadline
+        results: Dict[int, Dict[str, Any]] = {}
+        for rank, conn in enumerate(conns):
+            msg = _recv(conn, deadline - time.monotonic(),
+                        rank, procs[rank])
+            if msg[0] == "error":
+                raise RuntimeError(
+                    f"gossip client {msg[1]} failed:\n{msg[2]}")
+            results[msg[1]] = msg[2]
+
+        # phase 4: exit barrier — only now may children close their sockets
+        for conn in conns:
+            conn.send("done")
+        for p in procs:
+            p.join(timeout=30)
+        return results
+    finally:
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+        for p in procs:
+            if p.is_alive():
+                p.join(timeout=10)
+            if p.is_alive():
+                p.kill()
+        for conn in conns:
+            conn.close()
+
+
+def fleet_summary(results: Dict[int, Dict[str, Any]]) -> Dict[str, float]:
+    """Aggregate per-rank reports into the fleet-level view the
+    acceptance criteria (and the smoke benchmark) read."""
+    vals = list(results.values())
+    return {
+        "clients": float(len(vals)),
+        "offered_bytes": sum(r["offered_bytes"] for r in vals),
+        "delivered_bytes": sum(r["delivered_bytes"] for r in vals),
+        "offered_messages": sum(r["offered_messages"] for r in vals),
+        "delivered_messages": sum(r["delivered_messages"] for r in vals),
+        "distill_steps_min": min(r["distill_steps"] for r in vals),
+        "distill_steps_total": sum(r["distill_steps"] for r in vals),
+        "fresh_teachers_min": min(r["fresh_teachers"] for r in vals),
+        "failed_sends": sum(r["failed_sends"] for r in vals),
+        "wall_seconds_max": max(r["wall_seconds"] for r in vals),
+    }

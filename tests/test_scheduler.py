@@ -182,6 +182,25 @@ def test_params_mode_staleness_gate():
 # bus clocks + staleness sentinel
 # ---------------------------------------------------------------------------
 
+def test_freshness_report_explicit_none_requests_unbounded_view():
+    """Regression (ISSUE 4 satellite): an explicit ``max_staleness=None``
+    must mean *unbounded*, not silently fall back to the trainer's
+    configured bound. Only a missing argument uses ``run_cfg``."""
+    tr = _make_trainer("prediction_topk", K=2, steps=4, s_p=2,
+                       comm=CommConfig(topk=4, horizon=8),
+                       transport=SimulatedNetwork(latency=1, seed=0))
+    tr.run_cfg.max_staleness = 0  # 1-tick latency: no mail is ever fresh
+    sched = AsyncScheduler(tr)
+    for _ in range(4):
+        sched.tick()
+    bounded = sched.freshness_report()  # default: the configured bound
+    unbounded = sched.freshness_report(None)  # explicit: the whole mailbox
+    for cid in range(2):
+        assert bounded[cid]["mailbox"] > 0  # mail exists...
+        assert bounded[cid]["fresh"] == 0.0  # ...but none passes bound 0
+        assert unbounded[cid]["fresh"] == unbounded[cid]["mailbox"]
+
+
 def test_bus_clock_advance_is_monotone():
     bus = PredictionBus(LoopbackTransport(), [(1,), (0,)], 2)
     assert bus.clock(0) == 0

@@ -1,0 +1,324 @@
+"""Transport conformance suite + socket transport specifics.
+
+Every `Transport` (loopback, simulated, socket) must honor the same
+contract the runtime's drain points rely on:
+
+  * FIFO per directed edge,
+  * no delivery before the caller's tick (``sent_step <= step``),
+  * poll is a drain: a second poll at the same step returns nothing,
+  * polling an unknown/unhosted destination returns [].
+
+Plus the acceptance test of the socket transport: a 2-client gossip run
+over real TCP (in-process, deterministic drain) reproduces the loopback
+run's teacher schedule *bitwise*, and the delivered-vs-offered meter
+split (ISSUE 4 satellites) books drops on the sender only.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.comm import (
+    CommConfig,
+    CommMeter,
+    LoopbackTransport,
+    PredictionBus,
+    SimulatedNetwork,
+    SocketTransport,
+    allocate_ports,
+)
+
+from test_comm import _make_trainer
+
+
+@pytest.fixture(params=["loopback", "simulated", "socket"])
+def transport(request):
+    """A lossless, effectively-zero-latency instance of each kind."""
+    if request.param == "loopback":
+        yield LoopbackTransport()
+    elif request.param == "simulated":
+        yield SimulatedNetwork()
+    else:
+        t = SocketTransport(num_clients=4)
+        yield t
+        t.close()
+
+
+# ---------------------------------------------------------------------------
+# the shared contract
+# ---------------------------------------------------------------------------
+
+def test_fifo_per_edge(transport):
+    for i in range(5):
+        transport.send(0, 1, f"m{i}".encode(), step=i)
+    got = transport.poll(1, 10)
+    assert [d.payload for d in got] == [f"m{i}".encode() for i in range(5)]
+    assert [d.sent_step for d in got] == list(range(5))
+
+
+def test_no_delivery_before_sent_step(transport):
+    transport.send(0, 1, b"future", step=5)
+    assert transport.poll(1, 3) == []
+    got = transport.poll(1, 5)
+    assert [d.payload for d in got] == [b"future"]
+    assert got[0].recv_step == 5
+
+
+def test_poll_is_a_drain(transport):
+    transport.send(0, 1, b"once", step=0)
+    assert len(transport.poll(1, 0)) == 1
+    assert transport.poll(1, 0) == []
+    assert transport.poll(1, 100) == []
+
+
+def test_multiple_senders_all_arrive(transport):
+    transport.send(0, 1, b"from0", step=0)
+    transport.send(2, 1, b"from2", step=0)
+    transport.send(3, 1, b"from3", step=1)
+    got = transport.poll(1, 2)
+    assert {(d.src, d.payload) for d in got} == {
+        (0, b"from0"), (2, b"from2"), (3, b"from3")}
+
+
+def test_unknown_destination_returns_empty(transport):
+    assert transport.poll(9, 0) == []
+
+
+# ---------------------------------------------------------------------------
+# socket transport specifics
+# ---------------------------------------------------------------------------
+
+def test_socket_cross_instance_over_tcp():
+    """Two transport instances (the multi-process shape, minus the
+    processes): a frame sent by one arrives at the other over real TCP,
+    carrying src and sent_step through the frame header."""
+    with SocketTransport(2, clients=[1], wait_inflight=False) as b, \
+            SocketTransport(2, clients=[0], ports={1: b.ports[1]},
+                            wait_inflight=False) as a:
+        a.send(0, 1, b"x" * 70000, step=3)  # bigger than one recv() chunk
+        deadline = time.monotonic() + 10
+        got = []
+        while not got and time.monotonic() < deadline:
+            got = b.poll(1, 10)
+        assert [(d.src, d.sent_step) for d in got] == [(0, 3)]
+        assert got[0].payload == b"x" * 70000
+        assert a.sent_bytes == b.recv_bytes == 70000
+
+
+def test_socket_set_ports_and_connect_edges():
+    """The two-phase rendezvous: hosts bind port 0, learn peers' ports
+    later, and eagerly open the graph's edges."""
+    with SocketTransport(2, clients=[0], wait_inflight=False) as a, \
+            SocketTransport(2, clients=[1], wait_inflight=False) as b:
+        ports = {0: a.ports[0], 1: b.ports[1]}
+        a.set_ports(ports)
+        b.set_ports(ports)
+        a.connect_edges([(1,), (0,)])  # ring: 0 sends to 1
+        assert (0, 1) in a._out
+        with pytest.raises(ValueError):
+            a.set_ports({0: a.ports[0] + 1})  # hosted port can't move
+
+
+def test_spec_validation_rejects_sim_knobs_on_socket():
+    """Per-kind validation rides on the TRANSPORTS registry entry: socket
+    specs carrying simulated-network knobs fail loudly at validate()."""
+    import dataclasses
+
+    from repro.exp import ExperimentSpec, TransportSpec, WireSpec
+
+    spec = ExperimentSpec(
+        transport=TransportSpec(kind="socket", drop_prob=0.1),
+        wire=WireSpec(exchange="prediction_topk"))
+    with pytest.raises(ValueError, match="real wire"):
+        spec.validate()
+    ok = dataclasses.replace(spec, transport=TransportSpec(kind="socket"))
+    ok.validate()
+    with pytest.raises(ValueError, match="unknown transport kind"):
+        dataclasses.replace(
+            spec, transport=TransportSpec(kind="carrier_pigeon")).validate()
+    # and symmetrically: socket-only fields on an in-process transport
+    with pytest.raises(ValueError, match="silently ignore"):
+        dataclasses.replace(spec, transport=TransportSpec(
+            kind="simulated", base_port=9000)).validate()
+
+
+def test_socket_rejects_unknown_peer_port():
+    with SocketTransport(3, clients=[0], wait_inflight=False) as t:
+        with pytest.raises(ValueError, match="no port known"):
+            t.send(0, 2, b"?", step=0)
+
+
+def test_socket_inprocess_big_frame_no_deadlock():
+    """Single-threaded in-process mode writes and reads the same socket
+    pair: a frame larger than the kernel's socket buffers must not
+    deadlock sendall (the send path drains the local destination while
+    writing)."""
+    with SocketTransport(2) as t:
+        big = bytes(range(256)) * (16 * 1024)  # 4 MiB
+        t.send(0, 1, big, step=0)
+        got = t.poll(1, 0)
+        assert len(got) == 1
+        assert got[0].payload == big
+
+
+def test_socket_drops_corrupt_connection_not_the_run():
+    """A stray localhost connection writing non-protocol bytes (port
+    scanner, recycled ephemeral port) is dropped; the receiver's loop
+    never sees an exception and real peers keep working."""
+    import socket as pysocket
+
+    with SocketTransport(2, clients=[1], wait_inflight=False) as t:
+        stray = pysocket.create_connection(("127.0.0.1", t.ports[1]))
+        stray.sendall(b"GET / HTTP/1.1\r\n" + b"\x00" * 64)
+        deadline = time.monotonic() + 5
+        while t.corrupt_connections == 0 and time.monotonic() < deadline:
+            assert t.poll(1, 0) == []  # garbage never becomes a delivery
+        assert t.corrupt_connections == 1
+        stray.close()
+        # a real peer on a fresh connection still gets through
+        with SocketTransport(2, clients=[0], ports={1: t.ports[1]},
+                             wait_inflight=False) as a:
+            a.send(0, 1, b"still-works", step=0)
+            got = []
+            while not got and time.monotonic() < deadline:
+                got = t.poll(1, 0)
+            assert [d.payload for d in got] == [b"still-works"]
+
+
+def test_allocate_ports_are_distinct_and_bindable():
+    ports = allocate_ports(4)
+    assert len(set(ports.values())) == 4
+    with SocketTransport(4, clients=[2], ports={2: ports[2]}) as t:
+        assert t.ports[2] == ports[2]
+
+
+def test_socket_send_to_dead_peer_is_lost_not_fatal():
+    """A peer process that exited mid-run looks like a dropped message,
+    never a sender crash (real networks lose packets; so do we)."""
+    b = SocketTransport(2, clients=[1], wait_inflight=False)
+    a = SocketTransport(2, clients=[0], ports={1: b.ports[1]},
+                        wait_inflight=False)
+    a.send(0, 1, b"first", step=0)
+    b.close()
+    time.sleep(0.2)  # let the peer's RST reach the sender
+    # the kernel may accept a few frames into dead buffers before
+    # surfacing ECONNRESET; what matters is that send never raises
+    for i in range(50):
+        a.send(0, 1, b"x" * 4096, step=i)
+    assert a.failed_sends > 0
+    a.close()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: socket == loopback teacher schedule (2-client gossip)
+# ---------------------------------------------------------------------------
+
+def test_socket_matches_loopback_teacher_schedule():
+    """A 2-client prediction-exchange run over real TCP (in-process,
+    deterministic drain) is bitwise-equal to the loopback run: same
+    step metrics, same final params, same meter books."""
+    steps = 6
+    kw = dict(steps=steps, K=2, delta=1, m=1, s_p=2,
+              comm=CommConfig(topk=8, val_dtype="float32",
+                              emb_encoding="float32", horizon=steps + 4))
+    t_loop = _make_trainer("prediction_topk", **kw)
+    sock = SocketTransport(2)
+    try:
+        t_sock = _make_trainer("prediction_topk", transport=sock, **kw)
+        for t in range(steps):
+            m_loop, m_sock = t_loop.step(t), t_sock.step(t)
+            for key, v in m_loop.items():
+                assert m_sock[key] == v, (t, key)
+        for ca, cb in zip(t_loop.clients, t_sock.clients):
+            eq = jax.tree.map(
+                lambda a, b: bool(np.array_equal(np.asarray(a),
+                                                 np.asarray(b))),
+                ca.params, cb.params)
+            assert all(jax.tree.leaves(eq))
+        assert t_loop.meter.total_bytes == t_sock.meter.total_bytes
+        assert t_loop.meter.delivered_bytes == t_sock.meter.delivered_bytes
+        assert t_sock.meter.delivered_bytes == t_sock.meter.total_bytes
+    finally:
+        sock.close()
+
+
+# ---------------------------------------------------------------------------
+# delivered-vs-offered metering (satellite)
+# ---------------------------------------------------------------------------
+
+def test_meter_books_drops_as_offered_not_delivered():
+    """bus.publish meters the send (sender-side cost); bus.deliver meters
+    the arrival. A 100%-drop link therefore shows offered > 0 but zero
+    delivered traffic — and `received_per_client_step` excludes drops."""
+    meter = CommMeter()
+    bus = PredictionBus(SimulatedNetwork(drop_prob=1.0, seed=0),
+                        [(1,), (0,)], 2, meter=meter)
+    bus.publish(1, b"lost-message", step=0)
+    bus.deliver(0)
+    assert meter.total_bytes == len(b"lost-message")  # offered
+    assert meter.delivered_bytes == 0
+    assert meter.by_dst[0] == len(b"lost-message")  # sender-side book
+    assert meter.received_per_client_step(10) == {}  # no student paid
+    assert bus.mailbox(0) == {}
+
+
+def test_meter_lossless_books_agree():
+    meter = CommMeter()
+    bus = PredictionBus(LoopbackTransport(), [(1,), (0,)], 2, meter=meter)
+    bus.publish(1, b"abcdef", step=0)
+    bus.publish(0, b"xy", step=0)
+    bus.deliver(0)
+    assert meter.delivered_bytes == meter.total_bytes == 8
+    assert meter.by_dst_delivered == {0: 6, 1: 2}
+    assert meter.received_per_client_step(2) == {0: 3.0, 1: 1.0}
+    s = meter.summary()
+    assert s["delivered_bytes"] == s["total_bytes"] == 8.0
+
+
+def test_meter_partial_drops_delivered_below_offered():
+    """A lossy run keeps delivered strictly between 0 and offered, and
+    the per-student figure reads the delivered book."""
+    meter = CommMeter()
+    net = SimulatedNetwork(drop_prob=0.5, seed=3)
+    bus = PredictionBus(net, [(1,), (0,)], 2, meter=meter)
+    for t in range(40):
+        bus.publish(0, b"p" * 10, step=t)
+        bus.publish(1, b"q" * 10, step=t)
+        bus.deliver(t)
+    assert 0 < meter.delivered_bytes < meter.total_bytes
+    assert meter.delivered_bytes == meter.total_bytes - 10 * net.dropped_count
+    per_student = meter.received_per_client_step(40)
+    assert per_student[1] == meter.by_dst_delivered[1] / 40
+
+
+# ---------------------------------------------------------------------------
+# dropped sends still occupy the uplink (satellite)
+# ---------------------------------------------------------------------------
+
+def _seed_with_drop_then_keep(p=0.5):
+    """A seed whose first rng draw drops and second keeps."""
+    for seed in range(1000):
+        r = np.random.default_rng(seed)
+        if r.random() < p <= r.random():
+            return seed
+    raise AssertionError("no such seed in range")
+
+
+def test_dropped_message_still_occupies_uplink():
+    """Regression: a dropped message's transmit time still serializes the
+    edge — the sender spends the bytes whether or not the wire delivers
+    them, so the next message is delayed behind the drop."""
+    seed = _seed_with_drop_then_keep()
+    net = SimulatedNetwork(bandwidth=10, drop_prob=0.5, seed=seed)
+    net.send(0, 1, b"x" * 30, step=0)  # dropped; tx 3 steps holds the edge
+    net.send(0, 1, b"y" * 10, step=0)  # kept; starts at 3, arrives at 4
+    assert net.dropped_count == 1
+    assert net.poll(1, 3) == []
+    got = net.poll(1, 4)
+    assert [d.payload for d in got] == [b"y" * 10]
+    # determinism: the same seed replays the same schedule
+    net2 = SimulatedNetwork(bandwidth=10, drop_prob=0.5, seed=seed)
+    net2.send(0, 1, b"x" * 30, step=0)
+    net2.send(0, 1, b"y" * 10, step=0)
+    assert [d.payload for d in net2.poll(1, 4)] == [b"y" * 10]
