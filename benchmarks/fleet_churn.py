@@ -1,0 +1,161 @@
+"""Elastic-fleet benchmark: churn rate × topology, plus the startup-cost
+row for the two init schemes (repro.fleet, ISSUE 5).
+
+Two sweeps, appended to ``BENCH_fleet.json`` at the repo root:
+
+  * **churn × topology** — the `churn_ring`-style MHD run over a
+    complete graph and a ring, at three churn rates (static fleet; one
+    kill+restart; two staggered kill+restarts). Reports final mean
+    accuracy, tombstoned bytes (the metered cost of mail addressed to
+    dead clients), and wall time — the churn axis next to the paper's
+    topology axis (Fig. 6).
+  * **startup: legacy vs per_client** — wall time for one gossip child
+    (``local_clients=[0]``) to construct its trainer at fleet sizes K.
+    The legacy scheme replays the whole fleet's init stream in every
+    process (O(K) work per child, O(K²) fleet-wide); ``per_client``
+    folds the seed per client id and materializes one model (O(1) per
+    child, O(K) fleet-wide).
+
+    PYTHONPATH=src python -m benchmarks.run --only fleet
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List
+
+from benchmarks.common import row
+
+_BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_fleet.json")
+
+
+def _append_bench_rows(rows: List[Dict]) -> None:
+    existing: List[Dict] = []
+    try:
+        with open(_BENCH_JSON) as f:
+            existing = json.load(f)
+        if not isinstance(existing, list):
+            existing = []
+    except (OSError, ValueError):
+        existing = []
+    with open(_BENCH_JSON, "w") as f:
+        json.dump(existing + rows, f, indent=1)
+        f.write("\n")
+
+
+def _churn_events(rate: str, steps: int):
+    from repro.exp import ChurnEventSpec
+
+    third = steps // 3
+    if rate == "none":
+        return ()
+    if rate == "one":
+        return (ChurnEventSpec(kind="kill", step=third, client=1),
+                ChurnEventSpec(kind="restart", step=2 * third, client=1,
+                               from_snapshot=False))
+    if rate == "two":
+        return (ChurnEventSpec(kind="kill", step=third, client=1),
+                ChurnEventSpec(kind="kill", step=third + 4, client=2),
+                ChurnEventSpec(kind="restart", step=2 * third, client=1,
+                               from_snapshot=False),
+                ChurnEventSpec(kind="restart", step=2 * third + 4,
+                               client=2, from_snapshot=False))
+    raise ValueError(rate)
+
+
+def _churn_spec(topology: str, rate: str, steps: int):
+    from repro.exp import ChurnSpec, TopologySpec, get_preset
+
+    spec = get_preset("churn_ring")
+    return dataclasses.replace(
+        spec,
+        name=f"fleet_{topology}_{rate}",
+        topology=TopologySpec(topology),
+        train=dataclasses.replace(spec.train, steps=steps),
+        churn=ChurnSpec(events=_churn_events(rate, steps)))
+
+
+def _startup_row(K: int, scheme: str) -> Dict:
+    """Construction wall time of ONE gossip child (rank 0) at fleet
+    size K under the given init scheme."""
+    from repro.exp import ExperimentSpec, get_preset, make_algorithm
+    from repro.exp.algorithm import Bindings
+    from repro.exp.runner import (build_bundles, build_graph,
+                                  build_optimizer, materialize_data)
+
+    spec = get_preset("churn_ring")
+    spec = dataclasses.replace(
+        spec, name=f"startup_{scheme}_K{K}",
+        clients=ExperimentSpec.uniform_fleet(
+            K, aux_heads=spec.clients[0].aux_heads),
+        churn=dataclasses.replace(spec.churn, events=()),
+        init_scheme=scheme)
+    arrays, test_arrays, part = materialize_data(
+        spec.data, spec.partition, K)
+    bundles = build_bundles(spec)
+    algo = make_algorithm(spec)
+    t0 = time.time()
+    algo.setup(Bindings(
+        spec=spec, arrays=arrays, test_arrays=test_arrays, partition=part,
+        bundles=bundles, optimizer=build_optimizer(spec),
+        graph=build_graph(spec), transport=None,
+        num_labels=spec.data.num_labels, local_clients=(0,)))
+    wall = time.time() - t0
+    inits = len(algo.trainer.initialized_clients)
+    return {"name": f"fleet/startup_{scheme}_K{K}", "scheme": scheme,
+            "fleet_size": K, "construct_s": round(wall, 3),
+            "models_initialized": inits}
+
+
+def main(scale=None, full: bool = False) -> list:
+    from repro.exp import Experiment
+
+    steps = 60 if full else 24
+    out, bench_rows = [], []
+
+    for topology in ("complete", "cycle"):
+        for rate in ("none", "one", "two"):
+            spec = _churn_spec(topology, rate, steps)
+            t0 = time.time()
+            res = Experiment(spec).run()
+            wall = time.time() - t0
+            meter = res.trainer.meter
+            rec = {
+                "name": f"fleet/churn_{topology}_{rate}",
+                "topology": topology,
+                "churn": rate,
+                "steps": steps,
+                "wall_s": round(wall, 2),
+                "beta_sh": round(res.metrics.get("mean/main/beta_sh",
+                                                 float("nan")), 4),
+                "tombstoned_bytes": float(meter.tombstoned_bytes),
+                "delivered_bytes": float(meter.delivered_bytes),
+                "offered_bytes": float(meter.total_bytes),
+            }
+            out.append(row(rec["name"], wall / steps * 1e6,
+                           f"beta_sh={rec['beta_sh']};tombstoned="
+                           f"{rec['tombstoned_bytes']:.0f}"))
+            bench_rows.append(rec)
+
+    # startup cost: one child process's construction work vs fleet size
+    for K in ((4, 8, 12) if full else (4, 8)):
+        for scheme in ("legacy", "per_client"):
+            rec = _startup_row(K, scheme)
+            out.append(row(rec["name"], rec["construct_s"] * 1e6,
+                           f"models_initialized="
+                           f"{rec['models_initialized']}"))
+            bench_rows.append(rec)
+
+    _append_bench_rows(bench_rows)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, "src")
+    for line in main():
+        print(line)

@@ -28,6 +28,7 @@ def main(argv=None) -> int:
         fig3_loss_weights,
         fig4_num_heads,
         fig6_topology,
+        fleet_churn,
         hetero_models,
         roofline,
         socket_gossip,
@@ -43,6 +44,7 @@ def main(argv=None) -> int:
         ("comm", lambda: comm_efficiency.main(scale, args.full)),
         ("async", lambda: async_staleness.main(scale, args.full)),
         ("socket", lambda: socket_gossip.main(scale, args.full)),
+        ("fleet", lambda: fleet_churn.main(scale, args.full)),
         ("roofline", lambda: roofline.main(scale, args.full, args.art_dir)),
         ("table1", lambda: table1_baselines.main(scale)),
         ("fig3", lambda: fig3_loss_weights.main(scale, args.full)),

@@ -52,4 +52,15 @@ timeout 60 python scripts/run_gossip_procs.py --smoke >/dev/null || {
     exit 1
 }
 
+# elastic-fleet smoke: 3 processes, rank 1 crashed mid-run (os._exit) —
+# the crash must be reaped promptly with the rank named, and the resumed
+# fleet must restore rank 1 from its own snapshot and distill again
+# post-restore (repro.fleet; docs/elastic_fleets.md). ~45s uncontended;
+# the smoke's own 50s-per-launch timeouts are the real budget, the
+# wrapper is headroom against a loaded machine (a flaky gate is worse)
+timeout 120 python scripts/run_gossip_procs.py --churn-smoke >/dev/null || {
+    echo "check.sh: 3-process kill-and-restore smoke failed" >&2
+    exit 1
+}
+
 exec python -m pytest -x -q "${MARK[@]}" "$@"

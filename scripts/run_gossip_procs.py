@@ -15,6 +15,15 @@ local steps — a genuine wall-clock straggler, not a simulated one.
 60-second internal timeout. The script exits non-zero if any client
 finishes without ever distilling from a neighbor, or if the fleet's
 delivered bytes exceed its offered bytes (the meter invariant).
+
+``--churn-smoke`` is the elastic-fleet CI configuration (repro.fleet):
+a 3-process ring with per-rank fleet snapshots and
+``init_scheme="per_client"`` where rank 1 is crashed mid-run
+(``os._exit``). Phase 1 must fail *promptly* with rank 1's exit status
+(fast fleet reaping, not the hard-timeout backstop); phase 2 relaunches
+with ``resume=True`` — every rank restores its own snapshot slice — and
+must exit non-zero if the restored client never distills post-restore
+or delivered bytes exceed offered.
 """
 from __future__ import annotations
 
@@ -22,7 +31,10 @@ import argparse
 import dataclasses
 import json
 import os
+import shutil
 import sys
+import tempfile
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
@@ -53,12 +65,18 @@ def main(argv=None) -> int:
                    help="hard cap on the whole run (seconds)")
     p.add_argument("--smoke", action="store_true",
                    help="bounded CI config: 2 clients, 8 steps, 60s cap")
+    p.add_argument("--churn-smoke", action="store_true",
+                   help="bounded CI config: 3-process kill-and-restore "
+                        "(crash rank 1, resume the fleet from snapshots)")
     p.add_argument("--out", metavar="PATH",
                    help="write per-rank results + fleet summary JSON")
     args = p.parse_args(argv)
 
     from repro.exp import ExperimentSpec, get_preset
     from repro.launch.gossip import fleet_summary, launch_gossip
+
+    if args.churn_smoke:
+        return churn_smoke()
 
     if args.spec:
         with open(args.spec) as f:
@@ -114,6 +132,115 @@ def main(argv=None) -> int:
               file=sys.stderr)
         ok = False
     return 0 if ok else 1
+
+
+def _warm_jit_cache(spec) -> None:
+    """Compile the smoke's train/eval computations once in-process, into
+    the shared persistent jit cache — all six children (two 3-process
+    launches) then load instead of compiling, which is what keeps the
+    whole kill-and-restore smoke inside the CI budget."""
+    import jax
+
+    from repro.exp import Experiment, TransportSpec
+
+    jax.config.update("jax_compilation_cache_dir",
+                      os.environ["JAX_COMPILATION_CACHE_DIR"])
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    warm = dataclasses.replace(
+        spec, name="churn_smoke_warm",
+        transport=TransportSpec(kind="loopback"),
+        # pin the LR schedule's total_steps to the real run's: it is a
+        # compile-time constant, and a different value is a cache miss
+        optimizer=dataclasses.replace(
+            spec.optimizer,
+            total_steps=(spec.train.steps
+                         if spec.optimizer.total_steps is None
+                         else spec.optimizer.total_steps)),
+        train=dataclasses.replace(spec.train, steps=2, snapshot_dir=None,
+                                  snapshot_every=0))
+    t0 = time.monotonic()
+    Experiment(warm).run()
+    print(f"jit cache warmed in {time.monotonic() - t0:.1f}s")
+
+
+def churn_smoke(crash_rank: int = 1, crash_step: int = 5) -> int:
+    """Kill-and-restore over real processes: crash one rank mid-run, then
+    resume the whole fleet from its per-rank snapshots."""
+    from repro.exp import ExperimentSpec, get_preset
+    from repro.launch.gossip import fleet_summary, launch_gossip
+
+    snap_dir = tempfile.mkdtemp(prefix="fleet_churn_smoke_")
+    # jit cache shared by every child of both launches: the resumed fleet
+    # (and ranks 1..2 of the first) skip compilation — what keeps two
+    # full 3-process launches inside the CI budget
+    os.environ.setdefault("JAX_COMPILATION_CACHE_DIR",
+                          os.path.join(snap_dir, "jit_cache"))
+    os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0")
+    spec = get_preset("gossip_socket")
+    spec = dataclasses.replace(
+        spec,
+        name="churn_smoke",
+        clients=ExperimentSpec.uniform_fleet(
+            3, arch=spec.clients[0].arch, aux_heads=spec.clients[0].aux_heads,
+            width=spec.clients[0].width),
+        init_scheme="per_client",  # each child inits only its own model
+        # a short horizon keeps the per-publish encode cheap (CI budget);
+        # the restored mailbox's window still covers the resumed steps
+        wire=dataclasses.replace(spec.wire, horizon=10),
+        train=dataclasses.replace(spec.train, steps=8, batch_size=16,
+                                  snapshot_dir=snap_dir, snapshot_every=3))
+    spec.validate()
+    try:
+        print(f"churn smoke: 3 processes, crash rank {crash_rank} at local "
+              f"step {crash_step}, snapshots every "
+              f"{spec.train.snapshot_every} steps")
+        _warm_jit_cache(spec)
+        t0 = time.monotonic()
+        try:
+            launch_gossip(spec, timeout=50.0,
+                          die_at={crash_rank: crash_step})
+        except RuntimeError as e:
+            elapsed = time.monotonic() - t0
+            print(f"crash detected in {elapsed:.1f}s: {e}")
+            if f"client {crash_rank}" not in str(e):
+                print("FAIL: error does not name the crashed rank",
+                      file=sys.stderr)
+                return 1
+            if elapsed > 40.0:
+                print("FAIL: crash detection leaned on the hard timeout",
+                      file=sys.stderr)
+                return 1
+        else:
+            print("FAIL: the injected crash was not detected",
+                  file=sys.stderr)
+            return 1
+
+        results = launch_gossip(spec, timeout=50.0, resume=True)
+        fleet = fleet_summary(results)
+        r = results[crash_rank]
+        # note: fleet-wide delivered ≤ offered does NOT hold here — the
+        # crashed rank's restored offered book rolled back to its last
+        # snapshot while survivors' delivered books kept mail it sent
+        # after that point (per-rank snapshots are uncoordinated cuts);
+        # the invariant the smoke owns is "the restored client trains
+        # and distills again"
+        print(f"resumed: rank {crash_rank} restored at step "
+              f"{r['start_step']}, distilled on {r['distill_steps']} "
+              f"post-restore steps; fleet delivered "
+              f"{fleet['delivered_bytes']:,.0f} / offered "
+              f"{fleet['offered_bytes']:,.0f} B")
+        ok = True
+        if r["start_step"] < 1:
+            print("FAIL: crashed rank did not restore from its snapshot",
+                  file=sys.stderr)
+            ok = False
+        if r["distill_steps"] < 1:
+            print("FAIL: restored client never distilled post-restore",
+                  file=sys.stderr)
+            ok = False
+        return 0 if ok else 1
+    finally:
+        shutil.rmtree(snap_dir, ignore_errors=True)
 
 
 if __name__ == "__main__":

@@ -113,23 +113,32 @@ class CheckpointManager:
 
 
 def save_client_states(directory: str, step: int, states,
-                       max_to_keep: int = 2) -> None:
+                       max_to_keep: int = 2, ids=None) -> None:
     """Per-client `(params, opt_state)` checkpoints under
     ``directory/client_{i}`` — the layout every fleet trainer
     (decentralized, FedMD, FedAvg, supervised) shares, so a run is
-    resumable per-client regardless of algorithm."""
-    for i, (params, opt) in enumerate(states):
+    resumable per-client regardless of algorithm.
+
+    ``ids`` names the client id of each state (default: positional) — a
+    multi-process gossip rank saving only its own clients must not have
+    them renumbered from zero."""
+    states = list(states)
+    ids = range(len(states)) if ids is None else list(ids)
+    for i, (params, opt) in zip(ids, states):
         mgr = CheckpointManager(os.path.join(directory, f"client_{i}"),
                                 max_to_keep=max_to_keep)
         mgr.save(step, {"params": params, "opt": opt})
 
 
-def restore_client_states(directory: str, states, step: Optional[int] = None):
+def restore_client_states(directory: str, states, step: Optional[int] = None,
+                          ids=None):
     """Inverse of `save_client_states`: restores into the given
     ``(params, opt_state)`` targets; returns ``(step, new_states)``."""
     restored = 0
     out = []
-    for i, (params, opt) in enumerate(states):
+    states = list(states)
+    ids = range(len(states)) if ids is None else list(ids)
+    for i, (params, opt) in zip(ids, states):
         mgr = CheckpointManager(os.path.join(directory, f"client_{i}"))
         state = mgr.restore({"params": params, "opt": opt}, step)
         out.append((state["params"], state["opt"]))

@@ -49,11 +49,19 @@ class Mail:
 
 class PredictionBus:
     def __init__(self, transport: Transport, graph, num_clients: int,
-                 meter: Optional[CommMeter] = None):
+                 meter: Optional[CommMeter] = None,
+                 membership: Optional[Any] = None):
+        # ``membership`` (repro.fleet.Membership, duck-typed via
+        # ``is_alive(client, step)``) makes the bus churn-aware: a message
+        # arriving for a dead client is dropped and metered as a
+        # *tombstoned* loss — the sender offered it, the student never
+        # sees it, delivered stays ≤ offered. None = everyone always
+        # alive (the static-fleet behavior, unchanged).
         self.transport = transport
         self.graph_fn: GraphFn = as_graph_fn(graph)
         self.num_clients = num_clients
         self.meter = meter
+        self.membership = membership
         self._mailboxes: Dict[int, Dict[int, Mail]] = {
             i: {} for i in range(num_clients)}
         self._clocks: Dict[int, int] = {i: 0 for i in range(num_clients)}
@@ -75,6 +83,14 @@ class PredictionBus:
         n = 0
         for dst in range(self.num_clients):
             for d in self.transport.poll(dst, step):
+                if self.membership is not None and \
+                        not self.membership.is_alive(dst, step):
+                    # dead destination: the mail is a tombstoned loss —
+                    # offered (metered at publish), never delivered
+                    if self.meter is not None:
+                        self.meter.record_tombstone(step, d.src, dst,
+                                                    len(d.payload))
+                    continue
                 cur = self._mailboxes[dst].get(d.src)
                 if cur is None or d.sent_step >= cur.sent_step:
                     self._mailboxes[dst][d.src] = Mail(
@@ -87,6 +103,11 @@ class PredictionBus:
 
     def mailbox(self, dst: int) -> Dict[int, Mail]:
         return self._mailboxes[dst]
+
+    def clear_mailbox(self, dst: int) -> None:
+        """Wipe a client's mailbox — its mail dies with it (client churn:
+        a killed process loses everything not in its snapshot)."""
+        self._mailboxes[dst] = {}
 
     # -- per-client clocks (async runtime) -------------------------------
 
@@ -113,6 +134,24 @@ class PredictionBus:
         t = self._clocks[client]
         return {src: m for src, m in box.items()
                 if m.staleness(t) <= max_staleness}
+
+    # -- snapshot/restore (repro.fleet) ----------------------------------
+
+    def client_state(self, dst: int) -> Dict[str, Any]:
+        """One client's bus slice — mailbox + logical clock — the unit a
+        per-process fleet snapshot captures."""
+        return {
+            "clock": int(self._clocks[dst]),
+            "mail": {int(src): (m.payload, int(m.sent_step),
+                                int(m.recv_step))
+                     for src, m in self._mailboxes[dst].items()},
+        }
+
+    def load_client_state(self, dst: int, state: Dict[str, Any]) -> None:
+        self._clocks[dst] = int(state["clock"])
+        self._mailboxes[dst] = {
+            int(src): Mail(int(src), bytes(payload), int(sent), int(recv))
+            for src, (payload, sent, recv) in state["mail"].items()}
 
     EMPTY_STALENESS = -1.0  # sentinel: no mail has ever arrived
 

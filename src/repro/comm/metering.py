@@ -48,6 +48,12 @@ class CommMeter:
         self.gate_fresh: Dict[int, int] = defaultdict(int)
         self.gate_stale: Dict[int, int] = defaultdict(int)
         self.rejected_publishes = 0  # non-finite payloads refused by codecs
+        # tombstoned book (elastic fleets): messages addressed to a client
+        # that was dead at delivery time — offered, never delivered; the
+        # churn analogue of a transport drop (`repro.fleet.membership`)
+        self.tombstoned_messages = 0
+        self.tombstoned_bytes = 0
+        self.by_dst_tombstoned: Dict[int, int] = defaultdict(int)
 
     def record(self, step: int, src: int, dst: int, nbytes: int) -> None:
         """One *offered* send (sender-side cost; drops included)."""
@@ -67,6 +73,15 @@ class CommMeter:
         self.delivered_messages += 1
         self.by_edge_delivered[(src, dst)] += nbytes
         self.by_dst_delivered[dst] += nbytes
+
+    def record_tombstone(self, step: int, src: int, dst: int,
+                         nbytes: int) -> None:
+        """One message whose destination was dead when it arrived (client
+        churn): the sender paid for it (offered book), the student never
+        saw it. Keeps delivered ≤ offered with the gap attributable."""
+        self.tombstoned_messages += 1
+        self.tombstoned_bytes += nbytes
+        self.by_dst_tombstoned[dst] += nbytes
 
     def record_gate(self, client: int, fresh: int, stale: int) -> None:
         """One teacher-assembly event: ``fresh`` sampled pool entries
@@ -110,7 +125,70 @@ class CommMeter:
             "max_edge_bytes": float(max(self.by_edge.values(), default=0)),
             "stale_skips": float(sum(self.gate_stale.values())),
             "rejected_publishes": float(self.rejected_publishes),
+            "tombstoned_messages": float(self.tombstoned_messages),
+            "tombstoned_bytes": float(self.tombstoned_bytes),
         }
+
+    # -- snapshot/restore (repro.fleet) ----------------------------------
+
+    def state_dict(self) -> Dict[str, object]:
+        """Both books + gate/tombstone counters, JSON-pure (edge-tuple
+        keys become "src-dst" strings)."""
+        def edges(d: Dict[Edge, int]) -> Dict[str, int]:
+            return {f"{s}-{t}": int(v) for (s, t), v in d.items()}
+
+        def ints(d: Dict[int, int]) -> Dict[str, int]:
+            return {str(k): int(v) for k, v in d.items()}
+
+        return {
+            "total_bytes": self.total_bytes,
+            "num_messages": self.num_messages,
+            "by_edge": edges(self.by_edge),
+            "by_step": ints(self.by_step),
+            "by_src": ints(self.by_src),
+            "by_dst": ints(self.by_dst),
+            "delivered_bytes": self.delivered_bytes,
+            "delivered_messages": self.delivered_messages,
+            "by_edge_delivered": edges(self.by_edge_delivered),
+            "by_dst_delivered": ints(self.by_dst_delivered),
+            "gate_fresh": ints(self.gate_fresh),
+            "gate_stale": ints(self.gate_stale),
+            "rejected_publishes": self.rejected_publishes,
+            "tombstoned_messages": self.tombstoned_messages,
+            "tombstoned_bytes": self.tombstoned_bytes,
+            "by_dst_tombstoned": ints(self.by_dst_tombstoned),
+        }
+
+    def load_state_dict(self, state: Dict[str, object]) -> None:
+        def edges(d) -> Dict[Edge, int]:
+            out: Dict[Edge, int] = defaultdict(int)
+            for k, v in d.items():
+                s, t = k.split("-")
+                out[(int(s), int(t))] = int(v)
+            return out
+
+        def ints(d) -> Dict[int, int]:
+            out: Dict[int, int] = defaultdict(int)
+            for k, v in d.items():
+                out[int(k)] = int(v)
+            return out
+
+        self.total_bytes = int(state["total_bytes"])
+        self.num_messages = int(state["num_messages"])
+        self.by_edge = edges(state["by_edge"])
+        self.by_step = ints(state["by_step"])
+        self.by_src = ints(state["by_src"])
+        self.by_dst = ints(state["by_dst"])
+        self.delivered_bytes = int(state["delivered_bytes"])
+        self.delivered_messages = int(state["delivered_messages"])
+        self.by_edge_delivered = edges(state["by_edge_delivered"])
+        self.by_dst_delivered = ints(state["by_dst_delivered"])
+        self.gate_fresh = ints(state["gate_fresh"])
+        self.gate_stale = ints(state["gate_stale"])
+        self.rejected_publishes = int(state["rejected_publishes"])
+        self.tombstoned_messages = int(state["tombstoned_messages"])
+        self.tombstoned_bytes = int(state["tombstoned_bytes"])
+        self.by_dst_tombstoned = ints(state["by_dst_tombstoned"])
 
     def format_table(self) -> str:
         lines = ["edge         offered bytes   delivered"]

@@ -61,6 +61,19 @@ class Transport:
         """Release held resources. In-process transports hold none; the
         socket transport overrides this to close real listeners."""
 
+    # -- snapshot/restore (repro.fleet) ----------------------------------
+
+    def state_dict(self) -> Optional[Dict]:
+        """In-flight state for a fleet snapshot, or ``None`` when the
+        transport's wire state cannot be captured (real sockets: frames on
+        the kernel's wire are simply lost on restore — the staleness
+        machinery absorbs the gap). In-process transports override."""
+        return None
+
+    def load_state_dict(self, state: Dict) -> None:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support state restore")
+
 
 class LoopbackTransport(Transport):
     """Lossless, zero-latency, infinite-bandwidth in-process queues."""
@@ -78,6 +91,20 @@ class LoopbackTransport(Transport):
         for d in out:
             d.recv_step = step
         return out
+
+    def state_dict(self) -> Dict:
+        return {"queues": {
+            int(dst): [(d.src, d.payload, d.sent_step, d.recv_step)
+                       for d in q]
+            for dst, q in self._queues.items() if q}}
+
+    def load_state_dict(self, state: Dict) -> None:
+        self._queues = defaultdict(list)
+        for dst, q in state["queues"].items():
+            dst = int(dst)
+            self._queues[dst] = [
+                Delivery(int(src), dst, bytes(payload), int(sent), int(recv))
+                for src, payload, sent, recv in q]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,3 +189,33 @@ class SimulatedNetwork(Transport):
                 out.append(Delivery(src, dst, m.payload, m.sent_step, step))
         out.sort(key=lambda m: (m.sent_step, m.src))
         return out
+
+    def state_dict(self) -> Dict:
+        return {
+            "inflight": {
+                f"{s}-{d}": [(m.payload, m.sent_step, m.arrival_step)
+                             for m in msgs]
+                for (s, d), msgs in self._inflight.items() if msgs},
+            "edge_free_at": {f"{s}-{d}": int(v)
+                             for (s, d), v in self._edge_free_at.items()},
+            "rng": self.rng.bit_generator.state,
+            "sent_count": self.sent_count,
+            "dropped_count": self.dropped_count,
+        }
+
+    def load_state_dict(self, state: Dict) -> None:
+        def edge(key: str) -> Edge:
+            s, d = key.split("-")
+            return (int(s), int(d))
+
+        self._inflight = defaultdict(list)
+        for key, msgs in state["inflight"].items():
+            self._inflight[edge(key)] = [
+                _InFlight(bytes(p), int(sent), int(arr))
+                for p, sent, arr in msgs]
+        self._edge_free_at = defaultdict(int)
+        for key, v in state["edge_free_at"].items():
+            self._edge_free_at[edge(key)] = int(v)
+        self.rng.bit_generator.state = state["rng"]
+        self.sent_count = int(state["sent_count"])
+        self.dropped_count = int(state["dropped_count"])

@@ -113,17 +113,42 @@ class DecentralizedTrainer:
         comm: Optional[Any] = None,  # repro.comm.CommConfig
         transport: Optional[Any] = None,  # repro.comm.Transport
         local_clients: Optional[Sequence[int]] = None,
+        init_scheme: str = "legacy",
+        membership: Optional[Any] = None,  # repro.fleet.Membership
     ):
         # ``local_clients`` restricts which clients this *process* drives
         # (multi-process gossip: one trainer per OS process, each stepping
         # and publishing only its own clients over a socket transport;
         # remote clients exist only as mailbox senders). None = all — the
         # single-process behavior, unchanged.
+        #
+        # ``init_scheme`` picks the model-init rng scheme:
+        #   * "legacy" — one shared split chain: every process replays the
+        #     whole fleet's init stream (client i's params are identical in
+        #     every process, but a K-process fleet does O(K²) init work).
+        #     Bitwise-identical to all pre-fleet runs.
+        #   * "per_client" — client i inits from fold_in(PRNGKey(seed), i):
+        #     a process materializes params only for the clients it
+        #     drives — O(K) fleet startup. A different stream from legacy,
+        #     hence opt-in (`ExperimentSpec.init_scheme`).
+        #
+        # ``membership`` (repro.fleet.Membership) makes the fleet elastic:
+        # clients dead at construction start deactivated, and the bus
+        # tombstones mail addressed to dead clients. The scripted churn
+        # itself is driven from outside (repro.fleet.events.ChurnDriver).
         if local_clients is not None and exchange == "params":
             raise ValueError(
                 "local_clients requires a prediction exchange: the legacy "
                 "params mode reads neighbor parameters from shared memory, "
                 "which other processes don't have")
+        if init_scheme not in ("legacy", "per_client"):
+            raise ValueError(f"unknown init_scheme {init_scheme!r}; "
+                             "known: legacy, per_client")
+        if init_scheme == "per_client" and exchange == "params":
+            raise ValueError(
+                "init_scheme='per_client' skips materializing non-local "
+                "clients; the legacy params exchange reads every client's "
+                "raw params and needs the legacy scheme")
         if not callable(graph):
             validate_adjacency(graph)
         self.graph_fn = as_graph_fn(graph)
@@ -151,22 +176,49 @@ class DecentralizedTrainer:
             self.meter = CommMeter()
             self.bus = PredictionBus(
                 transport if transport is not None else LoopbackTransport(),
-                self.graph_fn, len(bundles), meter=self.meter)
+                self.graph_fn, len(bundles), meter=self.meter,
+                membership=membership)
             self.horizon = self.comm_cfg.horizon or mhd_cfg.pool_update_every
             pool_cls = PredictionPool
             self._pending: Dict[int, Dict[int, int]] = {
                 i: {} for i in range(len(bundles))}
 
+        if local_clients is None:
+            self.local_ids = list(range(len(bundles)))
+        else:
+            self.local_ids = sorted({int(c) for c in local_clients})
+            if any(i < 0 or i >= len(bundles) for i in self.local_ids):
+                raise ValueError(f"local_clients {self.local_ids} out of "
+                                 f"range for {len(bundles)} clients")
+        local_set = set(self.local_ids)
+
+        self.init_scheme = init_scheme
+        self.membership = membership
+        self._arrays = arrays
+        self._client_indices = list(client_indices)
+        # which clients this trainer actually ran model init for — the
+        # per_client scheme's O(K) startup claim is asserted on this
+        self.initialized_clients: List[int] = []
         self.clients: List[ClientState] = []
         key = jax.random.PRNGKey(run_cfg.seed)
         for i, bundle in enumerate(bundles):
-            key, sub = jax.random.split(key)
-            params = bundle.init(sub)
+            if init_scheme == "legacy":
+                key, sub = jax.random.split(key)
+            else:
+                sub = jax.random.fold_in(jax.random.PRNGKey(run_cfg.seed), i)
+            if init_scheme == "legacy" or i in local_set:
+                params = bundle.init(sub)
+                opt_state = optimizer.init(params)
+                self.initialized_clients.append(i)
+            else:
+                # per_client scheme: a remote client's params live in its
+                # own process; here it exists only as a mailbox address
+                params = opt_state = None
             self.clients.append(ClientState(
                 client_id=i,
                 bundle=bundle,
                 params=params,
-                opt_state=optimizer.init(params),
+                opt_state=opt_state,
                 pool=pool_cls(mhd_cfg.pool_size,
                               mhd_cfg.pool_update_every,
                               seed=run_cfg.seed + 101 * i),
@@ -177,14 +229,14 @@ class DecentralizedTrainer:
                 label_hist=label_histogram(arrays["labels"],
                                            client_indices[i], num_labels),
             ))
-        if local_clients is None:
-            self.local_ids = [c.client_id for c in self.clients]
-        else:
-            self.local_ids = sorted({int(c) for c in local_clients})
-            if any(i < 0 or i >= len(self.clients) for i in self.local_ids):
-                raise ValueError(f"local_clients {self.local_ids} out of "
-                                 f"range for {len(self.clients)} clients")
-        self.local = [self.clients[i] for i in self.local_ids]
+        # clients dead at wall step 0 (scripted late joiners) start
+        # deactivated: they neither step nor publish until activated
+        self._dead: set = set()
+        if membership is not None:
+            alive0 = membership.alive(0)
+            self._dead = {i for i in range(len(bundles)) if i not in alive0}
+        self.local = [self.clients[i] for i in self.local_ids
+                      if i not in self._dead]
         self._seed_pools(step=0)
 
     # -- jitted function caches ------------------------------------------
@@ -265,6 +317,68 @@ class DecentralizedTrainer:
                 entry = self._fetch_entry(c, j, step)
                 if entry is not None:
                     c.pool.insert(entry)
+
+    # -- client churn (repro.fleet) ----------------------------------------
+
+    @property
+    def active_ids(self) -> List[int]:
+        """The locally driven clients currently alive (stepping order)."""
+        return [c.client_id for c in self.local]
+
+    def _require_local(self, cid: int) -> ClientState:
+        if cid not in self.local_ids:
+            raise ValueError(
+                f"client {cid} is not driven by this process "
+                f"(local: {self.local_ids})")
+        return self.clients[cid]
+
+    def deactivate_client(self, cid: int) -> None:
+        """Kill one locally driven client: it stops stepping, publishing
+        and pulling, and its volatile state — mailbox, pending pulls,
+        teacher pool — dies with it (everything a crashed process loses;
+        params/opt survive only in snapshots). Idempotent."""
+        cid = int(cid)
+        self._require_local(cid)
+        self._dead.add(cid)
+        self.local = [c for c in self.local if c.client_id != cid]
+        if self.exchange != "params":
+            self.bus.clear_mailbox(cid)
+            self._pending[cid] = {}
+        self.clients[cid].pool.entries.clear()
+
+    def activate_client(self, cid: int) -> None:
+        """(Re)activate a locally driven client. Its state must exist —
+        restored from a snapshot (`repro.fleet.snapshot`) or freshly built
+        via ``reinit_client`` — before it steps again."""
+        cid = int(cid)
+        c = self._require_local(cid)
+        if c.params is None:
+            raise ValueError(
+                f"client {cid} has no materialized state; restore it from "
+                "a snapshot or call reinit_client first")
+        self._dead.discard(cid)
+        self.local = [self.clients[i] for i in self.local_ids
+                      if i not in self._dead]
+
+    def reinit_client(self, cid: int) -> None:
+        """Fresh state for a joining/restarting client: params from the
+        per-client fold-in stream (deterministic regardless of the fleet's
+        ``init_scheme``), fresh optimizer state, its private stream
+        rewound to the start, and a freshly seeded pool — a brand-new
+        process with no memory, matching what an actually relaunched
+        gossip child would construct."""
+        cid = int(cid)
+        c = self._require_local(cid)
+        sub = jax.random.fold_in(jax.random.PRNGKey(self.run_cfg.seed), cid)
+        c.params = c.bundle.init(sub)
+        c.opt_state = self.optimizer.init(c.params)
+        c.private_iter = BatchIterator(
+            self._arrays, self._client_indices[cid], self.run_cfg.batch_size,
+            seed=client_stream_seed(self.run_cfg.seed, cid))
+        c.pool = type(c.pool)(self.mhd_cfg.pool_size,
+                              self.mhd_cfg.pool_update_every,
+                              seed=self.run_cfg.seed + 101 * cid)
+        self.initialized_clients.append(cid)
 
     def _maybe_update_pools(self, step: int) -> None:
         if step % self.mhd_cfg.pool_update_every != 0:
@@ -496,20 +610,25 @@ class DecentralizedTrainer:
     # -- checkpointing ------------------------------------------------------
 
     def save(self, directory: str, step: int) -> None:
-        """Persist every client's (params, opt_state) — a decentralized run
-        is resumable per-client (each client would own its directory in a
-        real deployment)."""
+        """Persist every *materialized* client's (params, opt_state) — a
+        decentralized run is resumable per-client (each client would own
+        its directory in a real deployment; under init_scheme='per_client'
+        a process only has — and only saves — its own clients)."""
         from repro.checkpoint.io import save_client_states
 
+        have = [c for c in self.clients if c.params is not None]
         save_client_states(directory, step,
-                           [(c.params, c.opt_state) for c in self.clients])
+                           [(c.params, c.opt_state) for c in have],
+                           ids=[c.client_id for c in have])
 
     def restore(self, directory: str, step: Optional[int] = None) -> int:
         from repro.checkpoint.io import restore_client_states
 
+        have = [c for c in self.clients if c.params is not None]
         restored_step, states = restore_client_states(
-            directory, [(c.params, c.opt_state) for c in self.clients], step)
-        for c, (params, opt_state) in zip(self.clients, states):
+            directory, [(c.params, c.opt_state) for c in have], step,
+            ids=[c.client_id for c in have])
+        for c, (params, opt_state) in zip(have, states):
             c.params = params
             c.opt_state = opt_state
         if self.exchange != "params":

@@ -173,6 +173,24 @@ class AsyncScheduler:
         for c in pool_due:
             tr._pull_client(c, s, adj)
 
+    # -- snapshot/restore (repro.fleet) ------------------------------------
+
+    def state_dict(self) -> Dict[str, Any]:
+        """The scheduler's clocks: the wall tick and every client's local
+        step count — what a fleet snapshot needs to resume the async loop
+        bitwise (`repro.fleet.snapshot`)."""
+        return {"wall": int(self.wall),
+                "local_steps": [int(s) for s in self.local_steps]}
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        self.wall = int(state["wall"])
+        steps = [int(s) for s in state["local_steps"]]
+        if len(steps) != len(self.local_steps):
+            raise ValueError(
+                f"{len(steps)} local_steps for "
+                f"{len(self.local_steps)} clients")
+        self.local_steps = steps
+
     # -- driving loops -----------------------------------------------------
 
     def run(self, wall_ticks: int,

@@ -62,6 +62,20 @@ class BatchIterator:
         while True:
             yield self.next()
 
+    # -- snapshot/restore (repro.fleet) ---------------------------------
+
+    def state_dict(self) -> Dict[str, object]:
+        """The iterator's resumable state: shuffle order, cursor, and the
+        rng that generates future epochs' permutations. Restoring it makes
+        the stream continue bit-for-bit (`repro.fleet.snapshot`)."""
+        return {"order": self._order.copy(), "pos": int(self._pos),
+                "rng": self.rng.bit_generator.state}
+
+    def load_state_dict(self, state: Dict[str, object]) -> None:
+        self._order = np.asarray(state["order"])
+        self._pos = int(state["pos"])
+        self.rng.bit_generator.state = state["rng"]
+
 
 class PublicPool:
     """The shared public unlabeled pool D_* (labels stripped).

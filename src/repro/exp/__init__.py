@@ -18,6 +18,8 @@ from repro.exp.spec import (
     CLIENT_ARCHS,
     TRANSPORTS,
     AlgorithmSpec,
+    ChurnEventSpec,
+    ChurnSpec,
     ClientSpec,
     DataSpec,
     ExperimentSpec,
@@ -56,6 +58,8 @@ __all__ = [
     "Bindings",
     "CLIENT_ARCHS",
     "Capabilities",
+    "ChurnEventSpec",
+    "ChurnSpec",
     "ClientSpec",
     "DataSpec",
     "Experiment",

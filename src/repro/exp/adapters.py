@@ -82,6 +82,24 @@ class _AdapterBase:
     def restore(self, directory: str, step: Optional[int] = None) -> int:
         return self.trainer.restore(directory, step)
 
+    # -- fleet snapshots (repro.fleet.snapshot) --------------------------
+
+    def snapshot(self, directory: str, step: int) -> None:
+        """Full fleet snapshot — the bitwise-resume / churn-restart unit
+        (vs ``save``, which persists params+opt only)."""
+        from repro.fleet.snapshot import save_fleet
+
+        save_fleet(directory, step, self.trainer,
+                   scheduler=getattr(self, "scheduler", None))
+
+    def restore_snapshot(self, directory: str,
+                         step: Optional[int] = None) -> int:
+        from repro.fleet.snapshot import restore_fleet
+
+        return restore_fleet(directory, self.trainer,
+                             scheduler=getattr(self, "scheduler", None),
+                             step=step)
+
 
 @ALGORITHMS.register("mhd")
 class MHDAdapter(_AdapterBase):
@@ -91,7 +109,8 @@ class MHDAdapter(_AdapterBase):
     name = "mhd"
     capabilities = Capabilities(needs_public_pool=True, supports_async=True,
                                 heterogeneous_clients=True,
-                                uses_topology=True, decentralized=True)
+                                uses_topology=True, decentralized=True,
+                                elastic=True)
 
     MHD_DEFAULTS = {f.name: f.default
                     for f in dataclasses.fields(MHDConfig)}
@@ -100,6 +119,8 @@ class MHDAdapter(_AdapterBase):
         super().__init__(spec)
         self.scheduler = None
         self.transport = None
+        self.membership = None
+        self.churn = None
 
     def _resolve_params(self, spec: ExperimentSpec) -> Dict[str, Any]:
         defaults = dict(self.MHD_DEFAULTS)
@@ -138,23 +159,44 @@ class MHDAdapter(_AdapterBase):
                 emb_encoding=spec.wire.emb_encoding, tail=spec.wire.tail,
                 horizon=spec.wire.horizon)
         self.transport = bindings.transport
+        graph = bindings.graph
+        if spec.churn.events:
+            from repro.fleet import Membership, events_from_spec
+
+            events = events_from_spec(spec.churn)
+            self.membership = Membership(bindings.graph,
+                                         spec.num_clients, events)
+            graph = self.membership.graph_view
         self.trainer = DecentralizedTrainer(
             bindings.bundles, bindings.optimizer, mhd_cfg, run_cfg,
             bindings.arrays, bindings.partition.client_indices,
-            bindings.partition.public_indices, bindings.graph,
+            bindings.partition.public_indices, graph,
             bindings.num_labels, exchange=spec.wire.exchange,
             comm=comm_cfg, transport=bindings.transport,
-            local_clients=bindings.local_clients)
+            local_clients=bindings.local_clients,
+            init_scheme=spec.init_scheme, membership=self.membership)
         if spec.schedule.mode == "async":
             rates = spec.schedule.rates or \
                 tuple([1] * len(bindings.bundles))
             self.scheduler = AsyncScheduler(self.trainer,
                                             ScheduleConfig(tuple(rates)))
+        if spec.churn.events:
+            from repro.fleet import ChurnDriver
+
+            self.churn = ChurnDriver(self.trainer, events,
+                                     snapshot_dir=spec.train.snapshot_dir)
 
     def step(self, t: int) -> Dict[str, float]:
+        if self.churn is not None:
+            self.churn.before_step(t)
         if self.scheduler is not None:
-            return self.scheduler.tick()
-        return self.trainer.step(t)
+            metrics = self.scheduler.tick()
+        else:
+            metrics = self.trainer.step(t)
+        if self.membership is not None:
+            metrics["fleet/epoch"] = float(self.membership.epoch(t))
+            metrics["fleet/alive"] = float(len(self.trainer.local))
+        return metrics
 
 
 @ALGORITHMS.register("fedmd")

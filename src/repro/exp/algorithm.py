@@ -42,6 +42,7 @@ class Capabilities:
     heterogeneous_clients: bool = False  # per-client architectures OK
     uses_topology: bool = False  # consumes the communication graph G_t
     decentralized: bool = False  # no central aggregator on the wire
+    elastic: bool = False  # survives client churn (ChurnSpec events)
 
 
 @dataclasses.dataclass

@@ -11,6 +11,8 @@ from typing import Callable, List
 from repro.common.registry import Registry
 from repro.exp.spec import (
     AlgorithmSpec,
+    ChurnEventSpec,
+    ChurnSpec,
     ClientSpec,
     DataSpec,
     ExperimentSpec,
@@ -106,6 +108,41 @@ def _gossip_socket() -> ExperimentSpec:
         optimizer=OptimizerSpec(init_lr=0.05, grad_clip_norm=1.0),
         train=TrainSpec(steps=40, batch_size=16, public_batch_size=16,
                         max_staleness=4 * s_p))
+
+
+@PRESETS.register("churn_ring")
+def _churn_ring() -> ExperimentSpec:
+    """An elastic 5-client prediction-exchange ring (repro.fleet): client
+    4 joins late, client 1 crashes and restarts fresh, and the ring
+    rewires to 2-hop reach mid-run — the churn-axis counterpart of the
+    topology sweeps. Snapshot-based restarts need a snapshot_dir; this
+    preset uses a fresh restart so it runs out of the box."""
+    s_p, k = 5, 5
+    two_hop = tuple(tuple(sorted(((i + 1) % k, (i + 2) % k)))
+                    for i in range(k))
+    return ExperimentSpec(
+        name="churn_ring",
+        algorithm=AlgorithmSpec("mhd", {
+            "nu_emb": 1.0, "nu_aux": 1.0, "delta": 1,
+            "pool_size": 2, "pool_update_every": s_p}),
+        data=DataSpec(num_labels=12, samples_per_label=100),
+        partition=PartitionSpec(labels_per_client=3, skew=100.0,
+                                gamma_pub=0.1),
+        clients=ExperimentSpec.uniform_fleet(k, aux_heads=2),
+        topology=TopologySpec("cycle"),
+        wire=WireSpec(exchange="prediction_topk", topk=5,
+                      val_dtype="float16", emb_encoding="int8",
+                      horizon=3 * s_p),
+        optimizer=OptimizerSpec(init_lr=0.05, grad_clip_norm=1.0),
+        train=TrainSpec(steps=120, batch_size=16, public_batch_size=16,
+                        max_staleness=3 * s_p),
+        churn=ChurnSpec(events=(
+            ChurnEventSpec(kind="join", step=20, client=4),
+            ChurnEventSpec(kind="kill", step=40, client=1),
+            ChurnEventSpec(kind="restart", step=70, client=1,
+                           from_snapshot=False),
+            ChurnEventSpec(kind="rewire", step=90, edges=two_hop),
+        )))
 
 
 @PRESETS.register("fedmd_quick")

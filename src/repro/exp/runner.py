@@ -206,6 +206,10 @@ class Experiment:
             raise ValueError(
                 f"algorithm {algo.name!r} has no staleness gate; unset "
                 "train.max_staleness")
+        if spec.churn.events and not caps.elastic:
+            raise ValueError(
+                f"algorithm {algo.name!r} is not elastic; a churn "
+                "timeline (ChurnSpec.events) would silently not apply")
 
     def run(self,
             on_step: Optional[Callable[[int, Dict[str, float]], None]] = None,
@@ -235,6 +239,9 @@ class Experiment:
                 if train.checkpoint_dir and train.checkpoint_every and \
                         (t + 1) % train.checkpoint_every == 0:
                     algo.save(train.checkpoint_dir, t + 1)
+                if train.snapshot_dir and train.snapshot_every and \
+                        (t + 1) % train.snapshot_every == 0:
+                    algo.snapshot(train.snapshot_dir, t + 1)
 
             if not history or history[-1][0] != train.steps:
                 ev = algo.evaluate(bindings.test_arrays)
@@ -267,7 +274,8 @@ def _comm_metrics(algo: Algorithm) -> Dict[str, float]:
         return {}
     out = {"comm/total_bytes": float(meter.total_bytes),
            "comm/delivered_bytes": float(meter.delivered_bytes),
-           "comm/rejected_publishes": float(meter.rejected_publishes)}
+           "comm/rejected_publishes": float(meter.rejected_publishes),
+           "comm/tombstoned_bytes": float(meter.tombstoned_bytes)}
     for cid, g in meter.gate_summary().items():
         out[f"c{cid}/comm/fresh_teachers"] = float(g["fresh"])
         out[f"c{cid}/comm/stale_teachers"] = float(g["stale"])

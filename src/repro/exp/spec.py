@@ -222,6 +222,32 @@ class WireSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ChurnEventSpec:
+    """One scripted fleet event (`repro.fleet.events`), in wall steps.
+
+    ``kind``: "kill" | "restart" | "join" | "rewire". ``client`` names
+    the affected client (kill/restart/join); ``from_snapshot`` picks the
+    restart source (latest fleet snapshot vs fresh re-init); ``arch`` is
+    documentation for joins (the fleet's ClientSpec list owns the
+    architecture); ``edges`` is a full adjacency for rewires."""
+
+    kind: str
+    step: int
+    client: Optional[int] = None
+    from_snapshot: bool = True
+    arch: Optional[str] = None
+    edges: Optional[Tuple[Tuple[int, ...], ...]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnSpec:
+    """The scripted churn timeline — empty means a static fleet (the
+    pre-fleet behavior, unchanged)."""
+
+    events: Tuple[ChurnEventSpec, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
 class OptimizerSpec:
     """Mirror of `optim.optimizers.OptimizerConfig`; ``total_steps=None``
     follows ``train.steps``."""
@@ -239,7 +265,13 @@ class OptimizerSpec:
 @dataclasses.dataclass(frozen=True)
 class TrainSpec:
     """Loop cadence: steps (wall ticks when async), batching, eval and
-    checkpoint rhythm. ``eval_every=0`` = final evaluation only."""
+    checkpoint rhythm. ``eval_every=0`` = final evaluation only.
+
+    ``checkpoint_*`` is the plain params-only checkpoint
+    (`checkpoint/io`); ``snapshot_*`` is the full *fleet* snapshot
+    (`repro.fleet.snapshot`: params + opt + pools + mailboxes + clocks +
+    stream positions — the bitwise-resume and churn-restart unit).
+    ``snapshot_every=0`` disables snapshotting."""
 
     steps: int = 600
     batch_size: int = 32
@@ -250,6 +282,8 @@ class TrainSpec:
     seed: int = 0
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0  # 0 = final only (when checkpoint_dir is set)
+    snapshot_dir: Optional[str] = None
+    snapshot_every: int = 0  # fleet snapshots every N steps; 0 = never
 
 
 @dataclasses.dataclass(frozen=True)
@@ -268,6 +302,13 @@ class ExperimentSpec:
     optimizer: OptimizerSpec = dataclasses.field(
         default_factory=OptimizerSpec)
     train: TrainSpec = dataclasses.field(default_factory=TrainSpec)
+    churn: ChurnSpec = dataclasses.field(default_factory=ChurnSpec)
+    # model-init rng scheme: "legacy" = the shared split chain every
+    # process replays for the whole fleet (bitwise-identical to pre-fleet
+    # runs, O(K²) fleet startup across K processes); "per_client" =
+    # fold_in(seed, client_id), so a gossip child materializes only its
+    # own clients — O(K) startup. Different stream, hence opt-in.
+    init_scheme: str = "legacy"
 
     @property
     def num_clients(self) -> int:
@@ -294,10 +335,11 @@ class ExperimentSpec:
             "wire": WireSpec,
             "optimizer": OptimizerSpec,
             "train": TrainSpec,
+            "churn": ChurnSpec,
         }
         kwargs: Dict[str, Any] = {}
         for key, val in d.items():
-            if key == "name":
+            if key in ("name", "init_scheme"):
                 kwargs[key] = val
             elif key == "clients":
                 kwargs[key] = tuple(_build(ClientSpec, c) for c in val)
@@ -354,7 +396,52 @@ class ExperimentSpec:
             raise ValueError(f"unknown topology {self.topology.name!r}")
         if self.data.kind != "synthetic_vision":
             raise ValueError(f"unknown data kind {self.data.kind!r}")
+        if self.init_scheme not in ("legacy", "per_client"):
+            raise ValueError(f"unknown init_scheme {self.init_scheme!r}; "
+                             "known: legacy, per_client")
+        if self.init_scheme == "per_client" and \
+                self.wire.exchange == "params":
+            raise ValueError(
+                "init_scheme='per_client' skips materializing non-local "
+                "clients; the params exchange reads every client's raw "
+                "params and needs init_scheme='legacy'")
+        if self.train.snapshot_every and not self.train.snapshot_dir:
+            raise ValueError(
+                "train.snapshot_every needs train.snapshot_dir")
+        self._validate_churn()
         return self
+
+    def _validate_churn(self) -> None:
+        for ev in self.churn.events:
+            if ev.kind not in ("kill", "restart", "join", "rewire"):
+                raise ValueError(f"unknown churn event kind {ev.kind!r}")
+            if ev.step < 0:
+                raise ValueError(f"churn event at negative step {ev.step}")
+            if ev.kind == "rewire":
+                if ev.edges is None or len(ev.edges) != self.num_clients:
+                    raise ValueError(
+                        f"rewire@{ev.step} needs a full adjacency "
+                        f"({self.num_clients} rows)")
+                continue
+            if ev.client is None or not \
+                    (0 <= ev.client < self.num_clients):
+                raise ValueError(
+                    f"churn {ev.kind}@{ev.step} needs a client id in "
+                    f"[0, {self.num_clients})")
+            if ev.kind == "restart" and ev.from_snapshot and \
+                    not self.train.snapshot_dir:
+                raise ValueError(
+                    f"restart@{ev.step} from snapshot needs "
+                    "train.snapshot_dir (or from_snapshot=false for a "
+                    "fresh re-init)")
+        if self.churn.events:
+            # full timeline coherence (kill/restart alternation, rewire
+            # adjacency validity): delegate to the runtime's Membership,
+            # so --dry-run rejects an incoherent script before training
+            from repro.fleet import Membership, events_from_spec
+
+            Membership(lambda step: [()] * self.num_clients,
+                       self.num_clients, events_from_spec(self.churn))
 
     # -- convenience constructors ------------------------------------------
 
@@ -385,4 +472,10 @@ def _build(cls, d: Any) -> Any:
     if cls is TransportSpec and kwargs.get("client_rates") is not None:
         kwargs["client_rates"] = {int(k): int(v)
                                   for k, v in kwargs["client_rates"].items()}
+    if cls is ChurnSpec and kwargs.get("events") is not None:
+        kwargs["events"] = tuple(_build(ChurnEventSpec, e)
+                                 for e in kwargs["events"])
+    if cls is ChurnEventSpec and kwargs.get("edges") is not None:
+        kwargs["edges"] = tuple(tuple(int(j) for j in nbrs)
+                                for nbrs in kwargs["edges"])
     return cls(**kwargs)

@@ -1,0 +1,54 @@
+"""repro.fleet — the elastic fleet runtime.
+
+Three pieces layered over the comm/launch stack:
+
+  * `snapshot` — versioned full-fleet checkpoints (params + opt state,
+    scheduler clocks, bus mailboxes + per-client clocks, comm-meter
+    books, data-stream positions, pool rngs/windows, in-process
+    transport in-flight) with per-client and per-process restore units.
+  * `events` — a scripted churn timeline (kill / restart-from-snapshot /
+    join / rewire) and the `ChurnDriver` that applies it to a live
+    trainer.
+  * `membership` — the deterministic passive view of that timeline:
+    liveness, configuration epochs, and the dynamic graph the bus and
+    trainer consult instead of a frozen adjacency.
+
+Surfaced declaratively through `repro.exp` (`ChurnSpec`,
+``TrainSpec.snapshot_every``, ``ExperimentSpec.init_scheme``); see
+docs/elastic_fleets.md.
+"""
+from repro.fleet.events import (
+    ChurnDriver,
+    ChurnEvent,
+    Join,
+    Kill,
+    Restart,
+    Rewire,
+    events_from_spec,
+)
+from repro.fleet.membership import Membership
+from repro.fleet.snapshot import (
+    SNAPSHOT_VERSION,
+    latest_step,
+    restore_clients,
+    restore_fleet,
+    save_fleet,
+    snapshot_steps,
+)
+
+__all__ = [
+    "ChurnDriver",
+    "ChurnEvent",
+    "Join",
+    "Kill",
+    "Membership",
+    "Restart",
+    "Rewire",
+    "SNAPSHOT_VERSION",
+    "events_from_spec",
+    "latest_step",
+    "restore_clients",
+    "restore_fleet",
+    "save_fleet",
+    "snapshot_steps",
+]

@@ -31,6 +31,21 @@ client's exit never truncates a slow one's run, and on a lossless
 localhost wire the fleet's delivered book equals its offered book — and
 an *exit* barrier holds sockets open until every result is collected.
 A hard ``timeout`` tears the fleet down rather than hanging.
+
+Elastic fleets (`repro.fleet`): when the spec sets
+``train.snapshot_dir``/``snapshot_every``, each child saves *its own*
+fleet snapshot slice every N local steps (params, optimizer, pool,
+mailbox, stream positions — ``proc_r{rank}`` files, no cross-process
+coordination), and ``launch_gossip(..., resume=True)`` restarts every
+rank from its latest snapshot — the kill-and-restore path CI smokes
+(`scripts/run_gossip_procs.py --churn-smoke`). ``die_at={rank: step}``
+injects a hard crash (``os._exit``, no cleanup) for testing that path.
+
+Failure detection: the launcher watches the whole fleet while waiting on
+any one child. A child that dies without reporting — before port
+rendezvous or mid-run — reaps the fleet *immediately* with the failed
+rank and exit signal in the error, instead of stalling every peer until
+the hard timeout.
 """
 from __future__ import annotations
 
@@ -39,12 +54,14 @@ import multiprocessing as mp
 import os
 import time
 import traceback
-from typing import Any, Dict, Optional
+from collections import defaultdict
+from typing import Any, Dict, List, Optional
 
 _DRAIN_ALL = 1 << 60  # poll step high enough to release every held frame
 
 
-def _child_run(spec_json: str, rank: int, conn, throttle_ms: float) -> None:
+def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
+               die_at: Optional[int] = None, resume: bool = False) -> None:
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
     from repro.comm import SocketTransport
     from repro.exp import ExperimentSpec, make_algorithm
@@ -76,12 +93,30 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float) -> None:
     algo.setup(bindings)
     trainer = algo.trainer
 
+    snap_dir = spec.train.snapshot_dir
+    snap_every = spec.train.snapshot_every
+    start_step = 0
+    if resume and snap_dir:
+        from repro.fleet.snapshot import restore_fleet
+
+        try:
+            # this rank's own slice: proc_r{rank} + client_{rank} files
+            start_step = restore_fleet(snap_dir, trainer)
+        except FileNotFoundError:
+            start_step = 0  # never snapshotted: a fresh start
+
     distill_steps = 0
     last: Dict[str, float] = {}
     t0 = time.perf_counter()
-    for t in range(spec.train.steps):
+    for t in range(start_step, spec.train.steps):
+        if die_at is not None and t == die_at:
+            os._exit(17)  # injected crash: no cleanup, no report
         last = trainer.step(t)
         distill_steps += int(last.get(f"c{rank}/distill_active", 0.0))
+        if snap_dir and snap_every and (t + 1) % snap_every == 0:
+            from repro.fleet.snapshot import save_fleet
+
+            save_fleet(snap_dir, t + 1, trainer)
         if throttle_ms:
             time.sleep(throttle_ms / 1000.0)
     wall = time.perf_counter() - t0
@@ -105,6 +140,7 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float) -> None:
     conn.send(("result", rank, {
         "rank": rank,
         "steps": spec.train.steps,
+        "start_step": start_step,
         "wall_seconds": wall,
         "distill_steps": distill_steps,
         "final_loss": float(last.get(f"c{rank}/loss", float("nan"))),
@@ -122,38 +158,97 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float) -> None:
 
 
 def _child_main(spec_json: str, rank: int, conn,
-                throttle_ms: float = 0.0) -> None:
+                throttle_ms: float = 0.0, die_at: Optional[int] = None,
+                resume: bool = False) -> None:
     try:
-        _child_run(spec_json, rank, conn, throttle_ms)
+        _child_run(spec_json, rank, conn, throttle_ms, die_at, resume)
     except Exception:
         with contextlib.suppress(Exception):
             conn.send(("error", rank, traceback.format_exc()))
         raise
 
 
-def _recv(conn, timeout: float, rank: int, proc) -> Any:
-    if not conn.poll(max(timeout, 0.0)):
-        raise TimeoutError(
-            f"gossip client {rank} sent nothing within {timeout:.0f}s "
-            f"(alive={proc.is_alive()})")
-    try:
-        return conn.recv()
-    except EOFError:
-        raise RuntimeError(
-            f"gossip client {rank} died (exit code {proc.exitcode}) "
-            "before reporting") from None
+def _exit_desc(exitcode: Optional[int]) -> str:
+    if exitcode is not None and exitcode < 0:
+        return f"killed by signal {-exitcode}"
+    return f"exit code {exitcode}"
+
+
+class _FleetComms:
+    """Receive messages from one child while watching the *whole* fleet:
+    a child that dies without reporting fails the run immediately (rank +
+    exit signal in the error), instead of stalling every live peer —
+    which blocks on the dead one — until the hard timeout."""
+
+    def __init__(self, conns: List[Any], procs: List[Any]):
+        self.conns = conns
+        self.procs = procs
+        self._stash: Dict[int, List[Any]] = defaultdict(list)
+
+    def recv(self, rank: int, timeout: float, phase: str) -> Any:
+        deadline = time.monotonic() + max(timeout, 0.0)
+        while True:
+            if self._stash[rank]:
+                return self._stash[rank].pop(0)
+            if self.conns[rank].poll(0.1):
+                try:
+                    return self.conns[rank].recv()
+                except EOFError:
+                    raise RuntimeError(
+                        f"gossip client {rank} died "
+                        f"({_exit_desc(self.procs[rank].exitcode)}) "
+                        f"during {phase} before reporting") from None
+            self._watch(rank, phase)
+            if time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"gossip client {rank} sent nothing within "
+                    f"{timeout:.0f}s during {phase} "
+                    f"(alive={self.procs[rank].is_alive()})")
+
+    def _watch(self, waiting_on: int, phase: str) -> None:
+        """Sweep for silently dead children. A dead child's last words
+        (an 'error' report, a stashed 'finished') are drained from its
+        pipe first — a traceback beats a bare exit code."""
+        for r, p in enumerate(self.procs):
+            if r == waiting_on or p.is_alive():
+                continue
+            while True:
+                try:
+                    if not self.conns[r].poll(0):
+                        break
+                    msg = self.conns[r].recv()
+                except (EOFError, OSError):
+                    break
+                if msg[0] == "error":
+                    raise RuntimeError(
+                        f"gossip client {msg[1]} failed during "
+                        f"{phase}:\n{msg[2]}")
+                self._stash[r].append(msg)
+            if not self._stash[r]:
+                raise RuntimeError(
+                    f"gossip client {r} died "
+                    f"({_exit_desc(p.exitcode)}) during {phase} without "
+                    "reporting; reaping the fleet")
 
 
 def launch_gossip(spec, timeout: float = 300.0,
                   start_timeout: float = 120.0,
                   throttle_ms: Optional[Dict[int, float]] = None,
+                  die_at: Optional[Dict[int, int]] = None,
+                  resume: bool = False,
                   ) -> Dict[int, Dict[str, Any]]:
     """Run ``spec`` as one OS process per client; returns per-rank results.
 
     ``throttle_ms`` sleeps that many milliseconds after each local step of
     the given ranks — a real (wall-clock) straggler. ``timeout`` bounds
     the whole run: on expiry every child is terminated and TimeoutError
-    raised, so a hung socket can never wedge the caller (or CI)."""
+    raised, so a hung socket can never wedge the caller (or CI).
+
+    ``die_at={rank: step}`` makes those ranks crash hard (``os._exit``)
+    at their given local step — the failure-injection hook behind the
+    kill-and-restore smoke. ``resume=True`` restarts every rank from its
+    latest fleet snapshot under ``spec.train.snapshot_dir`` (ranks with
+    no snapshot start fresh)."""
     spec = spec.validate()
     if spec.transport.kind != "socket":
         raise ValueError(
@@ -167,6 +262,7 @@ def launch_gossip(spec, timeout: float = 300.0,
             "silently ignore; use schedule mode 'sync' and throttle_ms "
             "for deliberate stragglers")
     throttle = {int(k): float(v) for k, v in (throttle_ms or {}).items()}
+    crash = {int(k): int(v) for k, v in (die_at or {}).items()}
     K = spec.num_clients
     ctx = mp.get_context("spawn")
     spec_json = spec.to_json()
@@ -176,44 +272,49 @@ def launch_gossip(spec, timeout: float = 300.0,
             parent_conn, child_conn = ctx.Pipe()
             p = ctx.Process(target=_child_main,
                             args=(spec_json, rank, child_conn,
-                                  throttle.get(rank, 0.0)),
+                                  throttle.get(rank, 0.0),
+                                  crash.get(rank), resume),
                             daemon=True)
             p.start()
             child_conn.close()
             conns.append(parent_conn)
             procs.append(p)
+        comms = _FleetComms(conns, procs)
 
         # phase 1: gather every child's listening port, broadcast the map
         ports: Dict[int, int] = {}
         start_deadline = time.monotonic() + start_timeout
-        for rank, conn in enumerate(conns):
-            msg = _recv(conn, start_deadline - time.monotonic(),
-                        rank, procs[rank])
+        for rank in range(K):
+            msg = comms.recv(rank, start_deadline - time.monotonic(),
+                             "setup")
             if msg[0] == "error":
                 raise RuntimeError(
                     f"gossip client {msg[1]} failed during setup:\n{msg[2]}")
             ports[msg[1]] = msg[2]
         for conn in conns:
-            conn.send(ports)
+            # a child may die between reporting and the broadcast; the
+            # next recv sweep surfaces it with its exit status
+            with contextlib.suppress(OSError):
+                conn.send(ports)
 
         # phase 2: finish barrier — every child reports that it has sent
         # its last frame; only then do the meter books stop moving
         deadline = time.monotonic() + timeout
-        for rank, conn in enumerate(conns):
-            msg = _recv(conn, deadline - time.monotonic(),
-                        rank, procs[rank])
+        for rank in range(K):
+            msg = comms.recv(rank, deadline - time.monotonic(), "training")
             if msg[0] == "error":
                 raise RuntimeError(
                     f"gossip client {msg[1]} failed:\n{msg[2]}")
             assert msg[0] == "finished", msg
         for conn in conns:
-            conn.send("all_finished")
+            with contextlib.suppress(OSError):
+                conn.send("all_finished")
 
         # phase 3: collect results under the hard run deadline
         results: Dict[int, Dict[str, Any]] = {}
-        for rank, conn in enumerate(conns):
-            msg = _recv(conn, deadline - time.monotonic(),
-                        rank, procs[rank])
+        for rank in range(K):
+            msg = comms.recv(rank, deadline - time.monotonic(),
+                             "finish barrier")
             if msg[0] == "error":
                 raise RuntimeError(
                     f"gossip client {msg[1]} failed:\n{msg[2]}")
@@ -221,7 +322,8 @@ def launch_gossip(spec, timeout: float = 300.0,
 
         # phase 4: exit barrier — only now may children close their sockets
         for conn in conns:
-            conn.send("done")
+            with contextlib.suppress(OSError):
+                conn.send("done")
         for p in procs:
             p.join(timeout=30)
         return results

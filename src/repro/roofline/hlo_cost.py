@@ -183,12 +183,38 @@ def _dot_flops(instr: Instr, symtab: Dict[str, str]) -> float:
     return 2.0 * out * contract
 
 
+def _split_operand_entries(text: str) -> List[str]:
+    """Split an operand list at top-level commas. Commas inside shape
+    brackets (``f32[32,128]``), layout braces (``{2,1,0}``) and nested
+    tuples stay attached to their operand."""
+    entries: List[str] = []
+    depth, start = 0, 0
+    for i, ch in enumerate(text):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            entries.append(text[start:i])
+            start = i + 1
+    entries.append(text[start:])
+    return [e for e in (e.strip() for e in entries) if e]
+
+
+def _entry_bytes(entry: str, symtab: Dict[str, str]) -> float:
+    """Bytes of ONE operand: resolved through the symbol table when the
+    entry references a known ``%name`` (the scheduled HLO also prints the
+    shape inline — counting both would double-charge every operand),
+    falling back to the inline-typed shape otherwise."""
+    m = _OPERAND_NAME_RE.search(entry)
+    if m and m.group(1) in symtab:
+        return float(_all_shape_bytes(symtab[m.group(1)]))
+    return float(_all_shape_bytes(entry))
+
+
 def _operand_bytes(instr: Instr, symtab: Dict[str, str]) -> float:
-    total = float(_all_shape_bytes(instr.operand_text))  # inline-typed, if any
-    for nm in _OPERAND_NAME_RE.findall(instr.operand_text):
-        if nm in symtab:
-            total += _all_shape_bytes(symtab[nm])
-    return total
+    return sum(_entry_bytes(e, symtab)
+               for e in _split_operand_entries(instr.operand_text))
 
 
 def _instr_bytes(instr: Instr, symtab: Dict[str, str]) -> float:
@@ -300,12 +326,15 @@ def analyze(hlo_text: str) -> Cost:
                                                               sub)
                         eff = fusion_param_cache[sub]
                     b = float(_all_shape_bytes(ins.result_text))
-                    names = _OPERAND_NAME_RE.findall(ins.operand_text)
-                    for i, nm in enumerate(names):
-                        full = _all_shape_bytes(symtab.get(nm, ""))
+                    # fusion operands map positionally to the called
+                    # computation's parameters; a slice-only parameter is
+                    # charged its effective (sliced) bytes, never more
+                    # than the full operand
+                    entries = _split_operand_entries(ins.operand_text)
+                    for i, entry in enumerate(entries):
+                        full = _entry_bytes(entry, symtab)
                         e = eff.get(i)
                         b += min(e, full) if e is not None else full
-                    b += float(_all_shape_bytes(ins.operand_text))  # inline
                     total.bytes += b
                 else:
                     total.bytes += _instr_bytes(ins, symtab)

@@ -1,0 +1,551 @@
+"""Tests for `repro.fleet` — the elastic fleet runtime.
+
+Acceptance (ISSUE 5):
+  * kill-and-restore determinism: in a 4-client ring under a lossless
+    in-process transport, killing one client at step T and restoring it
+    from its snapshot yields final per-client params bitwise-equal to
+    the uninterrupted run, with delivered ≤ offered on every edge;
+  * mid-run save→restore bitwise resume across all four trainers (MHD
+    sync + async scheduler clocks, FedMD, FedAvg, supervised);
+  * init_scheme="per_client": a process inits only its own clients
+    (counted init draws), while the legacy scheme's stream is untouched.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig, CommMeter, LoopbackTransport, \
+    PredictionBus
+from repro.core.graph import complete_graph, cycle_graph
+from repro.fleet import (
+    ChurnDriver,
+    Join,
+    Kill,
+    Membership,
+    Restart,
+    Rewire,
+    events_from_spec,
+    restore_clients,
+    restore_fleet,
+    save_fleet,
+    snapshot_steps,
+)
+
+from test_comm import _make_trainer
+
+
+def _tree_equal(a, b) -> bool:
+    eq = jax.tree.map(
+        lambda x, y: bool(np.array_equal(np.asarray(x), np.asarray(y))),
+        a, b)
+    return all(jax.tree.leaves(eq))
+
+
+def _clients_equal(clients_a, clients_b) -> bool:
+    return all(_tree_equal(ca.params, cb.params)
+               for ca, cb in zip(clients_a, clients_b))
+
+
+_PRED_KW = dict(K=4, steps=8, delta=1, m=1, s_p=2, graph=cycle_graph(4),
+                comm=CommConfig(topk=8, val_dtype="float32",
+                                emb_encoding="float32", horizon=12))
+
+
+# ---------------------------------------------------------------------------
+# membership
+# ---------------------------------------------------------------------------
+
+def test_membership_liveness_timeline():
+    mem = Membership(cycle_graph(4), 4, [
+        Kill(1, step=5), Restart(1, step=9), Join(3, step=3)])
+    assert mem.is_alive(0, 0) and mem.is_alive(1, 0)
+    assert not mem.is_alive(3, 0) and not mem.is_alive(3, 2)
+    assert mem.is_alive(3, 3)
+    assert mem.is_alive(1, 4) and not mem.is_alive(1, 5)
+    assert not mem.is_alive(1, 8) and mem.is_alive(1, 9)
+    assert mem.alive(0) == frozenset({0, 1, 2})
+    assert mem.alive(6) == frozenset({0, 2, 3})
+    assert mem.alive(20) == frozenset({0, 1, 2, 3})
+
+
+def test_membership_epochs_are_monotone():
+    mem = Membership(cycle_graph(3), 3, [Kill(0, 4), Restart(0, 8)])
+    assert [mem.epoch(t) for t in (0, 3, 4, 7, 8, 100)] == \
+        [0, 0, 1, 1, 2, 2]
+
+
+def test_membership_graph_view_filters_dead_sources_keeps_dead_dsts():
+    """A dead client publishes nothing (its out-edges vanish as teacher
+    links), but mail can still be *addressed* to it — the tombstone
+    path."""
+    mem = Membership(cycle_graph(4), 4, [Kill(1, step=5)])
+    # cycle: adj[i] = (i+1,). client 0 receives from 1; client 1 from 2.
+    assert mem.graph_view(4) == [(1,), (2,), (3,), (0,)]
+    view = mem.graph_view(5)
+    assert view[0] == ()  # dead source filtered: 0 no longer pulls from 1
+    assert view[1] == (2,)  # dead DESTINATION keeps its in-edges
+
+
+def test_membership_rewire_switches_edges():
+    two_hop = [(1, 2), (2, 3), (3, 0), (0, 1)]
+    mem = Membership(cycle_graph(4), 4, [Rewire(step=6, edges=tuple(
+        tuple(r) for r in two_hop))])
+    assert mem.graph_view(5) == [(1,), (2,), (3,), (0,)]
+    assert mem.graph_view(6) == [tuple(r) for r in two_hop]
+
+
+def test_membership_rejects_incoherent_scripts():
+    with pytest.raises(ValueError, match="already-dead"):
+        Membership(cycle_graph(3), 3, [Kill(0, 2), Kill(0, 4)])
+    with pytest.raises(ValueError, match="alive"):
+        Membership(cycle_graph(3), 3, [Restart(0, 2)])
+    with pytest.raises(ValueError, match="joins twice"):
+        Membership(cycle_graph(3), 3, [Join(0, 1), Join(0, 5)])
+    with pytest.raises(ValueError, match="outside"):
+        Membership(cycle_graph(3), 3, [Kill(7, 2)])
+    with pytest.raises(ValueError, match="rows"):
+        Membership(cycle_graph(3), 3, [Rewire(1, ((1,), (2,)))])
+
+
+def test_bus_tombstones_mail_to_dead_clients():
+    mem = Membership(complete_graph(2), 2, [Kill(1, step=3)])
+    meter = CommMeter()
+    bus = PredictionBus(LoopbackTransport(), complete_graph(2), 2,
+                        meter=meter, membership=mem)
+    bus.publish(0, b"live", 2)
+    assert bus.deliver(2) == 1
+    bus.publish(0, b"dead", 3)
+    assert bus.deliver(3) == 0  # dropped, not delivered
+    assert bus.mailbox(1)[0].payload == b"live"
+    assert meter.tombstoned_messages == 1
+    assert meter.tombstoned_bytes == 4
+    assert meter.delivered_bytes < meter.total_bytes
+
+
+# ---------------------------------------------------------------------------
+# spec blocks (repro.exp wiring)
+# ---------------------------------------------------------------------------
+
+def test_churn_spec_json_roundtrip():
+    from repro.exp import ExperimentSpec, get_preset
+
+    spec = get_preset("churn_ring")
+    assert spec.churn.events  # the preset actually scripts churn
+    spec2 = ExperimentSpec.from_json(spec.to_json()).validate()
+    assert spec2 == spec
+    events = events_from_spec(spec2.churn)
+    assert any(isinstance(e, Join) for e in events)
+    assert any(isinstance(e, Rewire) for e in events)
+
+
+def test_churn_spec_validation():
+    from repro.exp import (ChurnEventSpec, ChurnSpec, ExperimentSpec,
+                           TrainSpec)
+
+    with pytest.raises(ValueError, match="client id"):
+        ExperimentSpec(churn=ChurnSpec(events=(
+            ChurnEventSpec(kind="kill", step=3, client=99),))).validate()
+    with pytest.raises(ValueError, match="snapshot_dir"):
+        ExperimentSpec(churn=ChurnSpec(events=(
+            ChurnEventSpec(kind="kill", step=1, client=0),
+            ChurnEventSpec(kind="restart", step=3, client=0),))).validate()
+    with pytest.raises(ValueError, match="adjacency"):
+        ExperimentSpec(churn=ChurnSpec(events=(
+            ChurnEventSpec(kind="rewire", step=3),))).validate()
+    with pytest.raises(ValueError, match="init_scheme"):
+        ExperimentSpec(init_scheme="bogus").validate()
+    with pytest.raises(ValueError, match="snapshot_dir"):
+        ExperimentSpec(train=TrainSpec(snapshot_every=5)).validate()
+
+
+def test_runner_rejects_churn_for_inelastic_algorithms():
+    from repro.exp import (AlgorithmSpec, ChurnEventSpec, ChurnSpec,
+                           Experiment, ExperimentSpec)
+
+    spec = ExperimentSpec(
+        algorithm=AlgorithmSpec("fedavg", {"average_every": 5}),
+        churn=ChurnSpec(events=(
+            ChurnEventSpec(kind="kill", step=3, client=0),)))
+    with pytest.raises(ValueError, match="not elastic"):
+        Experiment(spec).run()
+
+
+# ---------------------------------------------------------------------------
+# snapshots: bitwise resume (all four trainers)
+# ---------------------------------------------------------------------------
+
+def test_snapshot_resume_bitwise_mhd_sync(tmp_path):
+    """Step to T, snapshot, step to 2T; restore a FRESH trainer at T and
+    step to 2T: params and step metrics identical (prediction wire)."""
+    T, N = 4, 8
+    tr_a = _make_trainer("prediction_topk", **_PRED_KW)
+    metrics_a = [tr_a.step(t) for t in range(N)]
+    tr_b = _make_trainer("prediction_topk", **_PRED_KW)
+    for t in range(T):
+        tr_b.step(t)
+    save_fleet(str(tmp_path), T, tr_b)
+    tr_c = _make_trainer("prediction_topk", **_PRED_KW)
+    assert restore_fleet(str(tmp_path), tr_c) == T
+    metrics_c = [tr_c.step(t) for t in range(T, N)]
+    assert _clients_equal(tr_a.clients, tr_c.clients)
+    assert metrics_a[T:] == metrics_c
+    assert tr_a.meter.total_bytes == tr_c.meter.total_bytes
+    assert tr_a.meter.delivered_bytes == tr_c.meter.delivered_bytes
+
+
+def test_snapshot_resume_bitwise_mhd_params_mode(tmp_path):
+    T, N = 3, 6
+    kw = dict(K=3, steps=N, delta=2, m=1, s_p=2)
+    tr_a = _make_trainer("params", **kw)
+    for t in range(N):
+        tr_a.step(t)
+    tr_b = _make_trainer("params", **kw)
+    for t in range(T):
+        tr_b.step(t)
+    save_fleet(str(tmp_path), T, tr_b)
+    tr_c = _make_trainer("params", **kw)
+    assert restore_fleet(str(tmp_path), tr_c) == T
+    for t in range(T, N):
+        tr_c.step(t)
+    assert _clients_equal(tr_a.clients, tr_c.clients)
+
+
+def test_snapshot_resume_bitwise_mhd_async_clocks(tmp_path):
+    """Async resume restores the scheduler's wall tick and per-client
+    local step counts — a 2× straggler keeps its cadence and its LR
+    schedule position."""
+    from repro.core import AsyncScheduler, ScheduleConfig
+
+    kw = dict(K=3, steps=12, delta=1, m=1, s_p=2,
+              comm=CommConfig(topk=8, val_dtype="float32",
+                              emb_encoding="float32", horizon=20))
+    rates = (1, 1, 2)
+    tr_a = _make_trainer("prediction_topk", **kw)
+    sched_a = AsyncScheduler(tr_a, ScheduleConfig(rates))
+    for _ in range(12):
+        sched_a.tick()
+    tr_b = _make_trainer("prediction_topk", **kw)
+    sched_b = AsyncScheduler(tr_b, ScheduleConfig(rates))
+    for _ in range(6):
+        sched_b.tick()
+    save_fleet(str(tmp_path), 6, tr_b, scheduler=sched_b)
+    tr_c = _make_trainer("prediction_topk", **kw)
+    sched_c = AsyncScheduler(tr_c, ScheduleConfig(rates))
+    assert restore_fleet(str(tmp_path), tr_c, scheduler=sched_c) == 6
+    assert sched_c.wall == 6
+    assert sched_c.local_steps == sched_b.local_steps
+    for _ in range(6):
+        sched_c.tick()
+    assert _clients_equal(tr_a.clients, tr_c.clients)
+    assert sched_c.local_steps == sched_a.local_steps
+
+
+def _baseline_trainer(kind: str):
+    from repro.core.fedavg import FedAvgTrainer
+    from repro.core.fedmd import FedMDTrainer
+    from repro.core.supervised import SupervisedTrainer
+    from repro.data import (PartitionConfig, make_synthetic_vision,
+                            partition_dataset)
+    from repro.models.resnet import resnet_tiny
+    from repro.models.zoo import build_bundle
+    from repro.optim.optimizers import OptimizerConfig, make_optimizer
+
+    K, labels = 3, 8
+    ds = make_synthetic_vision(num_labels=labels, samples_per_label=30,
+                               image_size=8, noise=0.5, seed=0)
+    part = partition_dataset(ds.labels, PartitionConfig(
+        num_clients=K, num_labels=labels, labels_per_client=2, skew=100.0,
+        gamma_pub=0.2, seed=0))
+    arrays = {"images": ds.images, "labels": ds.labels}
+    bundles = [build_bundle(resnet_tiny(labels)) for _ in range(K)]
+    opt = make_optimizer(OptimizerConfig(init_lr=0.05, total_steps=6,
+                                         grad_clip_norm=1.0))
+    if kind == "fedmd":
+        return FedMDTrainer(bundles, opt, arrays, part.client_indices,
+                            part.public_indices, labels, batch_size=8,
+                            public_batch_size=8)
+    if kind == "fedavg":
+        return FedAvgTrainer(bundles[0], opt, arrays, part.client_indices,
+                             labels, batch_size=8, average_every=2)
+    if kind == "supervised":
+        return SupervisedTrainer(bundles, opt, arrays, part.client_indices,
+                                 labels, batch_size=8, scope="separate")
+    raise ValueError(kind)
+
+
+@pytest.mark.parametrize("kind", ["fedmd", "fedavg", "supervised"])
+def test_snapshot_resume_bitwise_baselines(kind, tmp_path):
+    """The same save→restore bitwise-resume contract for the baseline
+    trainers: identical params AND identical step metrics."""
+    T, N = 3, 6
+    tr_a = _baseline_trainer(kind)
+    metrics_a = [tr_a.step(t) for t in range(N)]
+    tr_b = _baseline_trainer(kind)
+    for t in range(T):
+        tr_b.step(t)
+    save_fleet(str(tmp_path), T, tr_b)
+    tr_c = _baseline_trainer(kind)
+    assert restore_fleet(str(tmp_path), tr_c) == T
+    metrics_c = [tr_c.step(t) for t in range(T, N)]
+    assert metrics_a[T:] == metrics_c
+    params_a = (tr_a.client_params if kind == "fedavg" else tr_a.params)
+    params_c = (tr_c.client_params if kind == "fedavg" else tr_c.params)
+    for pa, pc in zip(params_a, params_c):
+        assert _tree_equal(pa, pc)
+
+
+def test_snapshot_version_gate(tmp_path):
+    from repro.fleet import snapshot as snap
+
+    tr = _baseline_trainer("supervised")
+    save_fleet(str(tmp_path), 2, tr)
+    # corrupt the version of the process file
+    path = str(tmp_path / "step_0000000002" / "proc_all.npz")
+    state = snap._load_state(path)
+    state["version"] = 999
+    snap._save_state(path, state)
+    with pytest.raises(ValueError, match="version"):
+        restore_fleet(str(tmp_path), _baseline_trainer("supervised"))
+
+
+# ---------------------------------------------------------------------------
+# kill-and-restore (the headline acceptance)
+# ---------------------------------------------------------------------------
+
+def test_kill_and_restore_bitwise_in_ring(tmp_path):
+    """ISSUE 5 acceptance: 4-client ring, lossless in-process transport;
+    kill client 2 at step T (its params, pool, mailbox and pending pulls
+    wiped), restore it from the step-T snapshot, finish — bitwise-equal
+    to the uninterrupted run, delivered ≤ offered on every edge."""
+    T, N, victim = 4, 8, 2
+    tr_a = _make_trainer("prediction_topk", **_PRED_KW)
+    for t in range(N):
+        tr_a.step(t)
+
+    tr_b = _make_trainer("prediction_topk", **_PRED_KW)
+    for t in range(T):
+        tr_b.step(t)
+    save_fleet(str(tmp_path), T, tr_b)
+
+    # the crash: state wiped, client out of the stepping set
+    tr_b.deactivate_client(victim)
+    c = tr_b.clients[victim]
+    c.params = jax.tree.map(lambda x: np.zeros_like(x), c.params)
+    c.opt_state = jax.tree.map(lambda x: np.zeros_like(x), c.opt_state)
+    assert victim not in tr_b.active_ids
+    assert len(tr_b.bus.mailbox(victim)) == 0
+
+    # the restore: its snapshot slice, nothing else touched
+    assert restore_clients(str(tmp_path), tr_b, [victim],
+                           step=T) == {victim: T}
+    tr_b.activate_client(victim)
+    for t in range(T, N):
+        tr_b.step(t)
+
+    assert _clients_equal(tr_a.clients, tr_b.clients)
+    meter = tr_b.meter
+    assert meter.by_edge, "no traffic metered"
+    for edge, offered in meter.by_edge.items():
+        assert meter.by_edge_delivered.get(edge, 0) <= offered, edge
+    # lossless wire + zero-length outage: the books agree exactly
+    assert meter.delivered_bytes == meter.total_bytes
+
+
+def test_kill_period_tombstones_then_fresh_restart(tmp_path):
+    """A client dead for a while: its in-mail is tombstoned (metered
+    offered-not-delivered), nobody crashes, and a fresh restart trains
+    and distills again."""
+    K, steps = 4, 12
+    kw = dict(_PRED_KW, K=K, steps=steps)
+    events = [Kill(1, step=4), Restart(1, step=8, from_snapshot=False)]
+    mem = Membership(cycle_graph(K), K, events)
+    tr = _make_trainer("prediction_topk",
+                       **dict(kw, graph=mem.graph_view, membership=mem))
+    driver = ChurnDriver(tr, events)
+    post_restart_distill = 0
+    for t in range(steps):
+        driver.before_step(t)
+        m = tr.step(t)
+        if 4 <= t < 8:
+            assert "c1/loss" not in m  # dead client does not step
+        if t >= 8:
+            assert "c1/loss" in m
+            post_restart_distill += int(m.get("c1/distill_active", 0.0))
+    assert len(driver.applied) == 2
+    meter = tr.meter
+    assert meter.tombstoned_messages > 0
+    for edge, offered in meter.by_edge.items():
+        assert meter.by_edge_delivered.get(edge, 0) <= offered, edge
+    assert meter.delivered_bytes + meter.tombstoned_bytes == \
+        meter.total_bytes  # lossless wire: every offered byte accounted
+    assert post_restart_distill > 0
+
+
+def test_join_late_client_starts_dead(tmp_path):
+    """A scripted joiner neither steps nor publishes before its join
+    step (its neighbors fall back to supervised-only), then joins."""
+    K, steps = 3, 6
+    events = [Join(2, step=3)]
+    mem = Membership(cycle_graph(K), K, events)
+    kw = dict(K=K, steps=steps, delta=1, m=1, s_p=2,
+              comm=CommConfig(topk=8, val_dtype="float32",
+                              emb_encoding="float32", horizon=10))
+    tr = _make_trainer("prediction_topk",
+                       **dict(kw, graph=mem.graph_view, membership=mem))
+    assert tr.active_ids == [0, 1]
+    driver = ChurnDriver(tr, events)
+    for t in range(steps):
+        driver.before_step(t)
+        m = tr.step(t)
+        assert ("c2/loss" in m) == (t >= 3)
+    assert tr.active_ids == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# init schemes
+# ---------------------------------------------------------------------------
+
+def _counting_bundles(K=3, labels=8, m=1):
+    from repro.models.resnet import resnet_tiny
+    from repro.models.zoo import build_bundle
+
+    counts = []
+
+    def wrap(bundle, i):
+        orig = bundle.init
+
+        def init(key):
+            counts.append(i)
+            return orig(key)
+
+        return dataclasses.replace(bundle, init=init)
+
+    bundles = [wrap(build_bundle(resnet_tiny(labels, num_aux_heads=m)), i)
+               for i in range(K)]
+    return bundles, counts
+
+
+def _trainer_with_bundles(bundles, **kw):
+    from repro.core import MHDConfig, DecentralizedTrainer, RunConfig
+    from repro.data import (PartitionConfig, make_synthetic_vision,
+                            partition_dataset)
+    from repro.optim.optimizers import OptimizerConfig, make_optimizer
+
+    K, labels = len(bundles), 8
+    ds = make_synthetic_vision(num_labels=labels, samples_per_label=30,
+                               image_size=8, noise=0.5, seed=0)
+    part = partition_dataset(ds.labels, PartitionConfig(
+        num_clients=K, num_labels=labels, labels_per_client=2, skew=100.0,
+        gamma_pub=0.2, seed=0))
+    opt = make_optimizer(OptimizerConfig(init_lr=0.05, total_steps=4,
+                                         grad_clip_norm=1.0))
+    mhd = MHDConfig(nu_emb=1.0, nu_aux=1.0, num_aux_heads=1, delta=1,
+                    pool_size=2, pool_update_every=2)
+    kw.setdefault("exchange", "prediction_topk")
+    return DecentralizedTrainer(
+        bundles, opt, mhd,
+        RunConfig(steps=4, batch_size=8, public_batch_size=8, seed=0),
+        {"images": ds.images, "labels": ds.labels},
+        part.client_indices, part.public_indices, complete_graph(K),
+        labels, comm=CommConfig(topk=8, horizon=4), **kw)
+
+
+def test_per_client_init_draws_only_local_models():
+    """The O(K) startup claim, asserted by counting init draws: a process
+    driving one client runs model init exactly once under per_client —
+    and K times under legacy (every process replays the full stream)."""
+    bundles, counts = _counting_bundles(K=3)
+    tr = _trainer_with_bundles(bundles, local_clients=[1],
+                               init_scheme="per_client")
+    assert counts == [1]
+    assert tr.initialized_clients == [1]
+    assert tr.clients[0].params is None and tr.clients[2].params is None
+
+    bundles, counts = _counting_bundles(K=3)
+    tr = _trainer_with_bundles(bundles, local_clients=[1],
+                               init_scheme="legacy")
+    assert counts == [0, 1, 2]
+    assert tr.initialized_clients == [0, 1, 2]
+
+
+def test_per_client_init_is_deterministic_across_processes():
+    """fold_in(seed, i): client i's params agree no matter which process
+    materializes them — the rendezvous-free property gossip needs."""
+    bundles, _ = _counting_bundles(K=3)
+    tr_a = _trainer_with_bundles(bundles, local_clients=[0, 1],
+                                 init_scheme="per_client")
+    bundles, _ = _counting_bundles(K=3)
+    tr_b = _trainer_with_bundles(bundles, local_clients=[1, 2],
+                                 init_scheme="per_client")
+    assert _tree_equal(tr_a.clients[1].params, tr_b.clients[1].params)
+
+
+def test_legacy_scheme_stream_is_unchanged():
+    """The legacy split chain is pinned: same params whether or not the
+    fleet machinery is in play (bitwise vs a hand-rolled split chain)."""
+    from repro.models.resnet import resnet_tiny
+    from repro.models.zoo import build_bundle
+
+    bundles, _ = _counting_bundles(K=3)
+    tr = _trainer_with_bundles(bundles, init_scheme="legacy")
+    key = jax.random.PRNGKey(0)
+    ref = build_bundle(resnet_tiny(8, num_aux_heads=1))
+    for i in range(3):
+        key, sub = jax.random.split(key)
+        assert _tree_equal(tr.clients[i].params, ref.init(sub)), i
+
+
+def test_per_client_rejects_params_exchange():
+    bundles, _ = _counting_bundles(K=3)
+    with pytest.raises(ValueError, match="per_client"):
+        _trainer_with_bundles(bundles, init_scheme="per_client",
+                              exchange="params")
+
+
+def test_spec_rejects_per_client_with_params_exchange():
+    from repro.exp import ExperimentSpec
+
+    with pytest.raises(ValueError, match="per_client"):
+        ExperimentSpec(init_scheme="per_client").validate()
+
+
+# ---------------------------------------------------------------------------
+# runner wiring
+# ---------------------------------------------------------------------------
+
+def test_runner_snapshot_cadence_and_churn(tmp_path):
+    """`Experiment.run()` with snapshot_every writes restorable fleet
+    snapshots, and a spec-driven churn run completes with tombstone
+    accounting in the exported metrics."""
+    from repro.exp import (ChurnEventSpec, ChurnSpec, Experiment,
+                           get_preset)
+
+    spec = get_preset("churn_ring")
+    spec = dataclasses.replace(
+        spec,
+        data=dataclasses.replace(spec.data, samples_per_label=30),
+        train=dataclasses.replace(spec.train, steps=12,
+                                  snapshot_dir=str(tmp_path),
+                                  snapshot_every=4),
+        churn=ChurnSpec(events=(
+            ChurnEventSpec(kind="kill", step=5, client=1),
+            ChurnEventSpec(kind="restart", step=9, client=1,
+                           from_snapshot=True),)))
+    res = Experiment(spec).run()
+    assert snapshot_steps(str(tmp_path)) == [4, 8, 12]
+    assert res.metrics["comm/tombstoned_bytes"] > 0
+    assert res.metrics["comm/delivered_bytes"] <= \
+        res.metrics["comm/total_bytes"]
+    # the restarted client is back in the final eval
+    assert any(k.startswith("c1/") for k in res.metrics)
+
+
+def test_churn_spec_exchange_mismatch_is_rejected(tmp_path):
+    tr = _make_trainer("prediction_topk", **_PRED_KW)
+    save_fleet(str(tmp_path), 2, tr)
+    tr2 = _make_trainer("params", K=4, steps=4, delta=1, m=1, s_p=2,
+                        graph=cycle_graph(4))
+    with pytest.raises(ValueError, match="exchange"):
+        restore_clients(str(tmp_path), tr2, [0])

@@ -55,6 +55,9 @@ def test_param_rules_divisibility():
 def test_small_mesh_dryrun_subprocess():
     """Lower+compile a reduced arch on a 2x2 mesh with 8 forced host devices
     — validates the whole shardings/steps/dryrun pipeline shape."""
+    if not hasattr(jax.sharding, "AxisType"):
+        pytest.skip("jax.sharding.AxisType (and jax.set_mesh) not in this "
+                    "jax version; the subprocess script needs them")
     script = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -55,6 +55,36 @@ def test_two_process_throttled_straggler():
     assert fleet["delivered_bytes"] <= fleet["offered_bytes"]
 
 
+@pytest.mark.slow
+def test_crash_is_reaped_promptly_and_fleet_resumes(tmp_path):
+    """ISSUE 5: a child crashing mid-run fails the launch immediately
+    with its rank + exit status (not the hard-timeout backstop), and a
+    ``resume=True`` relaunch restores every rank from its own fleet
+    snapshot — the crashed rank restarts from its last save and distills
+    again post-restore."""
+    import time
+
+    spec = get_preset("gossip_socket")
+    spec = dataclasses.replace(
+        spec,
+        clients=ExperimentSpec.uniform_fleet(
+            3, aux_heads=spec.clients[0].aux_heads),
+        init_scheme="per_client",
+        train=dataclasses.replace(spec.train, steps=8,
+                                  snapshot_dir=str(tmp_path),
+                                  snapshot_every=3))
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="client 1 died"):
+        launch_gossip(spec, timeout=240.0, die_at={1: 5})
+    assert time.monotonic() - t0 < 120.0  # reaped, not timed out
+
+    results = launch_gossip(spec, timeout=240.0, resume=True)
+    assert results[1]["start_step"] >= 3  # really restored, not fresh
+    assert results[1]["distill_steps"] >= 1  # distills post-restore
+    for rank, r in results.items():
+        assert np.isfinite(r["final_loss"]), rank
+
+
 def test_launch_rejects_non_socket_spec():
     spec = get_preset("gossip")  # simulated transport
     with pytest.raises(ValueError, match="socket"):
