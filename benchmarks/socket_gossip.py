@@ -85,8 +85,9 @@ def main(scale=None, full: bool = False) -> list:
     # the real wire: one OS process per client over localhost TCP
     sock_spec = _spec(steps, "socket")
     t0 = time.time()
-    fleet = fleet_summary(launch_gossip(sock_spec, timeout=240.0))
+    results = launch_gossip(sock_spec, timeout=240.0)
     sock_wall = time.time() - t0
+    fleet = fleet_summary(results)
     edges = sock_spec.num_clients  # directed ring: one out-edge per client
     sock = {
         "name": "socket/tcp_multiprocess",
@@ -99,6 +100,19 @@ def main(scale=None, full: bool = False) -> list:
             fleet["delivered_bytes"] / edges, 1),
         "distill_steps": fleet["distill_steps_total"],
         "wall_s_slowest_client": round(fleet["wall_seconds_max"], 2),
+        # ranks finish at very different times — a single wall_s hides
+        # where the gap to the slowest rank's training time went; break
+        # the launcher overhead out per rank (all seconds)
+        "launcher_overhead_s": round(
+            max(sock_wall - fleet["wall_seconds_max"], 0.0), 2),
+        "per_rank": {
+            str(r): {
+                "train_s": round(res["wall_seconds"], 2),
+                "setup_s": round(res.get("setup_s", 0.0), 2),
+                "rendezvous_s": round(res.get("rendezvous_s", 0.0), 2),
+                "barrier_wait_s": round(
+                    res.get("barrier_wait_s", 0.0), 2),
+            } for r, res in sorted(results.items())},
     }
     out.append(row(sock["name"], sock_wall / steps * 1e6,
                    f"wall_s={sock['wall_s']};bytes_per_edge="

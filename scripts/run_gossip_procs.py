@@ -70,6 +70,11 @@ def main(argv=None) -> int:
                         "(crash rank 1, resume the fleet from snapshots)")
     p.add_argument("--out", metavar="PATH",
                    help="write per-rank results + fleet summary JSON")
+    p.add_argument("--trace-dir", metavar="DIR",
+                   help="enable repro.obs tracing: per-rank Chrome traces "
+                        "+ a merged fleet timeline under DIR, validated "
+                        "after the run (merged file parses, every rank "
+                        "contributed distill spans, flow coverage)")
     args = p.parse_args(argv)
 
     from repro.exp import ExperimentSpec, get_preset
@@ -95,6 +100,10 @@ def main(argv=None) -> int:
     if args.steps:
         spec = dataclasses.replace(
             spec, train=dataclasses.replace(spec.train, steps=args.steps))
+    if args.trace_dir:
+        spec = dataclasses.replace(
+            spec, train=dataclasses.replace(spec.train,
+                                            trace_dir=args.trace_dir))
 
     K = spec.num_clients
     print(f"{spec.name}: {K} clients as {K} OS processes over TCP, "
@@ -131,7 +140,49 @@ def main(argv=None) -> int:
         print("FAIL: a client never distilled from a neighbor",
               file=sys.stderr)
         ok = False
+    if args.trace_dir and not check_trace(args.trace_dir, K, fleet):
+        ok = False
     return 0 if ok else 1
+
+
+def check_trace(trace_dir: str, num_ranks: int, fleet) -> bool:
+    """Validate the merged fleet trace a traced gossip run must produce:
+    it parses as Chrome trace JSON, every rank's track carries at least
+    one distill span, and the cross-process flow events pair up for the
+    bulk of delivered frames."""
+    from repro.obs import load_trace
+    from repro.obs.metrics import flow_coverage
+
+    merged = os.path.join(trace_dir, "trace_merged.json")
+    if not os.path.exists(merged):
+        print(f"FAIL: traced run produced no {merged}", file=sys.stderr)
+        return False
+    try:
+        data = load_trace(merged)
+        events = data["traceEvents"]
+    except (ValueError, KeyError) as e:
+        print(f"FAIL: merged trace unreadable: {e}", file=sys.stderr)
+        return False
+    distill_ranks = {ev["pid"] for ev in events
+                     if ev["ph"] == "X" and ev["name"] == "runtime/distill"}
+    ok = True
+    missing = sorted(set(range(num_ranks)) - distill_ranks)
+    if missing:
+        print(f"FAIL: ranks {missing} contributed no distill span to the "
+              f"merged trace", file=sys.stderr)
+        ok = False
+    cov = flow_coverage(events)
+    delivered = fleet["delivered_messages"]
+    if delivered and cov["flow_pairs"] < 0.9 * delivered:
+        print(f"FAIL: only {cov['flow_pairs']:.0f} send→delivery flow "
+              f"pairs for {delivered:.0f} delivered frames (<90%)",
+              file=sys.stderr)
+        ok = False
+    if ok:
+        print(f"trace ok: {merged} — {len(events)} events, "
+              f"{len(distill_ranks)} ranks with distill spans, "
+              f"{cov['flow_pairs']:.0f}/{delivered:.0f} flow pairs")
+    return ok
 
 
 def _warm_jit_cache(spec) -> None:

@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Phase-attribution report for a (merged) Chrome trace.
+
+    PYTHONPATH=src python scripts/trace_report.py artifacts/trace/trace_merged.json
+    PYTHONPATH=src python scripts/trace_report.py trace_r0.json --top 5
+
+Loads a trace written by `repro.obs` (a gossip child's per-rank file or
+the launcher's merged fleet timeline) and prints:
+
+  * one row per rank: wall-clock extent and seconds attributed to each
+    phase (distill / encode / wire / drain-wait / barrier / setup /
+    other / idle). Self-times — nested spans never double-count — so
+    each row sums exactly to its wall column;
+  * the top-N *stall* spans (drain waits, connect retries, barriers) —
+    the individual waits that ate the timeline;
+  * flow-event coverage: how many send→delivery pairs matched across
+    tracks (a merged multi-process trace should pair nearly all of them).
+
+The same trace loads in Perfetto (https://ui.perfetto.dev) for the
+zoomable view; this report is the terminal summary.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+
+def print_report(data, top: int = 10) -> None:
+    from repro.obs.metrics import (PHASE_ORDER, flow_coverage,
+                                   phase_attribution, stall_spans)
+
+    events = data.get("traceEvents", [])
+    phases = phase_attribution(events)
+    cols = ["wall"] + PHASE_ORDER
+    hdr = "rank  " + "".join(f"{c:>11}" for c in cols)
+    print(hdr)
+    print("-" * len(hdr))
+    for pid in sorted(phases):
+        row = phases[pid]
+        print(f"{pid:>4}  " + "".join(f"{row.get(c, 0.0):>11.3f}"
+                                      for c in cols))
+    print("(seconds; phases + idle sum to wall — self-times, nested "
+          "spans never double-count)")
+
+    stalls = stall_spans(events, top=top)
+    if stalls:
+        print(f"\ntop {len(stalls)} stall spans:")
+        for s in stalls:
+            args = " ".join(f"{k}={v}" for k, v in sorted(s["args"].items()))
+            print(f"  rank {s['rank']}: {s['name']:<22} "
+                  f"{s['dur_s']:>8.3f}s at t={s['start_s']:.3f}s"
+                  f"{'  ' + args if args else ''}")
+
+    cov = flow_coverage(events)
+    if cov["flow_starts"] or cov["flow_ends"]:
+        frac = (cov["flow_pairs"] / cov["flow_starts"]
+                if cov["flow_starts"] else 0.0)
+        print(f"\nflow events: {cov['flow_pairs']:.0f} matched "
+              f"send→delivery pairs / {cov['flow_starts']:.0f} sends "
+              f"({frac:.0%})")
+
+    od = data.get("otherData", {})
+    per_rank = od.get("per_rank", {})
+    dropped = sum(r.get("stats", {}).get("dropped", 0.0)
+                  for r in per_rank.values()) or \
+        od.get("stats", {}).get("dropped", 0.0)
+    if dropped:
+        print(f"\nWARNING: {dropped:.0f} events dropped by ring buffers — "
+              "phase sums undercount; raise the tracer capacity")
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    p.add_argument("trace", help="trace JSON (per-rank or merged)")
+    p.add_argument("--top", type=int, default=10,
+                   help="how many stall spans to list (default 10)")
+    args = p.parse_args(argv)
+
+    from repro.obs import load_trace
+
+    print_report(load_trace(args.trace), top=args.top)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -34,6 +34,8 @@ from repro.checkpoint.pool import CheckpointPool, PoolEntry
 from repro.core.graph import Adjacency, GraphFn, as_graph_fn
 from repro.comm.metering import CommMeter
 from repro.comm.transport import Delivery, Transport
+from repro.obs import tracer as trace
+from repro.obs.tracer import flow_id
 
 
 @dataclasses.dataclass
@@ -80,6 +82,7 @@ class PredictionBus:
         Each arrival is metered as *delivered* traffic — the receiver-side
         book, which excludes messages the transport dropped (those were
         metered as offered at ``publish`` time and nowhere else)."""
+        t0 = trace.now()
         n = 0
         for dst in range(self.num_clients):
             for d in self.transport.poll(dst, step):
@@ -90,6 +93,8 @@ class PredictionBus:
                     if self.meter is not None:
                         self.meter.record_tombstone(step, d.src, dst,
                                                     len(d.payload))
+                    trace.instant("bus/tombstone", src=d.src, dst=dst,
+                                  step=step, nbytes=len(d.payload))
                     continue
                 cur = self._mailboxes[dst].get(d.src)
                 if cur is None or d.sent_step >= cur.sent_step:
@@ -98,7 +103,12 @@ class PredictionBus:
                 if self.meter is not None:
                     self.meter.record_delivery(step, d.src, dst,
                                                len(d.payload))
+                trace.flow_end(flow_id(d.src, dst, d.sent_step))
                 n += 1
+        # emitted only when mail moved: the every-tick drain (and the
+        # gossip finish barrier's busy loop) must not flood the buffer
+        if n:
+            trace.complete("bus/deliver", t0, step=step, delivered=n)
         return n
 
     def mailbox(self, dst: int) -> Dict[int, Mail]:

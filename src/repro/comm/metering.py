@@ -54,6 +54,7 @@ class CommMeter:
         self.tombstoned_messages = 0
         self.tombstoned_bytes = 0
         self.by_dst_tombstoned: Dict[int, int] = defaultdict(int)
+        self.by_edge_tombstoned: Dict[Edge, int] = defaultdict(int)
 
     def record(self, step: int, src: int, dst: int, nbytes: int) -> None:
         """One *offered* send (sender-side cost; drops included)."""
@@ -82,6 +83,7 @@ class CommMeter:
         self.tombstoned_messages += 1
         self.tombstoned_bytes += nbytes
         self.by_dst_tombstoned[dst] += nbytes
+        self.by_edge_tombstoned[(src, dst)] += nbytes
 
     def record_gate(self, client: int, fresh: int, stale: int) -> None:
         """One teacher-assembly event: ``fresh`` sampled pool entries
@@ -157,6 +159,7 @@ class CommMeter:
             "tombstoned_messages": self.tombstoned_messages,
             "tombstoned_bytes": self.tombstoned_bytes,
             "by_dst_tombstoned": ints(self.by_dst_tombstoned),
+            "by_edge_tombstoned": edges(self.by_edge_tombstoned),
         }
 
     def load_state_dict(self, state: Dict[str, object]) -> None:
@@ -189,18 +192,26 @@ class CommMeter:
         self.tombstoned_messages = int(state["tombstoned_messages"])
         self.tombstoned_bytes = int(state["tombstoned_bytes"])
         self.by_dst_tombstoned = ints(state["by_dst_tombstoned"])
+        # absent in SNAPSHOT_VERSION=1 fleet snapshots (pre-obs)
+        self.by_edge_tombstoned = edges(state.get("by_edge_tombstoned", {}))
 
     def format_table(self) -> str:
-        lines = ["edge         offered bytes   delivered"]
-        # union of both books: a multi-process per-rank meter has
-        # outbound-only offered edges and inbound-only delivered edges
-        edges = sorted(set(self.by_edge) | set(self.by_edge_delivered))
+        lines = ["edge         offered bytes   delivered    tombstoned"]
+        # union of all three books: a multi-process per-rank meter has
+        # outbound-only offered edges and inbound-only delivered edges;
+        # a churned fleet has tombstone-only edges (dst died mid-run)
+        edges = sorted(set(self.by_edge) | set(self.by_edge_delivered)
+                       | set(self.by_edge_tombstoned))
         for (src, dst) in edges:
             b = self.by_edge.get((src, dst), 0)
             d = self.by_edge_delivered.get((src, dst), 0)
-            lines.append(f"{src:>3} -> {dst:<3}  {b:>12,}  {d:>12,}")
+            ts = self.by_edge_tombstoned.get((src, dst), 0)
+            lines.append(
+                f"{src:>3} -> {dst:<3}  {b:>12,}  {d:>12,}  {ts:>12,}")
         lines.append(f"total        {self.total_bytes:>12,}  "
-                     f"{self.delivered_bytes:>12,} "
+                     f"{self.delivered_bytes:>12,}  "
+                     f"{self.tombstoned_bytes:>12,} "
                      f"({self.num_messages} sent, "
-                     f"{self.delivered_messages} delivered)")
+                     f"{self.delivered_messages} delivered, "
+                     f"{self.tombstoned_messages} tombstoned)")
         return "\n".join(lines)

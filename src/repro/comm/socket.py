@@ -58,6 +58,8 @@ from collections import defaultdict
 from typing import Dict, Iterable, List, Optional, Sequence
 
 from repro.comm.transport import Delivery, Edge, Transport
+from repro.obs import tracer as trace
+from repro.obs.tracer import flow_id
 
 _FRAME_MAGIC = b"MHDF"
 _HEADER = struct.Struct("<4sqqqI")  # magic, src, dst, sent_step, nbytes
@@ -179,15 +181,16 @@ class SocketTransport(Transport):
                 "set_ports() before sending on edge "
                 f"({src}, {dst})")
         deadline = time.monotonic() + self.connect_timeout
-        while True:
-            try:
-                conn = socket.create_connection((self.host, port),
-                                                timeout=self.connect_timeout)
-                break
-            except OSError:
-                if time.monotonic() >= deadline:
-                    raise
-                time.sleep(0.05)
+        with trace.span("socket/connect", src=src, dst=dst, port=port):
+            while True:
+                try:
+                    conn = socket.create_connection(
+                        (self.host, port), timeout=self.connect_timeout)
+                    break
+                except OSError:
+                    if time.monotonic() >= deadline:
+                        raise
+                    time.sleep(0.05)
         conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         self._out[edge] = conn
         return conn
@@ -201,6 +204,7 @@ class SocketTransport(Transport):
         if edge in self._dead_edges:
             self.failed_sends += 1
             return
+        t0 = trace.now()
         conn = self._out.get(edge)
         if conn is None:
             try:
@@ -211,6 +215,8 @@ class SocketTransport(Transport):
                 # time-varying graph don't re-pay the retry window
                 self.failed_sends += 1
                 self._dead_edges.add(edge)
+                trace.complete("socket/send", t0, src=src, dst=dst,
+                               step=step, ok=False)
                 return
         frame = pack_frame(src, dst, step, payload)
         try:
@@ -228,11 +234,20 @@ class SocketTransport(Transport):
             with contextlib.suppress(OSError):
                 conn.close()
             self._out.pop(edge, None)
+            trace.complete("socket/send", t0, src=src, dst=dst,
+                           step=step, ok=False)
             return
         self.sent_count += 1
         self.sent_bytes += len(payload)
         if self.wait_inflight and dst in self._listeners:
             self._outstanding[dst] += 1
+        # flow start then the retro-emitted span: the "s" event's
+        # timestamp falls inside the span, so Perfetto binds the arrow to
+        # this send slice; the receiver emits the matching "f" from the
+        # same (src, dst, step) frame-header triple (repro.comm.bus)
+        trace.flow_start(flow_id(src, dst, step))
+        trace.complete("socket/send", t0, src=src, dst=dst, step=step,
+                       nbytes=len(payload))
 
     def _send_frame(self, conn: socket.socket, dst: int,
                     frame: bytes) -> None:
@@ -264,6 +279,8 @@ class SocketTransport(Transport):
             return []
         self._drain(dst)
         if self.wait_inflight and self._outstanding[dst] > 0:
+            t0 = trace.now()
+            waiting = self._outstanding[dst]
             deadline = time.monotonic() + self.drain_timeout
             while self._outstanding[dst] > 0:
                 if time.monotonic() >= deadline:
@@ -272,6 +289,8 @@ class SocketTransport(Transport):
                         f"for client {dst} never arrived within "
                         f"{self.drain_timeout}s")
                 self._drain(dst, wait=0.005)
+            trace.complete("socket/drain_wait", t0, dst=dst,
+                           frames=waiting)
         queue = self._queues[dst]
         ready = [d for d in queue if d.sent_step <= step]
         self._queues[dst] = [d for d in queue if d.sent_step > step]
@@ -286,6 +305,8 @@ class SocketTransport(Transport):
         """Accept pending connections and read whatever has arrived —
         never blocks beyond ``wait`` seconds."""
         srv = self._listeners[dst]
+        t0 = trace.now()
+        b0, f0 = self.recv_bytes, self.recv_count
         if wait:
             time.sleep(wait)
         while True:
@@ -320,6 +341,12 @@ class SocketTransport(Transport):
                 self._buffers.pop(conn, None)
                 with contextlib.suppress(OSError):
                     conn.close()
+        # emitted only when bytes actually moved: barrier/idle loops call
+        # _drain thousands of times and must not flood the ring buffer
+        if self.recv_count != f0 or self.recv_bytes != b0:
+            trace.complete("socket/drain", t0, dst=dst,
+                           frames=self.recv_count - f0,
+                           nbytes=self.recv_bytes - b0)
 
     def _parse_frames(self, dst: int, buf: bytearray) -> bool:
         """Parse complete frames out of ``buf``; returns False when the

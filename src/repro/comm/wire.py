@@ -37,6 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import tracer as trace
+
 _MAGIC = b"MHDW"
 _VERSION = 1
 
@@ -205,6 +207,7 @@ class PredictionMessage:
 
 
 def _serialize(msg: PredictionMessage, codec_id: int) -> bytes:
+    t0 = trace.now()
     parts = [_MAGIC, struct.pack("<BBH", _VERSION, codec_id,
                                  len(msg.arrays))]
     parts.append(struct.pack("<qqqq", msg.src, msg.sent_step, msg.t0,
@@ -219,10 +222,14 @@ def _serialize(msg: PredictionMessage, codec_id: int) -> bytes:
         parts.append(struct.pack("<BB", code, arr.ndim))
         parts.append(struct.pack(f"<{arr.ndim}q", *arr.shape))
         parts.append(arr.astype(dt, copy=False).tobytes())
-    return b"".join(parts)
+    payload = b"".join(parts)
+    trace.complete("wire/serialize", t0, src=msg.src,
+                   nbytes=len(payload))
+    return payload
 
 
 def _deserialize(payload: bytes) -> Tuple[PredictionMessage, int]:
+    t_start = trace.now()
     if payload[:4] != _MAGIC:
         raise ValueError("not a MHDW prediction message")
     ver, codec_id, n_arrays = struct.unpack_from("<BBH", payload, 4)
@@ -248,6 +255,8 @@ def _deserialize(payload: bytes) -> Tuple[PredictionMessage, int]:
             payload, dtype=dt, count=int(np.prod(shape)),
             offset=off).reshape(shape)
         off += nbytes
+    trace.complete("wire/deserialize", t_start, src=int(src),
+                   nbytes=len(payload))
     return PredictionMessage(int(src), int(sent_step), int(t0),
                              int(num_classes), arrays), codec_id
 

@@ -60,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.pool import CheckpointPool, PoolEntry
+from repro.obs import tracer as trace
 from repro.core.evaluation import (
     fleet_beta_metrics,
     label_histogram,
@@ -162,6 +163,11 @@ class DecentralizedTrainer:
         self._teacher_apply_cache: Dict[str, Callable] = {}
         self._update_cache: Dict[str, Callable] = {}
         self._supervised_cache: Dict[str, Callable] = {}
+        # abstract arg shapes of each bundle's distill update, captured on
+        # its first distillation step — enough to re-lower the jitted
+        # update for roofline costing (repro.obs.metrics.distill_step_cost)
+        # without holding any concrete arrays
+        self._distill_arg_shapes: Dict[str, Tuple] = {}
 
         self.exchange = exchange
         if exchange == "params":
@@ -410,6 +416,8 @@ class DecentralizedTrainer:
             return
         j = int(self.rng.choice(list(nbrs)))
         entry = self._fetch_entry(client, j, step)
+        trace.instant("runtime/pull", client=client.client_id, src=j,
+                      step=step, hit=entry is not None)
         if entry is not None:
             client.pool.insert(entry)
 
@@ -436,6 +444,8 @@ class DecentralizedTrainer:
         at their pool-update step, as soon as a window that still covers
         the current step shows up. Pulls whose own round has fully expired
         are abandoned."""
+        t0 = trace.now()
+        resolved = 0
         for c in self.local:
             keep: Dict[int, int] = {}
             for j, rnd in self._pending[c.client_id].items():
@@ -445,9 +455,13 @@ class DecentralizedTrainer:
                     c.pool.insert(
                         PoolEntry(j, self._decode_window(mail),
                                   mail.sent_step))
+                    resolved += 1
                 elif rnd + self.horizon > step:
                     keep[j] = rnd
             self._pending[c.client_id] = keep
+        if resolved:
+            trace.complete("runtime/resolve", t0, step=step,
+                           resolved=resolved)
 
     # -- prediction exchange (repro.comm) ----------------------------------
 
@@ -483,11 +497,15 @@ class DecentralizedTrainer:
                     for k, v in self.public.sample(step + w).items()}
                    for w in range(W)]
         for c in todo:
+            t_fwd = trace.now()
             apply_fn = self._teacher_apply(c.bundle)
             frames = [apply_fn(c.params, b) for b in batches]
             outs = {key: np.stack([np.asarray(f[key], np.float32)
                                    for f in frames])
                     for key in ("embedding", "logits", "aux_logits")}
+            trace.complete("publish/forward", t_fwd, client=c.client_id,
+                           step=step, window=W)
+            t_enc = trace.now()
             try:
                 payload = self.codec.encode(c.client_id, step, step, ids,
                                             outs)
@@ -495,20 +513,24 @@ class DecentralizedTrainer:
                 if self.meter is not None:
                     self.meter.rejected_publishes += 1
                 continue
+            trace.complete("publish/encode", t_enc, client=c.client_id,
+                           step=step, nbytes=len(payload))
             self.bus.publish(c.client_id, payload, step)
         return len(todo)
 
     def _decode_window(self, mail) -> Any:
         from repro.comm import PredictionWindow
 
-        msg = self.codec.decode(mail.payload)
-        for w in range(msg.window):
-            expect = self.public.sample_ids(msg.t0 + w).astype(np.uint64)
-            if not np.array_equal(msg.arrays["sample_ids"][w], expect):
-                raise ValueError(
-                    f"sample-id mismatch in message from client {msg.src} "
-                    f"at public step {msg.t0 + w}")
-        return PredictionWindow(msg.t0, self.codec.densify(msg))
+        with trace.span("wire/decode", src=mail.src,
+                        nbytes=len(mail.payload)):
+            msg = self.codec.decode(mail.payload)
+            for w in range(msg.window):
+                expect = self.public.sample_ids(msg.t0 + w).astype(np.uint64)
+                if not np.array_equal(msg.arrays["sample_ids"][w], expect):
+                    raise ValueError(
+                        f"sample-id mismatch in message from client "
+                        f"{msg.src} at public step {msg.t0 + w}")
+            return PredictionWindow(msg.t0, self.codec.densify(msg))
 
     # -- teacher assembly ---------------------------------------------------
 
@@ -528,6 +550,9 @@ class DecentralizedTrainer:
         if ms is not None:
             entries = [e for e in entries if step - e.step <= ms]
         skipped = sampled - len(entries)
+        if skipped:
+            trace.instant("runtime/gate_skip", client=client.client_id,
+                          step=step, fresh=len(entries), skipped=skipped)
         if self.meter is not None and sampled:
             self.meter.record_gate(client.client_id, len(entries), skipped)
         if not entries:
@@ -556,28 +581,45 @@ class DecentralizedTrainer:
         *local* step count under the async scheduler; defaults to t (the
         synchronous loop, where wall and local clocks coincide)."""
         opt_step = t if opt_step is None else opt_step
+        t_step = trace.now()
         if self.exchange != "params":
             self.bus.advance(c.client_id, t)
         private_np = c.private_iter.next()
         private_batch = {k: jnp.asarray(v) for k, v in private_np.items()}
         teachers, skipped = self._stack_teachers(c, public_batch, t)
         rng = jax.random.PRNGKey((t << 10) + c.client_id)
+        step_arg = jnp.asarray(opt_step)
         if teachers is None:
+            t_up = trace.now()
             update = self._supervised_update(c.bundle)
             c.params, c.opt_state, metrics = update(
-                c.params, c.opt_state, private_batch, jnp.asarray(opt_step))
+                c.params, c.opt_state, private_batch, step_arg)
         else:
+            if c.bundle.name not in self._distill_arg_shapes:
+                self._distill_arg_shapes[c.bundle.name] = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(
+                        jnp.shape(x), jnp.result_type(x)),
+                    (c.params, c.opt_state, private_batch, public_batch,
+                     teachers, step_arg, rng))
+            t_up = trace.now()
             update = self._client_update(c.bundle)
             c.params, c.opt_state, metrics = update(
                 c.params, c.opt_state, private_batch, public_batch,
-                teachers, jnp.asarray(opt_step), rng)
+                teachers, step_arg, rng)
+        # the float() conversions below block on the device computation,
+        # so the retro-emitted update span measures real compute time
         out = {f"c{c.client_id}/{k}": float(v) for k, v in metrics.items()}
+        trace.complete(
+            "runtime/supervised" if teachers is None else "runtime/distill",
+            t_up, client=c.client_id, step=t, bundle=c.bundle.name)
         out[f"c{c.client_id}/stale_skipped"] = float(skipped)
         out[f"c{c.client_id}/distill_active"] = float(teachers is not None)
         if self.exchange != "params":
             # -1.0 = empty mailbox (bus.EMPTY_STALENESS), not "fresh"
             out[f"c{c.client_id}/mail_staleness"] = \
                 self.bus.staleness(c.client_id, t)
+        trace.complete("runtime/step", t_step, client=c.client_id, step=t,
+                       distill=teachers is not None)
         return out
 
     def step(self, t: int) -> Dict[str, float]:

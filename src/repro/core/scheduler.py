@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.runtime import DecentralizedTrainer
+from repro.obs import tracer as trace
 
 # "argument not passed" sentinel: freshness_report must distinguish an
 # explicit max_staleness=None (unbounded view) from no argument at all
@@ -143,18 +144,21 @@ class AsyncScheduler:
         wall = self.wall
         due = [c for c in tr.local if self.due(c.client_id, wall)]
         metrics: Dict[str, float] = {}
-        if due:
-            public_np = tr.public.sample(wall)
-            public_batch = {k: jnp.asarray(v) for k, v in public_np.items()}
-            for c in due:
-                cid = c.client_id
-                m = tr.step_client(c, public_batch, wall,
-                                   opt_step=self.local_steps[cid])
-                self.local_steps[cid] += 1
-                m[f"c{cid}/local_step"] = float(self.local_steps[cid])
-                metrics.update(m)
-        self._comm_phase(wall + 1)
+        with trace.span("sched/tick", wall=wall, due=len(due)):
+            if due:
+                public_np = tr.public.sample(wall)
+                public_batch = {k: jnp.asarray(v)
+                                for k, v in public_np.items()}
+                for c in due:
+                    cid = c.client_id
+                    m = tr.step_client(c, public_batch, wall,
+                                       opt_step=self.local_steps[cid])
+                    self.local_steps[cid] += 1
+                    m[f"c{cid}/local_step"] = float(self.local_steps[cid])
+                    metrics.update(m)
+            self._comm_phase(wall + 1)
         self.wall = wall + 1
+        trace.counter("sched/wall", self.wall)
         return metrics
 
     def _comm_phase(self, s: int) -> None:
@@ -165,6 +169,8 @@ class AsyncScheduler:
         if not pool_due:
             tr._comm_tick(s)
             return
+        trace.instant("sched/pool_round", wall=s,
+                      clients=[c.client_id for c in pool_due])
         if tr.exchange != "params":
             tr._publish_clients([c.client_id for c in pool_due], s)
             tr.bus.deliver(s)  # unconditional: latency mail flows every tick

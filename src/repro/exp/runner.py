@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -223,6 +224,12 @@ class Experiment:
         train = spec.train
         history: List[Tuple[int, Dict[str, float]]] = []
         step_seconds = 0.0
+        tracer = None
+        if train.trace_dir:
+            from repro.obs import trace
+
+            os.makedirs(train.trace_dir, exist_ok=True)
+            tracer = trace.enable(process_name=spec.name)
         try:
             algo.setup(bindings)
             for t in range(train.steps):
@@ -258,9 +265,24 @@ class Experiment:
             # live sockets); Transport.close is a no-op for the others
             if bindings.transport is not None:
                 bindings.transport.close()
+            if tracer is not None:
+                from repro.obs import trace
+
+                trace.disable()  # events stay on the tracer object
 
         metrics = dict(history[-1][1])
         metrics.update(_comm_metrics(algo))
+        if tracer is not None:
+            from repro.obs import collect_obs, write_trace
+
+            write_trace(os.path.join(train.trace_dir, "trace.json"),
+                        tracer, meta={"spec_name": spec.name,
+                                      "steps": train.steps})
+            obs = collect_obs(
+                trainer=getattr(algo, "trainer", None),
+                scheduler=getattr(algo, "scheduler", None),
+                tracer=tracer, with_roofline=True)
+            metrics.update(obs.to_metrics())
         return ExperimentResult(
             spec=spec, metrics=metrics, history=history,
             us_per_step=step_seconds / max(train.steps, 1) * 1e6,

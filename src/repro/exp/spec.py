@@ -284,6 +284,7 @@ class TrainSpec:
     checkpoint_every: int = 0  # 0 = final only (when checkpoint_dir is set)
     snapshot_dir: Optional[str] = None
     snapshot_every: int = 0  # fleet snapshots every N steps; 0 = never
+    trace_dir: Optional[str] = None  # repro.obs traces land here; None = off
 
 
 @dataclasses.dataclass(frozen=True)

@@ -68,16 +68,31 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
     from repro.exp.algorithm import Bindings
     from repro.exp.runner import (build_bundles, build_graph,
                                   build_optimizer, materialize_data)
+    from repro.obs import trace
 
+    t_start = time.perf_counter()
     spec = ExperimentSpec.from_json(spec_json).validate()
+    trace_dir = spec.train.trace_dir
+    tracer = None
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)
+        tracer = trace.enable(rank=rank, process_name=f"rank {rank}")
     t_spec = spec.transport
     ports = ({rank: t_spec.base_port + rank}
              if t_spec.base_port is not None else None)
     transport = SocketTransport(spec.num_clients, clients=[rank],
                                 ports=ports, host=t_spec.host,
                                 wait_inflight=False)
+    # rendezvous anchors: the timestamps of this two-way handshake are
+    # what the parent's trace merge uses to map this process's
+    # perf_counter clock onto its own (repro.obs.export)
+    rv0 = time.perf_counter()
+    trace.set_anchor("rendezvous_send")
     conn.send(("port", rank, transport.ports[rank]))
     ports = conn.recv()
+    trace.set_anchor("rendezvous_recv")
+    rendezvous_s = time.perf_counter() - rv0
+    trace.complete("gossip/rendezvous", rv0, rank=rank)
     transport.set_ports(ports)
     graph = build_graph(spec)
     transport.connect_edges(graph)
@@ -107,7 +122,11 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
 
     distill_steps = 0
     last: Dict[str, float] = {}
+    # close the setup span *before* stamping the training start so the
+    # two spans nest instead of overlapping by the emit call's own cost
+    trace.complete("gossip/setup", t_start, rank=rank)
     t0 = time.perf_counter()
+    setup_s = t0 - t_start  # spec parse + transport + data + model build
     for t in range(start_step, spec.train.steps):
         if die_at is not None and t == die_at:
             os._exit(17)  # injected crash: no cleanup, no report
@@ -120,6 +139,8 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
         if throttle_ms:
             time.sleep(throttle_ms / 1000.0)
     wall = time.perf_counter() - t0
+    trace.complete("gossip/train", t0, rank=rank,
+                   steps=spec.train.steps - start_step)
     ev = trainer.evaluate(test_arrays)
 
     # finish barrier: keep draining *through the bus* (so late arrivals
@@ -127,6 +148,7 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
     # a full kernel buffer) until every client has finished sending — only
     # then are the meter books final. On a lossless localhost wire this
     # makes delivered == offered fleet-wide.
+    bw0 = time.perf_counter()
     conn.send(("finished", rank, None))
     while not conn.poll(0.05):
         trainer.bus.deliver(_DRAIN_ALL)
@@ -135,6 +157,18 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
     while time.monotonic() < grace:
         trainer.bus.deliver(_DRAIN_ALL)
         time.sleep(0.02)
+    barrier_wait_s = time.perf_counter() - bw0
+    trace.complete("gossip/finish_barrier", bw0, rank=rank)
+
+    trace_file = None
+    if tracer is not None:
+        from repro.obs import write_trace
+
+        trace_file = os.path.join(trace_dir, f"trace_r{rank}.json")
+        write_trace(trace_file, tracer,
+                    meta={"steps": spec.train.steps,
+                          "start_step": start_step,
+                          "spec_name": spec.name})
 
     meter = trainer.meter
     conn.send(("result", rank, {
@@ -142,6 +176,9 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
         "steps": spec.train.steps,
         "start_step": start_step,
         "wall_seconds": wall,
+        "setup_s": setup_s,
+        "rendezvous_s": rendezvous_s,
+        "barrier_wait_s": barrier_wait_s,
         "distill_steps": distill_steps,
         "final_loss": float(last.get(f"c{rank}/loss", float("nan"))),
         "eval": {k: float(v) for k, v in ev.items()},
@@ -152,6 +189,7 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
         "fresh_teachers": float(sum(meter.gate_fresh.values())),
         "stale_teachers": float(sum(meter.gate_stale.values())),
         "failed_sends": transport.failed_sends,
+        "trace_file": trace_file,
     }))
     conn.recv()  # "done": every result is in; sockets may now close
     transport.close()
@@ -281,8 +319,13 @@ def launch_gossip(spec, timeout: float = 300.0,
             procs.append(p)
         comms = _FleetComms(conns, procs)
 
-        # phase 1: gather every child's listening port, broadcast the map
+        # phase 1: gather every child's listening port, broadcast the map.
+        # The (p_recv, p_send) timestamps around each child's handshake are
+        # the parent-side anchors of the trace merge's clock alignment
+        # (repro.obs.export.rendezvous_offset).
         ports: Dict[int, int] = {}
+        p_recv: Dict[int, float] = {}
+        p_send: Dict[int, float] = {}
         start_deadline = time.monotonic() + start_timeout
         for rank in range(K):
             msg = comms.recv(rank, start_deadline - time.monotonic(),
@@ -291,11 +334,13 @@ def launch_gossip(spec, timeout: float = 300.0,
                 raise RuntimeError(
                     f"gossip client {msg[1]} failed during setup:\n{msg[2]}")
             ports[msg[1]] = msg[2]
-        for conn in conns:
+            p_recv[msg[1]] = time.perf_counter()
+        for rank, conn in enumerate(conns):
             # a child may die between reporting and the broadcast; the
             # next recv sweep surfaces it with its exit status
             with contextlib.suppress(OSError):
                 conn.send(ports)
+                p_send[rank] = time.perf_counter()
 
         # phase 2: finish barrier — every child reports that it has sent
         # its last frame; only then do the meter books stop moving
@@ -319,6 +364,31 @@ def launch_gossip(spec, timeout: float = 300.0,
                 raise RuntimeError(
                     f"gossip client {msg[1]} failed:\n{msg[2]}")
             results[msg[1]] = msg[2]
+
+        # merge the per-rank trace files (each on its own perf_counter
+        # clock) into one parent-clock-aligned Chrome trace; a merge
+        # failure must never fail an otherwise-successful run
+        if spec.train.trace_dir:
+            try:
+                from repro.obs import merge_traces
+
+                rank_paths = {
+                    r: res["trace_file"] for r, res in results.items()
+                    if res.get("trace_file")
+                    and os.path.exists(res["trace_file"])}
+                if rank_paths:
+                    merged = merge_traces(
+                        rank_paths,
+                        os.path.join(spec.train.trace_dir,
+                                     "trace_merged.json"),
+                        parent_anchors={
+                            r: (p_recv[r], p_send[r]) for r in rank_paths
+                            if r in p_recv and r in p_send},
+                        meta={"spec_name": spec.name})
+                    for r in rank_paths:
+                        results[r]["trace_merged"] = merged
+            except Exception:  # noqa: BLE001 — tracing is best-effort
+                traceback.print_exc()
 
         # phase 4: exit barrier — only now may children close their sockets
         for conn in conns:
@@ -355,4 +425,10 @@ def fleet_summary(results: Dict[int, Dict[str, Any]]) -> Dict[str, float]:
         "fresh_teachers_min": min(r["fresh_teachers"] for r in vals),
         "failed_sends": sum(r["failed_sends"] for r in vals),
         "wall_seconds_max": max(r["wall_seconds"] for r in vals),
+        # launcher-overhead breakdown (absent in pre-obs result dicts)
+        "setup_seconds_max": max(r.get("setup_s", 0.0) for r in vals),
+        "rendezvous_seconds_max": max(
+            r.get("rendezvous_s", 0.0) for r in vals),
+        "barrier_wait_seconds_max": max(
+            r.get("barrier_wait_s", 0.0) for r in vals),
     }

@@ -476,3 +476,75 @@ def test_prediction_mode_survives_total_loss():
         m = tr.step(t)
     assert np.isfinite(m["c0/loss"]) and np.isfinite(m["c1/loss"])
     assert tr.meter.total_bytes > 0  # sends were metered even though lost
+
+
+# ---------------------------------------------------------------------------
+# meter books: format_table and snapshot round-trip
+# ---------------------------------------------------------------------------
+
+def _booked_meter() -> CommMeter:
+    """A meter with all three books populated, gate stats included."""
+    m = CommMeter()
+    m.record(0, 0, 1, 100)
+    m.record(0, 1, 0, 80)
+    m.record(2, 0, 1, 100)
+    m.record_delivery(1, 0, 1, 100)
+    m.record_delivery(1, 1, 0, 80)
+    m.record_tombstone(3, 0, 2, 64)  # dead dst: edge exists in no other book
+    m.record_gate(0, fresh=3, stale=1)
+    m.record_gate(1, fresh=2, stale=0)
+    m.rejected_publishes = 1
+    return m
+
+
+def test_format_table_shows_all_three_books():
+    """format_table lists offered, delivered AND tombstoned bytes — the
+    tombstone-only edge (dst died mid-run) must get a row, and the totals
+    line must carry the tombstoned aggregate."""
+    table = _booked_meter().format_table()
+    header, *rows = table.splitlines()
+    assert "tombstoned" in header
+    edge_rows = {r.split()[0] + r.split()[2]: r for r in rows[:-1]}
+    # the tombstone-only edge 0->2 appears, with its bytes in column 3
+    assert "02" in edge_rows
+    assert edge_rows["02"].split()[-1] == "64"
+    # offered/delivered columns survive alongside
+    assert edge_rows["01"].split()[-3:] == ["200", "100", "0"]
+    total = rows[-1]
+    assert "64" in total and "1 tombstoned" in total
+
+
+def test_meter_state_dict_roundtrip_all_books():
+    """state_dict -> load_state_dict reproduces every book (offered,
+    delivered, tombstoned incl. the per-edge book) and the gate stats."""
+    m = _booked_meter()
+    m2 = CommMeter()
+    m2.load_state_dict(m.state_dict())
+    assert m2.total_bytes == m.total_bytes == 280
+    assert m2.delivered_bytes == m.delivered_bytes == 180
+    assert m2.tombstoned_bytes == m.tombstoned_bytes == 64
+    assert m2.tombstoned_messages == 1
+    assert dict(m2.by_edge) == {(0, 1): 200, (1, 0): 80}
+    assert dict(m2.by_edge_delivered) == {(0, 1): 100, (1, 0): 80}
+    assert dict(m2.by_edge_tombstoned) == {(0, 2): 64}
+    assert dict(m2.by_dst_tombstoned) == {2: 64}
+    assert dict(m2.gate_fresh) == {0: 3, 1: 2}
+    assert dict(m2.gate_stale) == {0: 1, 1: 0}
+    assert m2.rejected_publishes == 1
+    assert m2.stale_fraction(0) == 0.25
+    # restored meter keeps accounting: books stay independent
+    m2.record_tombstone(4, 1, 2, 10)
+    assert m2.by_edge_tombstoned[(1, 2)] == 10 and m.tombstoned_bytes == 64
+    assert m2.format_table() != ""
+
+
+def test_meter_load_state_dict_accepts_pre_obs_snapshot():
+    """SNAPSHOT_VERSION=1 fleet snapshots predate by_edge_tombstoned —
+    loading one must not KeyError and must leave the book empty."""
+    m = _booked_meter()
+    state = m.state_dict()
+    del state["by_edge_tombstoned"]
+    m2 = CommMeter()
+    m2.load_state_dict(state)
+    assert dict(m2.by_edge_tombstoned) == {}
+    assert m2.tombstoned_bytes == 64  # scalar counters still restored
