@@ -46,13 +46,16 @@ python scripts/run_experiment.py --preset quick --dry-run >/dev/null || {
 
 # socket-transport smoke: 2 OS processes gossiping over real TCP. The hard
 # `timeout` guarantees a hung socket can never wedge the fast tier; the
-# script itself fails if a client never distilled or delivered > offered.
+# script itself fails if a client never distilled, if delivered > offered,
+# or if any edge delivered less than it offered (localhost loses nothing —
+# the finish barrier must drain every in-flight frame).
 # Tracing is on (repro.obs): the script also asserts the merged Chrome
-# trace parses, every rank contributed distill spans, and the
-# cross-process flow events pair up — artifacts/trace_smoke/ is the CI
-# artifact a red run ships for post-mortem.
+# trace parses, every rank contributed distill spans, the cross-process
+# flow events pair up, and the traced drain_wait + barrier phases stay
+# under 25% of wall — artifacts/trace_smoke/ is the CI artifact a red run
+# ships for post-mortem.
 rm -rf artifacts/trace_smoke
-timeout 60 python scripts/run_gossip_procs.py --smoke \
+timeout 150 python scripts/run_gossip_procs.py --smoke \
     --trace-dir artifacts/trace_smoke >/dev/null || {
     echo "check.sh: 2-process socket gossip smoke failed" >&2
     exit 1

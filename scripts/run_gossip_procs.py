@@ -105,6 +105,15 @@ def main(argv=None) -> int:
             spec, train=dataclasses.replace(spec.train,
                                             trace_dir=args.trace_dir))
 
+    if args.smoke:
+        # cold CI containers would pay the full per-child jit compile
+        # inside the launch timeout; warm the shared persistent cache
+        # in-process first so the children load instead of compiling
+        os.environ.setdefault(
+            "JAX_COMPILATION_CACHE_DIR",
+            os.path.join(tempfile.gettempdir(), "repro_jit_cache"))
+        _warm_jit_cache(spec)
+
     K = spec.num_clients
     print(f"{spec.name}: {K} clients as {K} OS processes over TCP, "
           f"{spec.train.steps} local steps each (timeout {timeout:.0f}s)")
@@ -136,6 +145,23 @@ def main(argv=None) -> int:
     if fleet["delivered_bytes"] > fleet["offered_bytes"]:
         print("FAIL: delivered bytes exceed offered bytes", file=sys.stderr)
         ok = False
+    # localhost loses nothing: every edge must deliver exactly what was
+    # offered (the finish barrier drains all in-flight frames). Skipped
+    # only when the transport *metered* a real loss (failed sends /
+    # tombstoned mail) — then delivered < offered is the truth, not a bug.
+    if fleet["failed_sends"] == 0 and \
+            not any(r.get("tombstoned_bytes", 0) for r in results.values()):
+        from repro.launch.gossip import delivery_gaps
+
+        gaps = delivery_gaps(results)
+        if gaps:
+            print("FAIL: delivered != offered on lossless localhost: "
+                  + "; ".join(f"edge {e}: {d}/{o} B"
+                              for e, (o, d) in sorted(gaps.items())),
+                  file=sys.stderr)
+            ok = False
+        else:
+            print("delivery ok: delivered == offered on every edge")
     if fleet["distill_steps_min"] < 1:
         print("FAIL: a client never distilled from a neighbor",
               file=sys.stderr)
@@ -178,18 +204,35 @@ def check_trace(trace_dir: str, num_ranks: int, fleet) -> bool:
               f"pairs for {delivered:.0f} delivered frames (<90%)",
               file=sys.stderr)
         ok = False
+    # waiting is not working: with compute/comm overlap and the
+    # count-based finish barrier, drain_wait + barrier must stay a small
+    # slice of the fleet's traced wall time (aggregated across ranks so
+    # one rank's scheduling hiccup can't flake CI)
+    from repro.obs.metrics import phase_attribution
+
+    phases = phase_attribution(events)
+    wall = sum(r["wall"] for r in phases.values())
+    waiting = sum(r["drain_wait"] + r["barrier"] for r in phases.values())
+    if wall and waiting > 0.25 * wall:
+        print(f"FAIL: drain_wait + barrier = {waiting:.1f}s of "
+              f"{wall:.1f}s traced wall ({waiting / wall:.0%} > 25%) — "
+              f"the fleet is waiting, not working", file=sys.stderr)
+        ok = False
     if ok:
         print(f"trace ok: {merged} — {len(events)} events, "
               f"{len(distill_ranks)} ranks with distill spans, "
-              f"{cov['flow_pairs']:.0f}/{delivered:.0f} flow pairs")
+              f"{cov['flow_pairs']:.0f}/{delivered:.0f} flow pairs, "
+              f"drain_wait+barrier {waiting:.1f}s/{wall:.1f}s "
+              f"({(waiting / wall if wall else 0.0):.0%})")
     return ok
 
 
 def _warm_jit_cache(spec) -> None:
     """Compile the smoke's train/eval computations once in-process, into
-    the shared persistent jit cache — all six children (two 3-process
-    launches) then load instead of compiling, which is what keeps the
-    whole kill-and-restore smoke inside the CI budget."""
+    the shared persistent jit cache — every child of a subsequent launch
+    (the socket smoke's 2, the churn smoke's two 3-process fleets) then
+    loads instead of compiling, which is what keeps the smokes inside
+    the CI budget."""
     import jax
 
     from repro.exp import Experiment, TransportSpec

@@ -111,6 +111,18 @@ class PredictionBus:
             trace.complete("bus/deliver", t0, step=step, delivered=n)
         return n
 
+    def quiesce(self, step: int) -> int:
+        """Flush the wire into mailboxes: ask the transport to drain any
+        frames still sitting in kernel/parse buffers (transports without a
+        ``quiesce`` hook — loopback, simulated — have nothing buried), then
+        deliver what arrived. Used before fleet snapshots and at the gossip
+        finish barrier so `delivered == offered` holds on a lossless wire.
+        Returns the number of deliveries flushed."""
+        q = getattr(self.transport, "quiesce", None)
+        if q is not None:
+            q()
+        return self.deliver(step)
+
     def mailbox(self, dst: int) -> Dict[int, Mail]:
         return self._mailboxes[dst]
 

@@ -108,11 +108,21 @@ class SocketTransport(Transport):
                  host: str = "127.0.0.1",
                  connect_timeout: float = 20.0,
                  drain_timeout: float = 20.0,
+                 send_hard_timeout: Optional[float] = None,
                  wait_inflight: Optional[bool] = None):
         self.num_clients = int(num_clients)
         self.host = host
         self.connect_timeout = float(connect_timeout)
         self.drain_timeout = float(drain_timeout)
+        # a send gives up (failed_sends) only after this long; each
+        # expired drain_timeout window in between is a metered stall, not
+        # a lost frame. Default: 10 stall windows. The gossip launcher
+        # passes its own hard run timeout so a send is never the first
+        # thing to give up on a slow-but-alive peer (e.g. a rank stalled
+        # in jit compilation for longer than drain_timeout).
+        self.send_hard_timeout = (10.0 * self.drain_timeout
+                                  if send_hard_timeout is None
+                                  else float(send_hard_timeout))
         local = range(num_clients) if clients is None else clients
         self.local_clients = sorted({int(c) for c in local})
         if any(c < 0 or c >= num_clients for c in self.local_clients):
@@ -148,6 +158,11 @@ class SocketTransport(Transport):
         self.recv_bytes = 0
         self.failed_sends = 0  # peer gone mid-run: the message is lost
         self.corrupt_connections = 0  # non-protocol bytes: conn dropped
+        self.drain_stalls = 0  # drain_timeout windows a send sat blocked
+        self.undrained_bytes = 0  # partial-frame bytes left at quiesce
+        # frames fully written per destination — what the gossip finish
+        # barrier's expected-inbound counts are built from
+        self.sent_to: Dict[int, int] = defaultdict(int)
 
     # -- wiring ----------------------------------------------------------
 
@@ -239,6 +254,7 @@ class SocketTransport(Transport):
             return
         self.sent_count += 1
         self.sent_bytes += len(payload)
+        self.sent_to[dst] += 1
         if self.wait_inflight and dst in self._listeners:
             self._outstanding[dst] += 1
         # flow start then the retro-emitted span: the "s" event's
@@ -251,25 +267,54 @@ class SocketTransport(Transport):
 
     def _send_frame(self, conn: socket.socket, dst: int,
                     frame: bytes) -> None:
-        """``sendall``, with a local-drain escape: when the destination is
-        hosted by this same instance (the single-threaded in-process
-        mode), draining dst's receive path is interleaved with the write
-        so a frame larger than the kernel's socket buffers cannot
-        deadlock the one thread that does both ends."""
-        if dst not in self._listeners:
-            conn.sendall(frame)
-            return
+        """``sendall`` in short slices, draining our own hosted listeners
+        between them.
+
+        Two failure modes this neutralizes:
+
+        * in-process (dst hosted here): a frame larger than the kernel's
+          socket buffers cannot deadlock the one thread doing both ends —
+          draining dst's receive path is interleaved with the write;
+        * multi-process: a receiver that stops reading for a while (a
+          rank stalled in jit compilation, a straggler) must not cost us
+          the frame *or* deadlock a ring of mutual senders. We keep
+          retrying — draining our own inbound edges so peers blocked on
+          *us* make progress — and each expired ``drain_timeout`` window
+          without a written byte is metered as a ``drain_stalls`` tick
+          with exponential backoff, never an error. Only
+          ``send_hard_timeout`` (the launcher's hard-timeout scale) makes
+          the send give up, and even that surfaces as a failed send, not
+          a fleet-killing raise."""
         view = memoryview(frame)
-        deadline = time.monotonic() + self.drain_timeout
+        hard_deadline = time.monotonic() + self.send_hard_timeout
+        stall_deadline = time.monotonic() + self.drain_timeout
+        backoff = 0.01
         conn.settimeout(0.05)
         try:
             while view:
                 try:
-                    view = view[conn.send(view):]
+                    sent = conn.send(view)
                 except socket.timeout:
-                    self._drain(dst)
-                    if time.monotonic() >= deadline:
-                        raise
+                    sent = 0
+                if sent:
+                    view = view[sent:]
+                    stall_deadline = time.monotonic() + self.drain_timeout
+                    backoff = 0.01
+                    continue
+                for hosted in self._listeners:
+                    self._drain(hosted)
+                now = time.monotonic()
+                if now >= hard_deadline:
+                    raise socket.timeout(
+                        f"frame to client {dst} unsent after "
+                        f"{self.send_hard_timeout:.0f}s (hard timeout)")
+                if now >= stall_deadline:
+                    self.drain_stalls += 1
+                    trace.instant("socket/drain_stall", dst=dst,
+                                  stalls=self.drain_stalls)
+                    time.sleep(backoff)
+                    backoff = min(backoff * 2.0, 1.0)
+                    stall_deadline = time.monotonic() + self.drain_timeout
         finally:
             with contextlib.suppress(OSError):
                 conn.settimeout(self.connect_timeout)
@@ -369,6 +414,73 @@ class SocketTransport(Transport):
             if self.wait_inflight and self._outstanding[dst] > 0:
                 self._outstanding[dst] -= 1
         return True
+
+    # -- quiesce + snapshot (repro.fleet) --------------------------------
+
+    def quiesce(self, settle: float = 0.05, timeout: float = 5.0) -> int:
+        """Pull everything the kernel has buffered into the parsed
+        hold-back queues: drain every hosted listener until no new bytes
+        arrive for ``settle`` seconds (bounded by ``timeout``). After a
+        quiesce the only in-flight state a snapshot cannot capture is a
+        frame a remote sender has not finished writing; bytes of such
+        partial frames left in per-connection buffers are metered in
+        ``undrained_bytes``. Returns that leftover byte count."""
+        t0 = trace.now()
+        deadline = time.monotonic() + timeout
+        quiet_at = time.monotonic() + settle
+        while time.monotonic() < min(deadline, quiet_at):
+            before = self.recv_bytes
+            for dst in self._listeners:
+                self._drain(dst)
+            if self.recv_bytes != before:
+                quiet_at = time.monotonic() + settle
+            else:
+                time.sleep(0.005)
+        leftover = sum(len(buf) for buf in self._buffers.values())
+        self.undrained_bytes = leftover
+        trace.complete("socket/quiesce", t0, leftover=leftover)
+        return leftover
+
+    def state_dict(self) -> Dict:
+        """The capturable in-flight state: parsed frames held back by the
+        no-delivery-before-tick rule, plus the wire counters. Call
+        ``quiesce()`` first so kernel-buffered frames are parsed into the
+        queues instead of becoming documented losses (`repro.fleet`
+        does — see `snapshot.save_fleet`)."""
+        return {
+            "queues": {int(dst): [(int(d.src), bytes(d.payload),
+                                   int(d.sent_step))
+                                  for d in q]
+                       for dst, q in self._queues.items() if q},
+            "counters": {
+                "sent_count": int(self.sent_count),
+                "recv_count": int(self.recv_count),
+                "sent_bytes": int(self.sent_bytes),
+                "recv_bytes": int(self.recv_bytes),
+                "failed_sends": int(self.failed_sends),
+                "drain_stalls": int(self.drain_stalls),
+                "undrained_bytes": int(self.undrained_bytes),
+                "sent_to": {int(d): int(n)
+                            for d, n in self.sent_to.items()},
+            },
+        }
+
+    def load_state_dict(self, state: Dict) -> None:
+        for dst, items in state.get("queues", {}).items():
+            self._queues[int(dst)].extend(
+                Delivery(int(src), int(dst), bytes(payload),
+                         int(sent_step), -1)
+                for src, payload, sent_step in items)
+        c = state.get("counters", {})
+        self.sent_count = int(c.get("sent_count", 0))
+        self.recv_count = int(c.get("recv_count", 0))
+        self.sent_bytes = int(c.get("sent_bytes", 0))
+        self.recv_bytes = int(c.get("recv_bytes", 0))
+        self.failed_sends = int(c.get("failed_sends", 0))
+        self.drain_stalls = int(c.get("drain_stalls", 0))
+        self.undrained_bytes = int(c.get("undrained_bytes", 0))
+        for d, n in c.get("sent_to", {}).items():
+            self.sent_to[int(d)] = int(n)
 
     # -- lifecycle -------------------------------------------------------
 

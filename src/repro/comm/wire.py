@@ -207,22 +207,39 @@ class PredictionMessage:
 
 
 def _serialize(msg: PredictionMessage, codec_id: int) -> bytes:
+    """Write the message into one preallocated buffer (byte-identical to
+    the historical parts-list + join layout, minus its per-array
+    ``tobytes`` copies): headers via ``pack_into``, array payloads copied
+    once, dtype-converted in place, through a ``frombuffer`` view."""
     t0 = trace.now()
-    parts = [_MAGIC, struct.pack("<BBH", _VERSION, codec_id,
-                                 len(msg.arrays))]
-    parts.append(struct.pack("<qqqq", msg.src, msg.sent_step, msg.t0,
-                             msg.num_classes))
+    pending = []
+    total = 4 + 4 + 32  # magic + <BBH> + <qqqq>
     for name, arr in msg.arrays.items():
         arr = np.ascontiguousarray(arr)
-        dt = arr.dtype.newbyteorder("<")
-        code = _DTYPE_CODES[np.dtype(dt)]
+        dt = np.dtype(arr.dtype.newbyteorder("<"))
         nm = name.encode()
-        parts.append(struct.pack("<B", len(nm)))
-        parts.append(nm)
-        parts.append(struct.pack("<BB", code, arr.ndim))
-        parts.append(struct.pack(f"<{arr.ndim}q", *arr.shape))
-        parts.append(arr.astype(dt, copy=False).tobytes())
-    payload = b"".join(parts)
+        total += 1 + len(nm) + 2 + 8 * arr.ndim + arr.size * dt.itemsize
+        pending.append((nm, arr, dt))
+    buf = bytearray(total)
+    buf[0:4] = _MAGIC
+    struct.pack_into("<BBH", buf, 4, _VERSION, codec_id, len(pending))
+    struct.pack_into("<qqqq", buf, 8, msg.src, msg.sent_step, msg.t0,
+                     msg.num_classes)
+    off = 40
+    for nm, arr, dt in pending:
+        struct.pack_into("<B", buf, off, len(nm))
+        off += 1
+        buf[off:off + len(nm)] = nm
+        off += len(nm)
+        struct.pack_into("<BB", buf, off, _DTYPE_CODES[dt], arr.ndim)
+        off += 2
+        struct.pack_into(f"<{arr.ndim}q", buf, off, *arr.shape)
+        off += 8 * arr.ndim
+        nbytes = arr.size * dt.itemsize
+        np.frombuffer(buf, dtype=np.uint8, count=nbytes, offset=off)[:] = \
+            arr.astype(dt, copy=False).reshape(-1).view(np.uint8)
+        off += nbytes
+    payload = bytes(buf)
     trace.complete("wire/serialize", t0, src=msg.src,
                    nbytes=len(payload))
     return payload
@@ -395,6 +412,8 @@ class TopKCodec(Codec):
         }
 
     def encode(self, src, sent_step, t0, sample_ids, outs) -> bytes:
+        if isinstance(outs.get("logits"), jax.Array):
+            return self._encode_device(src, sent_step, t0, sample_ids, outs)
         arrays: Dict[str, np.ndarray] = {
             "sample_ids": np.asarray(sample_ids, np.uint64)}
         heads = _stack_heads(outs)
@@ -402,6 +421,42 @@ class TopKCodec(Codec):
         arrays.update(self._pack(heads))
         self._encode_emb(arrays, outs)
         C = int(outs["logits"].shape[-1])
+        return _serialize(PredictionMessage(src, sent_step, t0, C, arrays),
+                          self.codec_id)
+
+    def _encode_device(self, src, sent_step, t0, sample_ids, outs) -> bytes:
+        """Fused encode for device-resident outputs: one jitted graph
+        (`kernels.ops.topk_wire_frame`) does head stacking, top-k, wire
+        casts, int8 embedding quantization and the finiteness checks
+        entirely on device — byte-identical payloads to the numpy path,
+        but only the small wire-dtype arrays ever reach the host."""
+        from repro.kernels import ops
+
+        main = outs["logits"].astype(jnp.float32)[:, None]
+        heads = jnp.concatenate(
+            [main, outs["aux_logits"].astype(jnp.float32)], axis=1)
+        C = int(heads.shape[-1])
+        k = min(self.k, C)
+        emb = outs.get("embedding") if self.emb_encoding != "none" else None
+        dev, finite = ops.topk_wire_frame(
+            heads, emb, k,
+            val_dtype="float16" if self.val_dtype.itemsize == 2
+            else "float32",
+            idx_dtype="uint16" if C <= 0xFFFF else "uint32",
+            emb_encoding=self.emb_encoding, use_pallas=self.use_pallas)
+        if not bool(finite):
+            raise NonFiniteError(
+                "non-finite values in prediction outputs (or their f16 "
+                "wire cast): refusing to encode")
+        # host copies of wire-dtype arrays only; insertion order matches
+        # the numpy path (sample_ids, vals, idx, lse, emb_q, emb_scale)
+        # so payloads stay byte-identical
+        arrays: Dict[str, np.ndarray] = {
+            "sample_ids": np.asarray(sample_ids, np.uint64)}
+        for name in ("vals", "idx", "lse", "emb_q", "emb_scale",
+                     "embedding"):
+            if name in dev:
+                arrays[name] = np.asarray(dev[name])
         return _serialize(PredictionMessage(src, sent_step, t0, C, arrays),
                           self.codec_id)
 

@@ -500,8 +500,11 @@ class DecentralizedTrainer:
             t_fwd = trace.now()
             apply_fn = self._teacher_apply(c.bundle)
             frames = [apply_fn(c.params, b) for b in batches]
-            outs = {key: np.stack([np.asarray(f[key], np.float32)
-                                   for f in frames])
+            # stacked on device: the forward stays fully async here, and a
+            # codec with a device fast path (TopKCodec) packs wire arrays
+            # in-graph — only wire-dtype bytes ever reach the host
+            outs = {key: jnp.stack([f[key] for f in frames])
+                    .astype(jnp.float32)
                     for key in ("embedding", "logits", "aux_logits")}
             trace.complete("publish/forward", t_fwd, client=c.client_id,
                            step=step, window=W)
@@ -574,12 +577,22 @@ class DecentralizedTrainer:
     # -- training loop -----------------------------------------------------
 
     def step_client(self, c: ClientState, public_batch, t: int,
-                    opt_step: Optional[int] = None) -> Dict[str, float]:
+                    opt_step: Optional[int] = None, defer: bool = False):
         """One local optimization step for one client at (wall) step t.
 
         ``opt_step`` is the client's optimizer/LR-schedule step — its
         *local* step count under the async scheduler; defaults to t (the
-        synchronous loop, where wall and local clocks coincide)."""
+        synchronous loop, where wall and local clocks coincide).
+
+        ``defer=False`` (the default) returns the metrics dict directly.
+        ``defer=True`` returns a zero-arg *resolve* callable instead: the
+        jitted update has been dispatched to the device, but the blocking
+        host conversions (``float`` on the metrics) happen only when the
+        callable runs. This is the compute/comm overlap hook — the caller
+        runs the communication phase (encode, publish, socket drain)
+        while the device is still chewing on the update, then resolves.
+        Numerics, rng draws and their order are identical either way;
+        only where the host blocks moves."""
         opt_step = t if opt_step is None else opt_step
         t_step = trace.now()
         if self.exchange != "params":
@@ -606,29 +619,44 @@ class DecentralizedTrainer:
             c.params, c.opt_state, metrics = update(
                 c.params, c.opt_state, private_batch, public_batch,
                 teachers, step_arg, rng)
-        # the float() conversions below block on the device computation,
-        # so the retro-emitted update span measures real compute time
-        out = {f"c{c.client_id}/{k}": float(v) for k, v in metrics.items()}
-        trace.complete(
-            "runtime/supervised" if teachers is None else "runtime/distill",
-            t_up, client=c.client_id, step=t, bundle=c.bundle.name)
-        out[f"c{c.client_id}/stale_skipped"] = float(skipped)
-        out[f"c{c.client_id}/distill_active"] = float(teachers is not None)
-        if self.exchange != "params":
-            # -1.0 = empty mailbox (bus.EMPTY_STALENESS), not "fresh"
-            out[f"c{c.client_id}/mail_staleness"] = \
-                self.bus.staleness(c.client_id, t)
-        trace.complete("runtime/step", t_step, client=c.client_id, step=t,
-                       distill=teachers is not None)
-        return out
+
+        def resolve() -> Dict[str, float]:
+            # the float() conversions block on the device computation, so
+            # the retro-emitted update span covers dispatch → completion;
+            # overlapped comm spans emitted in between nest inside it and
+            # the tracer's self-time sweep subtracts them
+            out = {f"c{c.client_id}/{k}": float(v)
+                   for k, v in metrics.items()}
+            trace.complete(
+                "runtime/supervised" if teachers is None
+                else "runtime/distill",
+                t_up, client=c.client_id, step=t, bundle=c.bundle.name)
+            out[f"c{c.client_id}/stale_skipped"] = float(skipped)
+            out[f"c{c.client_id}/distill_active"] = float(
+                teachers is not None)
+            if self.exchange != "params":
+                # -1.0 = empty mailbox (bus.EMPTY_STALENESS), not "fresh"
+                out[f"c{c.client_id}/mail_staleness"] = \
+                    self.bus.staleness(c.client_id, t)
+            trace.complete("runtime/step", t_step, client=c.client_id,
+                           step=t, distill=teachers is not None)
+            return out
+
+        return resolve if defer else resolve()
 
     def step(self, t: int) -> Dict[str, float]:
         public_np = self.public.sample(t)
         public_batch = {k: jnp.asarray(v) for k, v in public_np.items()}
-        all_metrics: Dict[str, float] = {}
-        for c in self.local:
-            all_metrics.update(self.step_client(c, public_batch, t))
+        # dispatch every client's update, run the communication phase
+        # while the device computes, then block on the metrics. Resolved
+        # LIFO so the retro-emitted per-client trace spans nest instead
+        # of overlapping (the tracer assumes single-threaded nesting).
+        pending = [self.step_client(c, public_batch, t, defer=True)
+                   for c in self.local]
         self._maybe_update_pools(t + 1)
+        all_metrics: Dict[str, float] = {}
+        for resolve in reversed(pending):
+            all_metrics.update(resolve())
         return all_metrics
 
     def train(self, eval_arrays: Optional[Dict[str, np.ndarray]] = None,

@@ -145,18 +145,26 @@ class AsyncScheduler:
         due = [c for c in tr.local if self.due(c.client_id, wall)]
         metrics: Dict[str, float] = {}
         with trace.span("sched/tick", wall=wall, due=len(due)):
+            # dispatch every due client's update first (defer=True), run
+            # the communication phase while the device computes, then
+            # block on the metrics — LIFO so retro-emitted spans nest
+            pending = []
             if due:
                 public_np = tr.public.sample(wall)
                 public_batch = {k: jnp.asarray(v)
                                 for k, v in public_np.items()}
                 for c in due:
                     cid = c.client_id
-                    m = tr.step_client(c, public_batch, wall,
-                                       opt_step=self.local_steps[cid])
+                    resolve = tr.step_client(
+                        c, public_batch, wall,
+                        opt_step=self.local_steps[cid], defer=True)
                     self.local_steps[cid] += 1
-                    m[f"c{cid}/local_step"] = float(self.local_steps[cid])
-                    metrics.update(m)
+                    pending.append((cid, resolve))
             self._comm_phase(wall + 1)
+            for cid, resolve in reversed(pending):
+                m = resolve()
+                m[f"c{cid}/local_step"] = float(self.local_steps[cid])
+                metrics.update(m)
         self.wall = wall + 1
         trace.counter("sched/wall", self.wall)
         return metrics

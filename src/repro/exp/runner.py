@@ -298,6 +298,12 @@ def _comm_metrics(algo: Algorithm) -> Dict[str, float]:
            "comm/delivered_bytes": float(meter.delivered_bytes),
            "comm/rejected_publishes": float(meter.rejected_publishes),
            "comm/tombstoned_bytes": float(meter.tombstoned_bytes)}
+    # transport-level backpressure (SocketTransport): retried sends that
+    # stalled past drain_timeout without being dropped
+    transport = getattr(getattr(algo, "trainer", None), "bus", None)
+    transport = getattr(transport, "transport", None)
+    if hasattr(transport, "drain_stalls"):
+        out["comm/drain_stalls"] = float(transport.drain_stalls)
     for cid, g in meter.gate_summary().items():
         out[f"c{cid}/comm/fresh_teachers"] = float(g["fresh"])
         out[f"c{cid}/comm/stale_teachers"] = float(g["stale"])

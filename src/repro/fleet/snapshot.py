@@ -35,10 +35,15 @@ Files are pickle-free: nested state is JSON with numpy arrays and raw
 `_load_state`). Every file carries ``SNAPSHOT_VERSION``; restore refuses
 a version it does not understand rather than misreading it.
 
-Real-socket caveat: a `SocketTransport`'s in-flight frames live in
-kernel buffers and are not capturable (``state_dict() is None``); they
-are lost on restore, and the staleness machinery absorbs the gap — the
-same contract as a dropped message.
+Real-socket fleets quiesce before capture: `save_fleet` calls the
+transport's ``quiesce()`` (when it has one) to drain kernel-buffered
+frames into the parsed hold-back queues, which ``state_dict()`` then
+snapshots alongside the wire counters — so a socket fleet snapshots with
+empty in-flight state instead of documented losses. The only thing a
+snapshot still cannot capture is a frame a remote peer had not finished
+*writing* at the quiesce; its partial bytes are metered in the
+transport's ``undrained_bytes`` counter and the staleness machinery
+absorbs the gap — the same contract as a dropped message.
 """
 from __future__ import annotations
 
@@ -355,7 +360,15 @@ def save_fleet(directory: str, step: int, trainer: Any,
         })
         transport_state = None
         if trainer.exchange != "params":
-            transport_state = trainer.bus.transport.state_dict()
+            transport = trainer.bus.transport
+            if hasattr(transport, "quiesce"):
+                # socket transports: pull kernel-buffered frames into the
+                # parsed hold-back queues so the state_dict below captures
+                # them instead of losing them with the process; whatever
+                # still can't be drained (a peer's half-written frame) is
+                # metered in the transport's undrained_bytes counter
+                transport.quiesce()
+            transport_state = transport.state_dict()
         proc["transport"] = transport_state
     else:
         params, _, _ = _list_slots(trainer)

@@ -75,6 +75,70 @@ def topk_wire(logits, k: int = 32, use_pallas: bool | None = None):
     return REF.topk_wire_ref(logits, k)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "val_dtype", "idx_dtype", "emb_int8", "use",
+                     "interpret"))
+def _topk_wire_frame_jit(heads, emb, d127, *, k: int, val_dtype, idx_dtype,
+                         emb_int8: bool, use: bool, interpret: bool):
+    W, H, B, C = heads.shape
+    flat = heads.astype(jnp.float32).reshape(W * H * B, C)
+    if use:
+        from repro.kernels.topk_wire import topk_wire as _kernel
+
+        vals, idx, lse = _kernel(flat, k, interpret=interpret)
+    else:
+        vals, idx, lse = REF.topk_wire_ref(flat, k)
+    wire_vals = vals.reshape(W, H, B, k).astype(val_dtype)
+    arrays = {
+        "vals": wire_vals,
+        "idx": idx.reshape(W, H, B, k).astype(idx_dtype),
+        "lse": lse.reshape(W, H, B).astype(jnp.float32),
+    }
+    # finiteness of the inputs AND the wire cast (a finite f32 logit
+    # beyond ±65504 overflows to inf in f16) — the host raises
+    # NonFiniteError when this flag comes back false
+    finite = jnp.all(jnp.isfinite(heads)) & \
+        jnp.all(jnp.isfinite(wire_vals.astype(jnp.float32)))
+    if emb is not None:
+        emb32 = emb.astype(jnp.float32)
+        finite = finite & jnp.all(jnp.isfinite(emb32))
+        if emb_int8:
+            # bit-for-bit twin of wire.quantize_emb_int8: np.rint and
+            # jnp.round both round half-to-even, and dividing by the
+            # *traced* d127 (not the literal 127.0) forces XLA to emit a
+            # true IEEE division — a constant divisor gets rewritten to
+            # multiply-by-reciprocal, 1 ulp off numpy's quotient
+            amax = jnp.max(jnp.abs(emb32), axis=-1)
+            scale = (amax / d127 + 1e-30).astype(jnp.float32)
+            arrays["emb_q"] = jnp.clip(
+                jnp.round(emb32 / scale[..., None]),
+                -127, 127).astype(jnp.int8)
+            arrays["emb_scale"] = scale
+        else:
+            arrays["embedding"] = emb32
+    return arrays, finite
+
+
+def topk_wire_frame(heads, emb, k: int, *, val_dtype: str = "float16",
+                    idx_dtype: str = "uint16", emb_encoding: str = "int8",
+                    use_pallas: bool | None = None):
+    """Fused wire-frame encode: one jitted graph from stacked head logits
+    (W, H, B, C) straight to wire-dtype arrays — top-k select, f16 value
+    cast, u16/u32 index narrowing, f32 logsumexp, int8 embedding
+    quantization and the codec's finiteness checks all on device. Returns
+    (arrays, finite_flag); only the small wire-dtype arrays ever cross to
+    the host, replacing the dense f32 round-trip through the python
+    serializer hop. ``emb=None`` skips the embedding lane."""
+    use = _default_use_pallas() if use_pallas is None else use_pallas
+    return _topk_wire_frame_jit(
+        heads, emb, jnp.float32(127.0), k=k,
+        val_dtype=jnp.float16 if val_dtype == "float16" else jnp.float32,
+        idx_dtype=jnp.uint16 if idx_dtype == "uint16" else jnp.uint32,
+        emb_int8=(emb_encoding == "int8"), use=use,
+        interpret=_interpret())
+
+
 def emb_dist(student_emb, teacher_emb, use_pallas: bool | None = None):
     use = _default_use_pallas() if use_pallas is None else use_pallas
     if use:

@@ -52,23 +52,35 @@ from __future__ import annotations
 import contextlib
 import multiprocessing as mp
 import os
+import tempfile
 import time
 import traceback
 from collections import defaultdict
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 _DRAIN_ALL = 1 << 60  # poll step high enough to release every held frame
 
 
 def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
-               die_at: Optional[int] = None, resume: bool = False) -> None:
+               die_at: Optional[int] = None, resume: bool = False,
+               hard_timeout: float = 300.0) -> None:
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax
+
     from repro.comm import SocketTransport
     from repro.exp import ExperimentSpec, make_algorithm
     from repro.exp.algorithm import Bindings
     from repro.exp.runner import (build_bundles, build_graph,
                                   build_optimizer, materialize_data)
     from repro.obs import trace
+
+    # every rank compiles the same computations; one persistent cache
+    # (seeded by the launcher, or pre-warmed by an in-process run — see
+    # `launch_gossip`) turns K compilations into one compile + K-1 loads
+    cache_dir = os.environ.get("JAX_COMPILATION_CACHE_DIR")
+    if cache_dir:
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
 
     t_start = time.perf_counter()
     spec = ExperimentSpec.from_json(spec_json).validate()
@@ -82,6 +94,7 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
              if t_spec.base_port is not None else None)
     transport = SocketTransport(spec.num_clients, clients=[rank],
                                 ports=ports, host=t_spec.host,
+                                send_hard_timeout=hard_timeout,
                                 wait_inflight=False)
     # rendezvous anchors: the timestamps of this two-way handshake are
     # what the parent's trace merge uses to map this process's
@@ -145,20 +158,38 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
 
     # finish barrier: keep draining *through the bus* (so late arrivals
     # from slower peers are metered as delivered and never back up against
-    # a full kernel buffer) until every client has finished sending — only
-    # then are the meter books final. On a lossless localhost wire this
-    # makes delivered == offered fleet-wide.
+    # a full kernel buffer) until every client has finished sending. The
+    # barrier is *count-based*: each rank reports how many frames it
+    # successfully wrote per destination, the launcher aggregates them,
+    # and every rank then drains until its transport has parsed exactly
+    # that many inbound frames — a deterministic quiesce, not a timed
+    # grace window. Frames held back by poll's no-delivery-before-tick
+    # rule are released by the _DRAIN_ALL delivery, so on a lossless
+    # localhost wire the fleet's delivered book equals its offered book
+    # (asserted per edge by `launch_gossip`).
     bw0 = time.perf_counter()
-    conn.send(("finished", rank, None))
+    conn.send(("finished", rank,
+               {"sent_to": {int(d): int(n)
+                            for d, n in transport.sent_to.items()}}))
     while not conn.poll(0.05):
         trainer.bus.deliver(_DRAIN_ALL)
-    conn.recv()  # "all_finished"
-    grace = time.monotonic() + 0.5
-    while time.monotonic() < grace:
-        trainer.bus.deliver(_DRAIN_ALL)
-        time.sleep(0.02)
+    expected_inbound = int(conn.recv()[1])  # ("all_finished", n_frames)
+    if not resume:
+        drain_deadline = time.monotonic() + transport.drain_timeout
+        while transport.recv_count < expected_inbound:
+            if time.monotonic() >= drain_deadline:
+                break  # the launcher's per-edge check will name the gap
+            trainer.bus.deliver(_DRAIN_ALL)
+            time.sleep(0.002)
+    # resumed fleets can't reconcile counts (per-rank snapshot counters
+    # are uncoordinated cuts), so they rely on the settle-based quiesce
+    # alone; fresh fleets use it to meter partial-frame leftovers
+    transport.quiesce(settle=0.05, timeout=2.0)
+    trainer.bus.deliver(_DRAIN_ALL)  # flush the last parsed frames
     barrier_wait_s = time.perf_counter() - bw0
-    trace.complete("gossip/finish_barrier", bw0, rank=rank)
+    trace.complete("gossip/finish_barrier", bw0, rank=rank,
+                   expected_inbound=expected_inbound,
+                   received=transport.recv_count)
 
     trace_file = None
     if tracer is not None:
@@ -186,9 +217,21 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
         "delivered_bytes": float(meter.delivered_bytes),
         "offered_messages": float(meter.num_messages),
         "delivered_messages": float(meter.delivered_messages),
+        # this rank's per-edge books: edges it *sent on* (offered, booked
+        # at publish) and edges it *received on* (delivered, booked at
+        # deliver) — the launcher joins them into the fleet-wide
+        # delivered == offered assertion
+        "offered_by_edge": {f"{s}-{d}": int(b)
+                            for (s, d), b in meter.by_edge.items()},
+        "delivered_by_edge": {
+            f"{s}-{d}": int(b)
+            for (s, d), b in meter.by_edge_delivered.items()},
+        "tombstoned_bytes": float(meter.tombstoned_bytes),
         "fresh_teachers": float(sum(meter.gate_fresh.values())),
         "stale_teachers": float(sum(meter.gate_stale.values())),
         "failed_sends": transport.failed_sends,
+        "drain_stalls": transport.drain_stalls,
+        "undrained_bytes": transport.undrained_bytes,
         "trace_file": trace_file,
     }))
     conn.recv()  # "done": every result is in; sockets may now close
@@ -197,9 +240,11 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
 
 def _child_main(spec_json: str, rank: int, conn,
                 throttle_ms: float = 0.0, die_at: Optional[int] = None,
-                resume: bool = False) -> None:
+                resume: bool = False,
+                hard_timeout: float = 300.0) -> None:
     try:
-        _child_run(spec_json, rank, conn, throttle_ms, die_at, resume)
+        _child_run(spec_json, rank, conn, throttle_ms, die_at, resume,
+                   hard_timeout)
     except Exception:
         with contextlib.suppress(Exception):
             conn.send(("error", rank, traceback.format_exc()))
@@ -274,6 +319,7 @@ def launch_gossip(spec, timeout: float = 300.0,
                   throttle_ms: Optional[Dict[int, float]] = None,
                   die_at: Optional[Dict[int, int]] = None,
                   resume: bool = False,
+                  check_delivery: bool = True,
                   ) -> Dict[int, Dict[str, Any]]:
     """Run ``spec`` as one OS process per client; returns per-rank results.
 
@@ -286,7 +332,14 @@ def launch_gossip(spec, timeout: float = 300.0,
     at their given local step — the failure-injection hook behind the
     kill-and-restore smoke. ``resume=True`` restarts every rank from its
     latest fleet snapshot under ``spec.train.snapshot_dir`` (ranks with
-    no snapshot start fresh)."""
+    no snapshot start fresh).
+
+    ``check_delivery`` (default on) asserts the lossless-localhost
+    invariant after the finish barrier: every edge's delivered bytes
+    equal its offered bytes, joined across the per-rank meter books.
+    The check skips runs where delivered < offered is *expected* —
+    resumed fleets (per-rank snapshots are uncoordinated cuts) and runs
+    with failed sends or tombstoned mail (a peer actually went away)."""
     spec = spec.validate()
     if spec.transport.kind != "socket":
         raise ValueError(
@@ -304,6 +357,13 @@ def launch_gossip(spec, timeout: float = 300.0,
     K = spec.num_clients
     ctx = mp.get_context("spawn")
     spec_json = spec.to_json()
+    # one persistent compilation cache for the whole fleet (children
+    # inherit the env through spawn): rank 0 compiles, everyone else
+    # loads — and later launches (or an in-process warm run, see
+    # benchmarks/socket_gossip.py) skip compilation entirely
+    os.environ.setdefault(
+        "JAX_COMPILATION_CACHE_DIR",
+        os.path.join(tempfile.gettempdir(), "repro_jit_cache"))
     conns, procs = [], []
     try:
         for rank in range(K):
@@ -311,7 +371,7 @@ def launch_gossip(spec, timeout: float = 300.0,
             p = ctx.Process(target=_child_main,
                             args=(spec_json, rank, child_conn,
                                   throttle.get(rank, 0.0),
-                                  crash.get(rank), resume),
+                                  crash.get(rank), resume, timeout),
                             daemon=True)
             p.start()
             child_conn.close()
@@ -343,17 +403,24 @@ def launch_gossip(spec, timeout: float = 300.0,
                 p_send[rank] = time.perf_counter()
 
         # phase 2: finish barrier — every child reports that it has sent
-        # its last frame; only then do the meter books stop moving
+        # its last frame along with its per-destination frame counts; the
+        # counts are aggregated into each rank's expected inbound total
+        # and broadcast back, so every rank drains until it has *all* of
+        # its mail (count-based quiesce) instead of hoping a grace window
+        # was long enough
         deadline = time.monotonic() + timeout
+        expected_inbound: Dict[int, int] = defaultdict(int)
         for rank in range(K):
             msg = comms.recv(rank, deadline - time.monotonic(), "training")
             if msg[0] == "error":
                 raise RuntimeError(
                     f"gossip client {msg[1]} failed:\n{msg[2]}")
             assert msg[0] == "finished", msg
-        for conn in conns:
+            for dst, n in ((msg[2] or {}).get("sent_to") or {}).items():
+                expected_inbound[int(dst)] += int(n)
+        for rank, conn in enumerate(conns):
             with contextlib.suppress(OSError):
-                conn.send("all_finished")
+                conn.send(("all_finished", expected_inbound.get(rank, 0)))
 
         # phase 3: collect results under the hard run deadline
         results: Dict[int, Dict[str, Any]] = {}
@@ -390,6 +457,21 @@ def launch_gossip(spec, timeout: float = 300.0,
             except Exception:  # noqa: BLE001 — tracing is best-effort
                 traceback.print_exc()
 
+        # the lossless-localhost invariant, per edge: bytes offered by the
+        # sender rank == bytes delivered at the receiver rank. Skipped
+        # when a gap is *expected*: resumed fleets (uncoordinated
+        # snapshot cuts) and runs with failed sends / tombstoned mail.
+        lossy = any(r.get("failed_sends", 0) or r.get("tombstoned_bytes", 0)
+                    for r in results.values())
+        if check_delivery and not resume and not lossy:
+            gaps = delivery_gaps(results)
+            if gaps:
+                raise RuntimeError(
+                    "delivered != offered on a lossless localhost wire: "
+                    + "; ".join(
+                        f"edge {e}: offered {o} B, delivered {d} B"
+                        for e, (o, d) in sorted(gaps.items())))
+
         # phase 4: exit barrier — only now may children close their sockets
         for conn in conns:
             with contextlib.suppress(OSError):
@@ -410,6 +492,25 @@ def launch_gossip(spec, timeout: float = 300.0,
             conn.close()
 
 
+def delivery_gaps(results: Dict[int, Dict[str, Any]]
+                  ) -> Dict[str, Tuple[int, int]]:
+    """Join the per-rank meter books into fleet-wide per-edge totals and
+    return the edges where delivered != offered as
+    ``{"src-dst": (offered_bytes, delivered_bytes)}`` (empty = the
+    lossless invariant holds). An edge's offered bytes are booked only by
+    its sender rank, its delivered bytes only by its receiver rank."""
+    offered: Dict[str, int] = defaultdict(int)
+    delivered: Dict[str, int] = defaultdict(int)
+    for r in results.values():
+        for edge, b in (r.get("offered_by_edge") or {}).items():
+            offered[edge] += int(b)
+        for edge, b in (r.get("delivered_by_edge") or {}).items():
+            delivered[edge] += int(b)
+    return {e: (offered[e], delivered[e])
+            for e in set(offered) | set(delivered)
+            if offered[e] != delivered[e]}
+
+
 def fleet_summary(results: Dict[int, Dict[str, Any]]) -> Dict[str, float]:
     """Aggregate per-rank reports into the fleet-level view the
     acceptance criteria (and the smoke benchmark) read."""
@@ -424,6 +525,9 @@ def fleet_summary(results: Dict[int, Dict[str, Any]]) -> Dict[str, float]:
         "distill_steps_total": sum(r["distill_steps"] for r in vals),
         "fresh_teachers_min": min(r["fresh_teachers"] for r in vals),
         "failed_sends": sum(r["failed_sends"] for r in vals),
+        "drain_stalls": sum(r.get("drain_stalls", 0) for r in vals),
+        "undrained_bytes": sum(r.get("undrained_bytes", 0) for r in vals),
+        "mismatched_edges": float(len(delivery_gaps(results))),
         "wall_seconds_max": max(r["wall_seconds"] for r in vals),
         # launcher-overhead breakdown (absent in pre-obs result dicts)
         "setup_seconds_max": max(r.get("setup_s", 0.0) for r in vals),

@@ -293,6 +293,88 @@ def test_meter_partial_drops_delivered_below_offered():
 
 
 # ---------------------------------------------------------------------------
+# per-tick delivered == offered on a lossless wire (all transports)
+# ---------------------------------------------------------------------------
+
+def test_per_tick_delivered_equals_offered(transport):
+    """The headline delivery invariant: on a lossless localhost wire the
+    meter's per-edge delivered book must equal the offered book after
+    EVERY tick's publish + deliver — for all three transports (the socket
+    transport in in-process deterministic mode). A frame stranded in a
+    queue or kernel buffer across a tick boundary shows up here as a
+    per-edge gap."""
+    meter = CommMeter()
+    ring = [(3,), (0,), (1,), (2,)]  # adj[dst] = in-neighbors
+    bus = PredictionBus(transport, ring, 4, meter=meter)
+    for t in range(5):
+        for src in range(4):
+            bus.publish(src, f"tick{t}-from{src}".encode(), step=t)
+        bus.deliver(t)
+        assert meter.by_edge == meter.by_edge_delivered, f"gap at tick {t}"
+    assert meter.delivered_bytes == meter.total_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# finish-barrier stranding + drain-stall retry (regression)
+# ---------------------------------------------------------------------------
+
+_DRAIN_ALL = 1 << 60  # the finish barrier's release-everything poll step
+
+
+def test_finish_barrier_strands_no_frames():
+    """Regression for the delivery-loss bug: a frame in flight at exit —
+    arrived on the wire but held back by poll's no-delivery-before-tick
+    rule — must be fully drainable: ``quiesce`` pulls it out of the
+    kernel/parse buffers, the drain-all poll releases it, and the sender/
+    receiver frame counts (the finish barrier's reconciliation data)
+    agree. Before the count-based barrier, exactly this frame was counted
+    offered-but-never-delivered."""
+    with SocketTransport(2, clients=[1], wait_inflight=False) as b, \
+            SocketTransport(2, clients=[0], ports={1: b.ports[1]},
+                            wait_inflight=False) as a:
+        a.send(0, 1, b"held-back", step=99)  # sent for a future tick
+        deadline = time.monotonic() + 10
+        while b.recv_count < 1 and time.monotonic() < deadline:
+            b.quiesce(settle=0.01, timeout=1.0)
+        assert dict(a.sent_to) == {1: 1}
+        assert b.recv_count == 1          # arrived and parsed...
+        assert b.poll(1, 0) == []         # ...but held back at tick 0
+        assert b.undrained_bytes == 0     # nothing left half-parsed
+        got = b.poll(1, _DRAIN_ALL)       # the finish barrier's release
+        assert [(d.src, d.payload) for d in got] == [(0, b"held-back")]
+
+
+def test_drain_stall_retries_instead_of_dropping():
+    """A receiver that stops reading long enough to fill the kernel
+    buffers (e.g. stuck in a 20s+ jit compile) must NOT cost frames: the
+    sender's bounded-retry loop meters ``drain_stalls`` and keeps the
+    frame in flight until the receiver catches up — only the launcher's
+    hard timeout is fatal."""
+    import threading
+
+    with SocketTransport(2, clients=[1], wait_inflight=False) as b, \
+            SocketTransport(2, clients=[0], ports={1: b.ports[1]},
+                            wait_inflight=False, drain_timeout=0.05,
+                            send_hard_timeout=30.0) as a:
+        big = b"z" * (32 * 1024 * 1024)  # far beyond the kernel buffers
+
+        def drain_later():
+            time.sleep(0.5)  # let the sender hit at least one stall
+            deadline = time.monotonic() + 20
+            while b.recv_count < 1 and time.monotonic() < deadline:
+                b.quiesce(settle=0.01, timeout=1.0)
+
+        th = threading.Thread(target=drain_later)
+        th.start()
+        a.send(0, 1, big, step=0)  # blocks past drain_timeout, retries
+        th.join()
+        assert a.failed_sends == 0
+        assert a.drain_stalls >= 1
+        got = b.poll(1, _DRAIN_ALL)
+        assert [d.payload == big for d in got] == [True]
+
+
+# ---------------------------------------------------------------------------
 # dropped sends still occupy the uplink (satellite)
 # ---------------------------------------------------------------------------
 
