@@ -31,6 +31,7 @@ def main(argv=None) -> int:
         fleet_churn,
         hetero_models,
         roofline,
+        serve,
         socket_gossip,
         table1_baselines,
         table2_fedmd,
@@ -45,6 +46,7 @@ def main(argv=None) -> int:
         ("async", lambda: async_staleness.main(scale, args.full)),
         ("socket", lambda: socket_gossip.main(scale, args.full)),
         ("fleet", lambda: fleet_churn.main(scale, args.full)),
+        ("serve", lambda: serve.main(scale, args.full)),
         ("roofline", lambda: roofline.main(scale, args.full, args.art_dir)),
         ("table1", lambda: table1_baselines.main(scale)),
         ("fig3", lambda: fig3_loss_weights.main(scale, args.full)),

@@ -1,0 +1,289 @@
+"""Serving benchmark (repro.serve) — appended to ``BENCH_serve.json``.
+
+Four measurements:
+
+  * **requests/sec + p50/p99 latency vs fleet size** — a mixed
+    classify/teacher stream against fronts of K personalized models
+    (fresh-init params: routing/caching/latency do not depend on
+    training, so the sweep stays cheap).
+  * **teacher-cache hit rate** — same stream, hot-window reuse pattern.
+  * **continuous vs static batching** — the same mixed-generation-length
+    request set through the same engine under both admission policies;
+    continuous must win on wall time (static drains the batch to the
+    longest request before admitting more).
+  * **serve→distill feedback** — the full `run_serve_scenario` loop
+    (train → snapshot → serve → distill from served traffic over the
+    metered wire): the row reports how many client-steps distilled from
+    production traffic and the wire bytes they cost.
+
+``--smoke`` is the CI gate: a bounded run (small arch, 8 requests) that
+asserts every request completes and the teacher cache actually hits on
+repeated prompts.
+
+    PYTHONPATH=src python -m benchmarks.run --only serve
+    PYTHONPATH=src python -m benchmarks.serve --smoke
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+from benchmarks.common import row
+
+_BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_serve.json")
+
+
+def _append_bench_rows(rows: List[Dict]) -> None:
+    existing: List[Dict] = []
+    try:
+        with open(_BENCH_JSON) as f:
+            existing = json.load(f)
+        if not isinstance(existing, list):
+            existing = []
+    except (OSError, ValueError):
+        existing = []
+    with open(_BENCH_JSON, "w") as f:
+        json.dump(existing + rows, f, indent=1)
+        f.write("\n")
+
+
+# -- fleet-size sweep ---------------------------------------------------------
+
+
+def _fresh_front(num_clients: int, seed: int = 0):
+    """A front over K fresh-init personalized models — serving latency,
+    routing, and caching are training-independent, so the fleet-size
+    sweep skips the (expensive) gossip run."""
+    import jax
+
+    from repro.data.pipeline import PublicPool
+    from repro.exp import (AlgorithmSpec, DataSpec, ExperimentSpec,
+                           PartitionSpec, TrainSpec, build_bundles,
+                           materialize_data)
+    from repro.serve import Router, ServeFront, TeacherPredictionCache
+
+    spec = ExperimentSpec(
+        name=f"serve_bench_k{num_clients}",
+        algorithm=AlgorithmSpec("mhd"),
+        data=DataSpec(num_labels=12, samples_per_label=40, seed=seed),
+        partition=PartitionSpec(labels_per_client=3, gamma_pub=0.1),
+        clients=ExperimentSpec.uniform_fleet(num_clients, aux_heads=2),
+        train=TrainSpec(steps=1, batch_size=16, public_batch_size=16,
+                        seed=seed))
+    arrays, test_arrays, part = materialize_data(
+        spec.data, spec.partition, spec.num_clients)
+    bundles = build_bundles(spec)
+    params = [b.init(jax.random.fold_in(jax.random.PRNGKey(seed), i))
+              for i, b in enumerate(bundles)]
+    router = Router.from_partition(part, arrays["labels"],
+                                   spec.data.num_labels)
+    public = PublicPool(arrays, part.public_indices, 16, seed=seed)
+    front = ServeFront(bundles, params, router, public,
+                       cache=TeacherPredictionCache(8), log_traffic=False)
+    return front, test_arrays
+
+
+def _serve_stream(front, test_arrays, requests: int, seed: int = 0):
+    import numpy as np
+
+    from repro.serve import ServeRequest
+
+    rng = np.random.default_rng(seed)
+    images, labels = test_arrays["images"], test_arrays["labels"]
+    hot_windows = max(2, requests // 8)
+    responses = []
+    teacher_queries = 0
+    t0 = time.perf_counter()
+    for rid in range(requests):
+        if rid % 3 == 2:
+            req = ServeRequest(request_id=rid, kind="teacher",
+                               window_id=teacher_queries % hot_windows)
+            teacher_queries += 1
+        else:
+            i = int(rng.integers(0, images.shape[0]))
+            req = ServeRequest(request_id=rid, kind="classify",
+                               image=images[i], label_hint=int(labels[i]))
+        responses.append(front.serve(req))
+    wall = time.perf_counter() - t0
+    lat = sorted(r.latency_s for r in responses)
+    return {"wall_s": wall,
+            "rps": len(responses) / max(wall, 1e-9),
+            "p50_ms": lat[len(lat) // 2] * 1e3,
+            "p99_ms": lat[min(len(lat) - 1, int(len(lat) * 0.99))] * 1e3,
+            "hit_rate": front.cache.ledger.hit_rate()}
+
+
+def _fleet_sweep(fleet_sizes, requests: int):
+    out = []
+    for k in fleet_sizes:
+        front, test_arrays = _fresh_front(k)
+        # warm the jits so the sweep measures serving, not compilation
+        _serve_stream(front, test_arrays, requests=6, seed=99)
+        front.cache.ledger.__init__()
+        m = _serve_stream(front, test_arrays, requests=requests)
+        m["fleet_size"] = k
+        out.append(m)
+    return out
+
+
+# -- continuous vs static batching --------------------------------------------
+
+
+def _engine_bench(admission: str, num_slots: int = 4,
+                  max_new_tokens: int = 16, seed: int = 0):
+    import jax
+    import numpy as np
+
+    from repro.configs import get_reduced
+    from repro.models.zoo import build_bundle
+    from repro.serve import ContinuousBatchingEngine, ServeRequest
+
+    cfg = get_reduced("minitron-4b")
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    engine = ContinuousBatchingEngine(
+        bundle, params, num_slots=num_slots,
+        cache_len=8 + max_new_tokens, admission=admission)
+    # mixed lengths: 1..max_new tokens — the distribution static batching
+    # serializes (every batch drains to its longest member)
+    for rid in range(num_slots * 3):
+        engine.submit(ServeRequest(
+            request_id=rid, kind="generate",
+            prompt=rng.integers(0, cfg.vocab_size, size=int(
+                rng.integers(4, 9)), dtype=np.int32),
+            max_new_tokens=int(rng.integers(1, max_new_tokens + 1))))
+    t0 = time.perf_counter()
+    responses = engine.run()
+    wall = time.perf_counter() - t0
+    tokens = sum(len(r.tokens) for r in responses)
+    return {"admission": admission, "wall_s": wall,
+            "requests": len(responses), "tokens": tokens,
+            "tokens_per_s": tokens / max(wall, 1e-9),
+            "ticks": engine.ticks, "occupancy": engine.occupancy()}
+
+
+# -- the feedback loop --------------------------------------------------------
+
+
+def _feedback_spec(full: bool):
+    from repro.exp import get_preset
+
+    spec = get_preset("serve_loop")
+    if not full:
+        spec = dataclasses.replace(
+            spec, train=dataclasses.replace(spec.train, steps=20),
+            serve=dataclasses.replace(spec.serve, requests=18,
+                                      max_new_tokens=8))
+    return spec
+
+
+def _run_feedback_loop(full: bool) -> Dict[str, float]:
+    from repro.serve import run_serve_scenario
+
+    with tempfile.TemporaryDirectory(prefix="bench_serve_") as workdir:
+        out = run_serve_scenario(_feedback_spec(full), workdir)
+    return out.metrics
+
+
+# -- orchestrator entry -------------------------------------------------------
+
+
+def main(scale=None, full: bool = False) -> list:
+    fleet_sizes = (2, 4, 8) if full else (2, 4)
+    requests = 96 if full else 48
+    rows = []
+    bench_rows: List[Dict] = []
+
+    for m in _fleet_sweep(fleet_sizes, requests):
+        k = m["fleet_size"]
+        rows.append(row(
+            f"serve_front_k{k}", m["p50_ms"] * 1e3,
+            f"rps={m['rps']:.1f} p99_ms={m['p99_ms']:.2f} "
+            f"hit_rate={m['hit_rate']:.2f}"))
+        bench_rows.append({"kind": "front", **m})
+
+    static = _engine_bench("static")
+    cont = _engine_bench("continuous")
+    speedup = static["wall_s"] / max(cont["wall_s"], 1e-9)
+    for m in (cont, static):
+        rows.append(row(
+            f"serve_batch_{m['admission']}",
+            m["wall_s"] / max(m["tokens"], 1) * 1e6,
+            f"tok_s={m['tokens_per_s']:.1f} ticks={m['ticks']} "
+            f"occupancy={m['occupancy']:.2f}"))
+    rows.append(row("serve_batch_speedup", 0,
+                    f"continuous_over_static={speedup:.2f}x"))
+    bench_rows.append({"kind": "batching", "continuous": cont,
+                       "static": static, "speedup": speedup})
+
+    fb = _run_feedback_loop(full)
+    rows.append(row(
+        "serve_feedback_loop", fb["serve/p50_ms"] * 1e3,
+        f"rps={fb['serve/requests_per_s']:.1f} "
+        f"hit_rate={fb['cache/hit_rate']:.2f} "
+        f"distill_steps={fb.get('feedback/distill_steps', 0):.0f} "
+        f"wire_bytes={fb.get('feedback/wire_bytes', 0):.0f}"))
+    bench_rows.append({"kind": "feedback_loop", **fb})
+
+    _append_bench_rows(bench_rows)
+    return rows
+
+
+# -- CI smoke -----------------------------------------------------------------
+
+
+def smoke() -> int:
+    """Bounded serve gate (scripts/check.sh + ci.yml): a tiny fleet, 8
+    mixed requests with repeated teacher windows, the minitron engine,
+    and one feedback step. Asserts every request completes, the cache
+    hits on the repeats, and at least one client distilled from the
+    served traffic over the metered wire."""
+    import dataclasses as dc
+
+    from repro.exp import get_preset
+    from repro.serve import run_serve_scenario
+
+    spec = get_preset("serve_loop")
+    spec = dc.replace(
+        spec,
+        train=dc.replace(spec.train, steps=10),
+        serve=dc.replace(spec.serve, requests=8, max_new_tokens=4,
+                         num_slots=2, cache_windows=2, feedback_steps=1))
+    with tempfile.TemporaryDirectory(prefix="serve_smoke_") as workdir:
+        out = run_serve_scenario(spec, workdir)
+    m = out.metrics
+    served = sum(m[f"served/{k}"] for k in ("classify", "teacher",
+                                            "generate"))
+    generate_expected = max(spec.serve.num_slots * 2, 4)
+    expected = spec.serve.requests + generate_expected
+    assert len(out.responses) == expected, \
+        f"{len(out.responses)} responses for {expected} requests"
+    assert served == expected, f"served {served} of {expected}"
+    assert all(r.tokens for r in out.responses
+               if r.kind == "generate"), "empty generation"
+    assert m["cache/hit_rate"] > 0, \
+        f"no cache hits on repeated windows: {m}"
+    assert m.get("feedback/distill_steps", 0) >= 1, \
+        f"nobody distilled from served traffic: {m}"
+    assert m.get("feedback/wire_bytes", 0) > 0, \
+        "feedback moved no bytes over the wire"
+    print(f"serve smoke OK: {expected} requests served, "
+          f"hit_rate={m['cache/hit_rate']:.2f}, "
+          f"distill_steps={m['feedback/distill_steps']:.0f}, "
+          f"wire_bytes={m['feedback/wire_bytes']:.0f}")
+    return 0
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv[1:]:
+        sys.exit(smoke())
+    print("name,us_per_call,derived")
+    for r in main(None, "--full" in sys.argv[1:]):
+        print(r, flush=True)

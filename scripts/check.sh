@@ -72,4 +72,14 @@ timeout 120 python scripts/run_gossip_procs.py --churn-smoke >/dev/null || {
     exit 1
 }
 
+# serve smoke: the bounded serve→distill loop (repro.serve) — train a
+# tiny fleet, snapshot it, serve 8 mixed requests plus generations
+# through the continuous-batching engine, then distill one step from the
+# served traffic. Asserts every request completes, the teacher cache
+# hits on repeated windows, and the feedback step moved metered bytes.
+timeout 240 python -m benchmarks.serve --smoke >/dev/null || {
+    echo "check.sh: serve smoke failed" >&2
+    exit 1
+}
+
 exec python -m pytest -x -q "${MARK[@]}" "$@"

@@ -35,7 +35,13 @@ def print_report(data, top: int = 10) -> None:
 
     events = data.get("traceEvents", [])
     phases = phase_attribution(events)
-    cols = ["wall"] + PHASE_ORDER
+    # a gossip trace has no serve phases and a serve trace no gossip
+    # phases — show only the columns with any time, so neither report
+    # widens past a terminal (idle always prints: its absence is a bug)
+    cols = ["wall"] + [
+        c for c in PHASE_ORDER
+        if c == "idle" or any(row.get(c, 0.0) > 0.0
+                              for row in phases.values())]
     hdr = "rank  " + "".join(f"{c:>11}" for c in cols)
     print(hdr)
     print("-" * len(hdr))

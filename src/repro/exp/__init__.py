@@ -26,6 +26,7 @@ from repro.exp.spec import (
     OptimizerSpec,
     PartitionSpec,
     ScheduleSpec,
+    ServeSpec,
     TopologySpec,
     TrainSpec,
     TransportSpec,
@@ -69,6 +70,7 @@ __all__ = [
     "PRESETS",
     "PartitionSpec",
     "ScheduleSpec",
+    "ServeSpec",
     "TRANSPORTS",
     "TopologySpec",
     "TrainSpec",

@@ -19,6 +19,7 @@ from repro.exp.spec import (
     OptimizerSpec,
     PartitionSpec,
     ScheduleSpec,
+    ServeSpec,
     TopologySpec,
     TrainSpec,
     TransportSpec,
@@ -143,6 +144,34 @@ def _churn_ring() -> ExperimentSpec:
                            from_snapshot=False),
             ChurnEventSpec(kind="rewire", step=90, edges=two_hop),
         )))
+
+
+@PRESETS.register("serve_loop")
+def _serve_loop() -> ExperimentSpec:
+    """The full serve→distill loop (repro.serve): train a 4-client MHD
+    fleet on the prediction wire, snapshot it, serve a mixed
+    classify/teacher/generate stream against the snapshot, then distill
+    two more steps from the served traffic. Consumed by
+    ``launch/serve.py --preset serve_loop`` and `benchmarks/serve.py`
+    (plain ``run_experiment.py`` runs only the training phase)."""
+    s_p = 5
+    return ExperimentSpec(
+        name="serve_loop",
+        algorithm=AlgorithmSpec("mhd", {
+            "nu_emb": 1.0, "nu_aux": 1.0, "delta": 1,
+            "pool_size": 2, "pool_update_every": s_p}),
+        data=DataSpec(num_labels=12, samples_per_label=60),
+        partition=PartitionSpec(labels_per_client=3, skew=100.0,
+                                gamma_pub=0.1),
+        clients=ExperimentSpec.uniform_fleet(4, aux_heads=2),
+        wire=WireSpec(exchange="prediction_topk", topk=5,
+                      val_dtype="float16", emb_encoding="int8",
+                      horizon=2 * s_p),
+        optimizer=OptimizerSpec(init_lr=0.05, grad_clip_norm=1.0),
+        train=TrainSpec(steps=30, batch_size=16, public_batch_size=16),
+        serve=ServeSpec(requests=24, router="label_affinity", num_slots=4,
+                        max_new_tokens=12, engine_arch="minitron-4b",
+                        cache_windows=4, feedback_steps=2))
 
 
 @PRESETS.register("fedmd_quick")

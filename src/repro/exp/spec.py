@@ -288,6 +288,34 @@ class TrainSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """The inference path (`repro.serve`): serve the trained fleet from
+    its snapshot, optionally feeding served traffic back as the public
+    distillation stream.
+
+    ``requests=0`` disables serving (the default — training specs are
+    unchanged). The serve block is consumed by
+    `repro.serve.run_serve_scenario` (via ``launch/serve.py --preset`` or
+    `benchmarks/serve.py`), *after* training; `Experiment.run()` itself
+    never serves. ``engine_arch`` names a reduced zoo LM config
+    (`repro.configs.get_reduced`) for the continuous-batching decode
+    engine; ``None`` serves the classify/teacher paths only.
+    ``feedback_steps`` distills that many extra steps from the served
+    `TrafficLog` (needs a prediction exchange — the feedback rides the
+    metered wire)."""
+
+    requests: int = 0  # mixed classify/teacher queries; 0 = disabled
+    router: str = "label_affinity"  # client_id|label_affinity|round_robin
+    num_slots: int = 4  # continuous-batching engine lanes
+    max_new_tokens: int = 16  # decode budget per generate request
+    engine_arch: Optional[str] = None  # reduced LM config name; None = off
+    cache_windows: int = 8  # teacher-cache LRU capacity
+    teachers: Optional[Tuple[int, ...]] = None  # None = the whole fleet
+    feedback_steps: int = 0  # serve→distill steps on served traffic
+    seed: int = 0  # request stream + engine params
+
+
+@dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     name: str = "experiment"
     algorithm: AlgorithmSpec = dataclasses.field(default_factory=AlgorithmSpec)
@@ -304,6 +332,7 @@ class ExperimentSpec:
         default_factory=OptimizerSpec)
     train: TrainSpec = dataclasses.field(default_factory=TrainSpec)
     churn: ChurnSpec = dataclasses.field(default_factory=ChurnSpec)
+    serve: ServeSpec = dataclasses.field(default_factory=ServeSpec)
     # model-init rng scheme: "legacy" = the shared split chain every
     # process replays for the whole fleet (bitwise-identical to pre-fleet
     # runs, O(K²) fleet startup across K processes); "per_client" =
@@ -337,6 +366,7 @@ class ExperimentSpec:
             "optimizer": OptimizerSpec,
             "train": TrainSpec,
             "churn": ChurnSpec,
+            "serve": ServeSpec,
         }
         kwargs: Dict[str, Any] = {}
         for key, val in d.items():
@@ -410,7 +440,33 @@ class ExperimentSpec:
             raise ValueError(
                 "train.snapshot_every needs train.snapshot_dir")
         self._validate_churn()
+        self._validate_serve()
         return self
+
+    def _validate_serve(self) -> None:
+        s = self.serve
+        if s.requests < 0 or s.feedback_steps < 0:
+            raise ValueError("serve.requests/feedback_steps must be >= 0")
+        if s.router not in ("client_id", "label_affinity", "round_robin"):
+            raise ValueError(f"unknown serve router {s.router!r}")
+        if s.num_slots < 1 or s.max_new_tokens < 1 or s.cache_windows < 1:
+            raise ValueError(
+                "serve.num_slots/max_new_tokens/cache_windows must be >= 1")
+        if s.teachers is not None:
+            bad = [t for t in s.teachers
+                   if not 0 <= int(t) < self.num_clients]
+            if bad:
+                raise ValueError(f"serve.teachers {bad} out of range for "
+                                 f"{self.num_clients} clients")
+        if s.feedback_steps > 0 and s.requests <= 0:
+            raise ValueError(
+                "serve.feedback_steps > 0 needs serve.requests > 0 — "
+                "feedback distills from served traffic")
+        if s.feedback_steps > 0 and self.wire.exchange == "params":
+            raise ValueError(
+                "serve→distill feedback rides the prediction wire; "
+                "wire.exchange='params' has no metered wire — use a "
+                "prediction exchange")
 
     def _validate_churn(self) -> None:
         for ev in self.churn.events:
@@ -479,4 +535,6 @@ def _build(cls, d: Any) -> Any:
     if cls is ChurnEventSpec and kwargs.get("edges") is not None:
         kwargs["edges"] = tuple(tuple(int(j) for j in nbrs)
                                 for nbrs in kwargs["edges"])
+    if cls is ServeSpec and kwargs.get("teachers") is not None:
+        kwargs["teachers"] = tuple(int(t) for t in kwargs["teachers"])
     return cls(**kwargs)

@@ -30,6 +30,7 @@ from repro.fleet.membership import Membership
 from repro.fleet.snapshot import (
     SNAPSHOT_VERSION,
     latest_step,
+    load_client_params,
     restore_clients,
     restore_fleet,
     save_fleet,
@@ -47,6 +48,7 @@ __all__ = [
     "SNAPSHOT_VERSION",
     "events_from_spec",
     "latest_step",
+    "load_client_params",
     "restore_clients",
     "restore_fleet",
     "save_fleet",

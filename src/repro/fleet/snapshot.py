@@ -481,3 +481,22 @@ def _latest_with(directory: str, filename: str) -> Optional[int]:
         if os.path.exists(os.path.join(_step_dir(directory, s), filename)):
             return s
     return None
+
+
+def load_client_params(directory: str, cid: int, like: Any,
+                       step: Optional[int] = None) -> Tuple[Any, int]:
+    """Read one client's parameters out of a fleet snapshot without a
+    trainer — the serving path (`repro.serve.Router`): a finished gossip
+    run's snapshot directory is directly servable. ``like`` supplies the
+    target pytree structure (a freshly initialized bundle's params).
+    Returns ``(params, snapshot_step)``; ``step=None`` picks the newest
+    snapshot containing ``client_{cid}.npz``."""
+    if step is None:
+        step = _latest_with(directory, f"client_{cid}.npz")
+        if step is None:
+            raise FileNotFoundError(
+                f"no snapshot of client {cid} under {directory}")
+    path = os.path.join(_step_dir(directory, step), f"client_{cid}.npz")
+    state = _load_state(path)
+    _check_version(state, path)
+    return _unflatten_like(state["params"], like), int(step)

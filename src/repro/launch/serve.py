@@ -1,84 +1,112 @@
-"""Serving launcher: batched greedy decoding with KV/state caches.
+"""Serving launcher — thin CLI over `repro.serve`.
 
-Runs a reduced architecture end-to-end on CPU (prefill + N decode steps for
-a batch of requests); on TPU the same step functions are lowered with the
-production shardings (see dryrun.py decode shapes).
+Two modes:
 
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --reduced \
-      --batch 4 --prompt-len 32 --gen 16
+  * decode demo (default): a continuous-batching greedy-decode run over
+    one reduced zoo LM — mixed-length requests admitted/retired without
+    draining the batch, with the fused prefill.
+
+        PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b \\
+            --batch 4 --prompt-len 32 --gen 16
+
+    ``--no-reduced`` lowers the full production config instead of the
+    CPU-reduced shape (slow off-TPU; the flag exists so it *can* be
+    disabled — it used to be a no-op ``store_true`` with default=True).
+
+  * fleet scenario (``--preset``): the full train→snapshot→serve→
+    feed-back loop of `repro.serve.run_serve_scenario`:
+
+        PYTHONPATH=src python -m repro.launch.serve --preset serve_loop
 """
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 
-def prefill_into_cache(bundle, cfg, params, tokens, cache_len):
-    """Run the prompt through decode_step token-by-token (cache warmup).
+def _demo(args) -> int:
+    import jax
 
-    A production server uses a fused prefill kernel; token-stepping keeps the
-    CPU example simple and exercises exactly the serve_step the dry-run
-    lowers. Returns (caches, last_logits).
-    """
-    B, T = tokens.shape
-    caches = bundle.init_cache(B, cache_len, jnp.float32)
-    step = jax.jit(bundle.decode_step)
-    logits = None
-    for t in range(T):
-        logits, caches = step(params, tokens[:, t:t + 1], caches)
-    return caches, logits
-
-
-def main(argv=None) -> int:
-    p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--arch", default="gemma3-12b")
-    p.add_argument("--reduced", action="store_true", default=True)
-    p.add_argument("--batch", type=int, default=4)
-    p.add_argument("--prompt-len", type=int, default=32)
-    p.add_argument("--gen", type=int, default=16)
-    p.add_argument("--seed", type=int, default=0)
-    args = p.parse_args(argv)
-
-    from repro.configs import get_reduced
+    from repro.configs import get_config, get_reduced
     from repro.models.zoo import build_bundle
+    from repro.serve import ContinuousBatchingEngine, ServeRequest
 
-    cfg = get_reduced(args.arch)
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     if cfg.family == "audio":
         raise SystemExit("use the whisper example for enc-dec serving")
     bundle = build_bundle(cfg)
     params = bundle.init(jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
-    prompts = jnp.asarray(rng.integers(
-        0, cfg.vocab_size, size=(args.batch, args.prompt_len), dtype=np.int32))
 
-    cache_len = args.prompt_len + args.gen
+    engine = ContinuousBatchingEngine(
+        bundle, params, num_slots=args.batch,
+        cache_len=args.prompt_len + args.gen, admission=args.admission)
+    for rid in range(args.batch * 2):
+        # mixed lengths: request i generates between gen/2 and gen tokens
+        gen = args.gen - (rid % max(args.gen // 2, 1))
+        engine.submit(ServeRequest(
+            request_id=rid, kind="generate",
+            prompt=rng.integers(0, cfg.vocab_size, size=args.prompt_len,
+                                dtype=np.int32),
+            max_new_tokens=max(gen, 1)))
     t0 = time.time()
-    caches, logits = prefill_into_cache(bundle, cfg, params, prompts, cache_len)
-    prefill_s = time.time() - t0
+    responses = engine.run()
+    wall = time.time() - t0
 
-    step = jax.jit(bundle.decode_step)
-    out_tokens = []
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    t0 = time.time()
-    for _ in range(args.gen):
-        out_tokens.append(np.asarray(tok)[:, 0])
-        logits, caches = step(params, tok, caches)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    decode_s = time.time() - t0
-
-    gen = np.stack(out_tokens, axis=1)
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
-          f"gen={args.gen}")
-    print(f"prefill {prefill_s:.2f}s, decode {decode_s:.2f}s "
-          f"({args.gen*args.batch/max(decode_s,1e-9):.1f} tok/s)")
+    total_tokens = sum(len(r.tokens) for r in responses)
+    print(f"arch={cfg.name} slots={args.batch} prompt={args.prompt_len} "
+          f"admission={engine.admission}")
+    print(f"{len(responses)} requests, {total_tokens} tokens in "
+          f"{wall:.2f}s ({total_tokens / max(wall, 1e-9):.1f} tok/s, "
+          f"occupancy {engine.occupancy():.0%})")
     print("sample generations (token ids):")
-    for b in range(min(args.batch, 2)):
-        print(f"  req{b}: {gen[b][:12].tolist()}")
+    for r in sorted(responses, key=lambda r: r.request_id)[:2]:
+        print(f"  req{r.request_id}: {r.tokens[:12]} "
+              f"(admit tick {r.admit_tick}, finish {r.finish_tick})")
     return 0
+
+
+def _scenario(args) -> int:
+    from repro.exp import get_preset
+    from repro.serve import run_serve_scenario
+
+    spec = get_preset(args.preset)
+    if spec.serve.requests <= 0:
+        raise SystemExit(f"preset {args.preset!r} has no serve block "
+                         "(serve.requests == 0)")
+    workdir = args.workdir or tempfile.mkdtemp(prefix="serve_")
+    out = run_serve_scenario(spec, workdir)
+    print(f"preset={args.preset} workdir={workdir}")
+    for k in sorted(out.metrics):
+        print(f"  {k} = {out.metrics[k]:.4g}")
+    print(out.front.cache.ledger.format_table())
+    return 0
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="gemma3-12b")
+    p.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                   default=True,
+                   help="CPU-reduced config (--no-reduced = full shape)")
+    p.add_argument("--batch", type=int, default=4,
+                   help="engine slots (concurrent decode lanes)")
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--admission", default="continuous",
+                   choices=("continuous", "static"))
+    p.add_argument("--preset", default=None,
+                   help="run the fleet serve scenario of this preset "
+                        "instead of the decode demo")
+    p.add_argument("--workdir", default=None,
+                   help="scenario snapshot/artifact dir (default: tmp)")
+    args = p.parse_args(argv)
+
+    return _scenario(args) if args.preset else _demo(args)
 
 
 if __name__ == "__main__":

@@ -56,10 +56,19 @@ PHASE_OF = {
     "runtime/step": "step_other",
     "runtime/resolve": "step_other",
     "sched/tick": "step_other",
+    # serving phases (repro.serve): routing decision, fused prompt
+    # prefill, vmapped decode tick, teacher-cache lookup+compute; the
+    # classify forward is the decode-equivalent serving compute
+    "serve/route": "route",
+    "serve/prefill": "prefill",
+    "serve/decode": "decode",
+    "serve/classify": "decode",
+    "serve/cache": "cache",
 }
 
 PHASE_ORDER = ["distill", "encode", "wire", "drain_wait", "barrier",
-               "setup", "step_other", "other", "idle"]
+               "setup", "step_other", "route", "prefill", "decode",
+               "cache", "other", "idle"]
 
 # spans that are *waits*, not work — what the stall report ranks
 STALL_NAMES = frozenset({

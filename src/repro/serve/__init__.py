@@ -1,0 +1,68 @@
+"""repro.serve — the fleet's inference path (ROADMAP item 5).
+
+A trained gossip fleet is K personalized models; this package serves
+them:
+
+  request.py        `ServeRequest` / `ServeResponse` — classify,
+                    teacher-window, and generate query kinds.
+  router.py         `Router` — client-id / label-affinity / round-robin
+                    mapping from request to personalized model, built
+                    from the run's `Partition`.
+  engine.py         `ContinuousBatchingEngine` + fused `Prefill` — slot
+                    -based greedy decoding over the zoo's ``decode_step``
+                    (vmapped per-lane caches; admit/retire at any tick),
+                    with static batching as a one-flag admission policy
+                    for the benchmark comparison.
+  teacher_cache.py  `TeacherPredictionCache` + `CacheLedger` — LRU of
+                    ensemble predictions keyed by (public window,
+                    teacher set); hits are byte-identical to recompute.
+  feedback.py       `TrafficLog` / `attach_traffic` / `run_feedback` —
+                    served traffic becomes the public distillation
+                    stream of a live trainer (serve→distill loop).
+  front.py          `ServeFront` — snapshot-loading front door tying the
+                    above together, and `run_serve_scenario`, the
+                    train→snapshot→serve→feed-back end-to-end driver.
+
+Declared via `ServeSpec` on the `ExperimentSpec` surface (preset
+``serve_loop``); measured by `benchmarks/serve.py` → BENCH_serve.json;
+traced under the ``serve/*`` spans (`docs/serving.md`).
+"""
+from repro.serve.engine import (
+    ContinuousBatchingEngine,
+    Prefill,
+    solo_generate,
+)
+from repro.serve.feedback import (
+    TrafficLog,
+    attach_traffic,
+    feedback_summary,
+    run_feedback,
+)
+from repro.serve.front import (
+    ServeFront,
+    ServeScenarioResult,
+    build_engine,
+    run_serve_scenario,
+)
+from repro.serve.request import ServeRequest, ServeResponse
+from repro.serve.router import Router
+from repro.serve.teacher_cache import CacheLedger, TeacherPredictionCache
+
+__all__ = [
+    "CacheLedger",
+    "ContinuousBatchingEngine",
+    "Prefill",
+    "Router",
+    "ServeFront",
+    "ServeRequest",
+    "ServeResponse",
+    "ServeScenarioResult",
+    "TeacherPredictionCache",
+    "TrafficLog",
+    "attach_traffic",
+    "build_engine",
+    "feedback_summary",
+    "run_feedback",
+    "run_serve_scenario",
+    "solo_generate",
+]

@@ -1,0 +1,264 @@
+"""Continuous-batching greedy-decode engine over the zoo's ``decode_step``.
+
+The unit of batching is a *slot*: a lane of a vmapped decode step with
+its own KV/state cache (batch=1 per lane, stacked on a leading slot
+axis). ``jax.vmap(decode_step)`` makes every per-lane cache leaf —
+including the scalar ring-buffer ``index`` — independent per slot, so
+lanes sit at *different* decode positions inside one jitted step. That
+is what makes the batching continuous: a finished request retires its
+lane and a queued request is admitted into it at the next tick, while
+the other lanes keep decoding — mixed generation lengths never stall
+each other.
+
+Admission is a policy on the same engine:
+
+  * ``"continuous"`` — fill any free lane at any tick (the production
+    mode).
+  * ``"static"`` — admit only when *all* lanes are free (classic static
+    batching: the batch drains fully before the next one forms). The
+    benchmark's continuous-vs-static comparison flips this one flag, so
+    the two modes share 100% of the compute path.
+
+Prompt ingestion is the fused `Prefill`: one jitted
+``lax.scan(decode_step)`` over the whole prompt, bitwise-identical to
+the token-by-token python loop it replaced (asserted in
+tests/test_serve.py) but one device dispatch instead of T.
+
+Numerics contract: a lane's cache is written wholesale at admission
+(prefill runs at batch=1, exactly the solo path), and vmap keeps lane
+computations independent — so a request's greedy token sequence does not
+depend on which other requests share the engine. Batched XLA reductions
+may reorder float adds vs a solo B=1 run, so cross-shape comparisons are
+argmax-token-exact rather than logit-bitwise (see tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs import tracer as trace
+from repro.serve.request import ServeRequest, ServeResponse
+
+ADMISSION = ("continuous", "static")
+
+
+class Prefill:
+    """Fused full-prompt prefill: one jitted scan over ``decode_step``.
+
+    ``__call__(params, tokens(B, T), caches)`` returns
+    ``(caches, logits(T, B, 1, V))`` — the caches warmed through the
+    whole prompt and every step's logits (``logits[-1]`` feeds the first
+    generated token). jit retraces per (B, T) shape; the traced scan body
+    is exactly one ``decode_step``, so the math is the step-wise loop's,
+    fused."""
+
+    def __init__(self, bundle):
+        if not getattr(bundle, "is_lm", False):
+            raise ValueError(f"bundle {bundle.name!r} has no decode path")
+        self.bundle = bundle
+
+        def _prefill(params, tokens, caches):
+            def body(caches, tok):
+                logits, caches = bundle.decode_step(
+                    params, tok[:, None], caches)
+                return caches, logits
+
+            return jax.lax.scan(body, caches, tokens.T)
+
+        self._fn = jax.jit(_prefill)
+
+    def __call__(self, params, tokens, caches):
+        return self._fn(params, tokens, caches)
+
+
+@dataclasses.dataclass
+class _Lane:
+    """One occupied slot: the request plus its accumulated greedy tokens."""
+
+    request: ServeRequest
+    tokens: List[int]
+    submit_s: float
+    admit_tick: int
+
+
+class ContinuousBatchingEngine:
+    """Greedy decoding for a stream of `ServeRequest`s over one model.
+
+    ``submit`` enqueues; ``tick`` advances the engine one decode step
+    (admitting and retiring lanes as it goes) and returns the responses
+    completed that tick; ``run`` ticks until drained. One engine serves
+    one (bundle, params) pair — a fleet front holds one per distinct
+    model it decodes with.
+    """
+
+    def __init__(self, bundle, params, num_slots: int = 4,
+                 cache_len: int = 64, admission: str = "continuous",
+                 cache_dtype=jnp.float32):
+        if admission not in ADMISSION:
+            raise ValueError(f"unknown admission policy {admission!r}; "
+                             f"known: {ADMISSION}")
+        if num_slots < 1:
+            raise ValueError("engine needs at least one slot")
+        self.bundle = bundle
+        self.params = params
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        self.admission = admission
+        self.cache_dtype = cache_dtype
+        self.prefill = Prefill(bundle)
+        # vmap over the slot axis: params broadcast, token + cache per-lane
+        self._vstep = jax.jit(jax.vmap(bundle.decode_step,
+                                       in_axes=(None, 0, 0)))
+        lane_cache = bundle.init_cache(1, cache_len, cache_dtype)
+        self.caches = jax.tree_util.tree_map(
+            lambda x: jnp.stack([x] * num_slots), lane_cache)
+        self.tokens = jnp.zeros((num_slots, 1, 1), dtype=jnp.int32)
+        self.lanes: List[Optional[_Lane]] = [None] * num_slots
+        self.queue: Deque[ServeRequest] = deque()
+        self._submit_s: Dict[int, float] = {}
+        # occupancy/throughput counters (benchmarks/serve.py)
+        self.ticks = 0
+        self.decode_ticks = 0
+        self.prefills = 0
+        self.completed = 0
+        self.lane_ticks_busy = 0
+        self.lane_ticks_total = 0
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, request: ServeRequest) -> None:
+        request.validate()
+        if request.kind != "generate":
+            raise ValueError(f"engine only decodes; request "
+                             f"{request.request_id} is {request.kind!r}")
+        total = len(np.asarray(request.prompt)) + request.max_new_tokens
+        if total > self.cache_len:
+            raise ValueError(
+                f"request {request.request_id} needs {total} cache "
+                f"positions, engine has {self.cache_len} (ring wrap "
+                "would corrupt full attention)")
+        self._submit_s[request.request_id] = time.perf_counter()
+        self.queue.append(request)
+
+    # -- lane lifecycle ----------------------------------------------------
+
+    def _write_lane(self, slot: int, caches, tok0: int) -> None:
+        self.caches = jax.tree_util.tree_map(
+            lambda full, one: full.at[slot].set(one.astype(full.dtype)),
+            self.caches, caches)
+        self.tokens = self.tokens.at[slot, 0, 0].set(tok0)
+
+    def _retire(self, slot: int, done: List[ServeResponse]) -> None:
+        lane = self.lanes[slot]
+        self.lanes[slot] = None
+        self.completed += 1
+        done.append(ServeResponse(
+            request_id=lane.request.request_id, kind="generate",
+            tokens=list(lane.tokens),
+            latency_s=time.perf_counter() - lane.submit_s,
+            admit_tick=lane.admit_tick, finish_tick=self.ticks))
+
+    def _admit(self, done: List[ServeResponse]) -> None:
+        free = [i for i, lane in enumerate(self.lanes) if lane is None]
+        if self.admission == "static" and len(free) != self.num_slots:
+            return  # static batching: drain the whole batch first
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.popleft()
+            prompt = jnp.asarray(
+                np.asarray(req.prompt, dtype=np.int32)[None, :])
+            with trace.span("serve/prefill", request=req.request_id,
+                            slot=slot, prompt_len=int(prompt.shape[1])):
+                caches = self.bundle.init_cache(1, self.cache_len,
+                                                self.cache_dtype)
+                caches, logits = self.prefill(self.params, prompt, caches)
+                tok0 = int(jnp.argmax(logits[-1][0, -1]))
+            self.prefills += 1
+            self._write_lane(slot, caches, tok0)
+            self.lanes[slot] = _Lane(
+                request=req, tokens=[tok0],
+                submit_s=self._submit_s.pop(req.request_id,
+                                            time.perf_counter()),
+                admit_tick=self.ticks)
+            if req.max_new_tokens == 1:
+                self._retire(slot, done)  # prompt-only ask: done at admit
+
+    # -- stepping ----------------------------------------------------------
+
+    def tick(self) -> List[ServeResponse]:
+        """One engine tick: admit into free lanes, then one vmapped decode
+        step for every lane (idle lanes decode garbage that nobody
+        reads). Returns the requests completed this tick."""
+        done: List[ServeResponse] = []
+        self._admit(done)
+        active = [i for i, lane in enumerate(self.lanes) if lane is not None]
+        if active:
+            with trace.span("serve/decode", active=len(active),
+                            tick=self.ticks):
+                logits, self.caches = self._vstep(
+                    self.params, self.tokens, self.caches)
+                nxt = jnp.argmax(logits[:, :, -1], axis=-1)  # (S, 1)
+                self.tokens = nxt[:, :, None].astype(jnp.int32)
+                nxt_np = np.asarray(nxt)
+            self.decode_ticks += 1
+            self.lane_ticks_busy += len(active)
+            self.lane_ticks_total += self.num_slots
+            for slot in active:
+                lane = self.lanes[slot]
+                lane.tokens.append(int(nxt_np[slot, 0]))
+                if len(lane.tokens) >= lane.request.max_new_tokens:
+                    self._retire(slot, done)
+        self.ticks += 1
+        return done
+
+    def run(self, max_ticks: Optional[int] = None) -> List[ServeResponse]:
+        """Tick until every queued and in-flight request completes."""
+        out: List[ServeResponse] = []
+        while self.queue or any(lane is not None for lane in self.lanes):
+            out.extend(self.tick())
+            if max_ticks is not None and self.ticks >= max_ticks:
+                raise RuntimeError(
+                    f"engine did not drain within {max_ticks} ticks "
+                    f"({len(self.queue)} queued, "
+                    f"{sum(l is not None for l in self.lanes)} in flight)")
+        return out
+
+    # -- reporting ---------------------------------------------------------
+
+    def occupancy(self) -> float:
+        """Busy lane-ticks / total lane-ticks over decode ticks — the
+        number static batching loses on mixed generation lengths."""
+        return (self.lane_ticks_busy / self.lane_ticks_total
+                if self.lane_ticks_total else 0.0)
+
+    def summary(self) -> Dict[str, float]:
+        return {"ticks": float(self.ticks),
+                "decode_ticks": float(self.decode_ticks),
+                "prefills": float(self.prefills),
+                "completed": float(self.completed),
+                "occupancy": self.occupancy()}
+
+
+def solo_generate(bundle, params, prompt: np.ndarray, max_new_tokens: int,
+                  cache_len: int) -> List[int]:
+    """Reference single-request greedy decode: fused prefill + an
+    unbatched ``jit(decode_step)`` loop at B=1, no slot engine and no
+    vmap — the determinism oracle the continuous-batch tests compare
+    against."""
+    tokens = jnp.asarray(np.asarray(prompt, dtype=np.int32)[None, :])
+    caches = bundle.init_cache(1, cache_len, jnp.float32)
+    caches, logits = Prefill(bundle)(params, tokens, caches)
+    step = jax.jit(bundle.decode_step)
+    tok = jnp.argmax(logits[-1][:, -1:], axis=-1).astype(jnp.int32)
+    out = [int(tok[0, 0])]
+    while len(out) < max_new_tokens:
+        logits, caches = step(params, tok, caches)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    return out

@@ -1,0 +1,473 @@
+"""Tests for `repro.serve` — the continuous-batching inference front.
+
+Acceptance (ISSUE 8):
+  * decode determinism under slot admit/evict — a request's greedy token
+    sequence through the continuous engine equals the solo (unbatched
+    B=1) decode, for every request in a mixed-length stream, regardless
+    of which other requests share the batch;
+  * the fused full-prompt prefill is *bitwise* identical (logits and
+    caches) to the token-by-token ``decode_step`` loop it replaced;
+  * a teacher-cache hit returns predictions byte-identical to the
+    recompute it replaced, with hit/miss/eviction ledger accounting;
+  * a snapshot-loaded front serves exactly the params the trainer held;
+  * serve→distill feedback: clients measurably distill from served
+    traffic over the metered wire.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.exp import ExperimentSpec, ServeSpec, get_preset
+from repro.models.zoo import build_bundle
+from repro.serve import (
+    CacheLedger,
+    ContinuousBatchingEngine,
+    Prefill,
+    Router,
+    ServeRequest,
+    TeacherPredictionCache,
+    TrafficLog,
+    run_serve_scenario,
+    solo_generate,
+)
+
+_ARCH = "minitron-4b"
+
+
+def _tree_equal(a, b) -> bool:
+    eq = jax.tree.map(
+        lambda x, y: bool(np.array_equal(np.asarray(x), np.asarray(y))),
+        a, b)
+    return all(jax.tree.leaves(eq))
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_reduced(_ARCH)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    return cfg, bundle, params
+
+
+def _gen_request(rid, vocab, rng, max_new):
+    return ServeRequest(
+        request_id=rid, kind="generate",
+        prompt=rng.integers(0, vocab, size=int(rng.integers(3, 8)),
+                            dtype=np.int32),
+        max_new_tokens=max_new)
+
+
+# ---------------------------------------------------------------------------
+# fused prefill
+# ---------------------------------------------------------------------------
+
+def test_prefill_bitwise_matches_stepwise_loop(lm):
+    """The single-dispatch scan prefill replaced a token-by-token python
+    loop; the replacement must be bitwise — logits AND caches."""
+    import jax.numpy as jnp
+
+    cfg, bundle, params = lm
+    B, T, cache_len = 2, 7, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                                cfg.vocab_size)
+
+    step = jax.jit(bundle.decode_step)
+    loop_caches = bundle.init_cache(B, cache_len, jnp.float32)
+    loop_logits = []
+    for t in range(T):
+        lg, loop_caches = step(params, tokens[:, t:t + 1], loop_caches)
+        loop_logits.append(np.asarray(lg))
+
+    fused_caches = bundle.init_cache(B, cache_len, jnp.float32)
+    fused_caches, fused_logits = Prefill(bundle)(params, tokens,
+                                                 fused_caches)
+
+    fused_np = np.asarray(fused_logits)  # (T, B, 1, V)
+    for t in range(T):
+        assert fused_np[t].tobytes() == loop_logits[t].tobytes(), \
+            f"prefill logits diverge at position {t}"
+    assert _tree_equal(fused_caches, loop_caches), \
+        "prefill caches diverge from the step-wise loop"
+
+
+def test_prefill_rejects_non_lm():
+    class NotLM:
+        name = "resnet"
+        is_lm = False
+
+    with pytest.raises(ValueError, match="decode path"):
+        Prefill(NotLM())
+
+
+# ---------------------------------------------------------------------------
+# continuous batching determinism
+# ---------------------------------------------------------------------------
+
+def test_continuous_equals_solo_under_admit_evict(lm):
+    """Mixed-length requests through a 3-slot engine: lanes retire and
+    re-admit constantly, and every request's greedy tokens must equal
+    its solo unbatched decode."""
+    cfg, bundle, params = lm
+    rng = np.random.default_rng(0)
+    cache_len = 8 + 10
+    engine = ContinuousBatchingEngine(bundle, params, num_slots=3,
+                                      cache_len=cache_len)
+    requests = [_gen_request(rid, cfg.vocab_size, rng,
+                             max_new=int(rng.integers(1, 11)))
+                for rid in range(6)]
+    for r in requests:
+        engine.submit(r)
+    responses = {r.request_id: r for r in engine.run()}
+
+    assert len(responses) == len(requests)
+    assert engine.completed == len(requests)
+    for req in requests:
+        solo = solo_generate(bundle, params, req.prompt,
+                             req.max_new_tokens, cache_len)
+        got = responses[req.request_id].tokens
+        assert got == solo, \
+            f"request {req.request_id}: batched {got} != solo {solo}"
+        assert len(got) == req.max_new_tokens
+
+
+def test_cobatch_does_not_change_tokens(lm):
+    """The same request decodes to the same tokens whatever shares the
+    engine — here: alone vs alongside longer neighbours."""
+    cfg, bundle, params = lm
+    rng = np.random.default_rng(1)
+    probe = _gen_request(0, cfg.vocab_size, rng, max_new=6)
+
+    alone = ContinuousBatchingEngine(bundle, params, num_slots=2,
+                                     cache_len=18)
+    alone.submit(probe)
+    tokens_alone = alone.run()[0].tokens
+
+    crowded = ContinuousBatchingEngine(bundle, params, num_slots=2,
+                                       cache_len=18)
+    crowded.submit(probe)
+    for rid in range(1, 4):
+        crowded.submit(_gen_request(rid, cfg.vocab_size, rng, max_new=9))
+    tokens_crowded = {r.request_id: r.tokens for r in crowded.run()}[0]
+
+    assert tokens_alone == tokens_crowded
+
+
+def test_static_admission_drains_before_admitting(lm):
+    """Static batching is the same engine with a gate: no admission into
+    a partially-free batch. Tokens still match solo; the batch structure
+    shows in the ticks (a later batch admits only after the earlier one
+    fully finished)."""
+    cfg, bundle, params = lm
+    rng = np.random.default_rng(2)
+    engine = ContinuousBatchingEngine(bundle, params, num_slots=2,
+                                      cache_len=18, admission="static")
+    requests = [_gen_request(rid, cfg.vocab_size, rng,
+                             max_new=(8 if rid % 2 == 0 else 2))
+                for rid in range(4)]
+    for r in requests:
+        engine.submit(r)
+    responses = sorted(engine.run(), key=lambda r: r.admit_tick)
+
+    # two batches of two; the second admits no earlier than the first
+    # batch's last retirement
+    first_batch, second_batch = responses[:2], responses[2:]
+    assert first_batch[0].admit_tick == first_batch[1].admit_tick
+    assert second_batch[0].admit_tick == second_batch[1].admit_tick
+    assert second_batch[0].admit_tick >= max(r.finish_tick
+                                             for r in first_batch)
+    for req in requests:
+        got = {r.request_id: r.tokens for r in responses}[req.request_id]
+        assert got == solo_generate(bundle, params, req.prompt,
+                                    req.max_new_tokens, 18)
+
+
+def test_continuous_occupancy_beats_static_on_mixed_lengths(lm):
+    """The benchmark's claim as a correctness property: on mixed lengths
+    the continuous engine needs fewer decode ticks and keeps lanes
+    fuller than the static gate."""
+    cfg, bundle, params = lm
+
+    def run(admission):
+        rng = np.random.default_rng(3)
+        engine = ContinuousBatchingEngine(bundle, params, num_slots=2,
+                                          cache_len=18,
+                                          admission=admission)
+        for rid in range(6):
+            engine.submit(_gen_request(rid, cfg.vocab_size, rng,
+                                       max_new=(10 if rid % 2 else 2)))
+        engine.run()
+        return engine
+
+    cont, static = run("continuous"), run("static")
+    assert cont.decode_ticks < static.decode_ticks
+    assert cont.occupancy() > static.occupancy()
+
+
+def test_engine_input_validation(lm):
+    cfg, bundle, params = lm
+    with pytest.raises(ValueError, match="admission"):
+        ContinuousBatchingEngine(bundle, params, admission="greedy")
+    with pytest.raises(ValueError, match="at least one slot"):
+        ContinuousBatchingEngine(bundle, params, num_slots=0)
+    engine = ContinuousBatchingEngine(bundle, params, num_slots=2,
+                                      cache_len=12)
+    with pytest.raises(ValueError, match="only decodes"):
+        engine.submit(ServeRequest(request_id=0, kind="classify",
+                                   image=np.zeros((8, 8, 3))))
+    with pytest.raises(ValueError, match="cache"):
+        engine.submit(ServeRequest(
+            request_id=1, kind="generate",
+            prompt=np.zeros(8, dtype=np.int32), max_new_tokens=8))
+
+
+# ---------------------------------------------------------------------------
+# teacher-prediction cache
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_is_byte_identical_to_recompute():
+    rng = np.random.default_rng(0)
+    value = {"logits": rng.standard_normal((4, 8)).astype(np.float32),
+             "sample_ids": np.arange(4, dtype=np.uint64)}
+    calls = []
+
+    def compute():
+        calls.append(1)
+        return {k: v.copy() for k, v in value.items()}
+
+    cache = TeacherPredictionCache(capacity=2)
+    miss, hit1 = cache.get_or_compute(3, (0, 1), compute)
+    got, hit2 = cache.get_or_compute(3, (1, 0), compute)  # order-insensitive
+    assert (hit1, hit2) == (False, True)
+    assert len(calls) == 1, "hit must not recompute"
+    for k in value:
+        assert got[k].tobytes() == miss[k].tobytes()
+    ledger = cache.ledger
+    assert (ledger.hits, ledger.misses) == (1, 1)
+    assert ledger.hit_bytes == ledger.miss_bytes > 0
+    assert ledger.hit_rate() == 0.5
+
+
+def test_cache_lru_eviction_and_ledger():
+    cache = TeacherPredictionCache(capacity=2)
+    mk = lambda w: (lambda: {"logits": np.full((2, 2), w, np.float32)})
+    cache.get_or_compute(0, (0,), mk(0))
+    cache.get_or_compute(1, (0,), mk(1))
+    cache.get_or_compute(0, (0,), mk(0))  # touch 0: now 1 is LRU
+    cache.get_or_compute(2, (0,), mk(2))  # evicts window 1
+    assert cache.key(0, (0,)) in cache
+    assert cache.key(1, (0,)) not in cache
+    assert cache.key(2, (0,)) in cache
+    assert cache.ledger.evictions == 1
+    assert len(cache) == 2
+    table = cache.ledger.format_table()
+    assert "1 hits" in table and "evicted" in table
+    with pytest.raises(ValueError, match="capacity"):
+        TeacherPredictionCache(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+
+def _affinity_router(policy="label_affinity"):
+    # client 0 owns labels {0,1}, client 1 owns {2}, client 2 owns {1,2}
+    affinity = np.array([[4.0, 2.0, 0.0],
+                         [0.0, 0.0, 5.0],
+                         [0.0, 3.0, 5.0]])
+    return Router(3, affinity=affinity, policy=policy)
+
+
+def test_router_label_affinity_and_pinning():
+    r = _affinity_router()
+    img = np.zeros((8, 8, 3))
+    assert r.route(ServeRequest(0, image=img, label_hint=0)) == 0
+    assert r.route(ServeRequest(1, image=img, label_hint=1)) == 2
+    # argmax tie on label 2 (clients 1 and 2) resolves to the lowest id
+    assert r.route(ServeRequest(2, image=img, label_hint=2)) == 1
+    # an explicit pin beats the affinity map
+    assert r.route(ServeRequest(3, image=img, label_hint=0,
+                                client_id=2)) == 2
+    # hintless requests fall back to round-robin
+    assert [r.route(ServeRequest(4 + i, image=img)) for i in range(4)] \
+        == [0, 1, 2, 0]
+    s = r.summary()
+    assert s["routed"] == 8.0 and s["c2"] == 3.0
+
+
+def test_router_validation():
+    with pytest.raises(ValueError, match="unknown routing policy"):
+        Router(2, policy="sticky")
+    with pytest.raises(ValueError, match="affinity map"):
+        Router(2, policy="label_affinity")
+    with pytest.raises(ValueError, match="does not cover"):
+        Router(4, affinity=np.ones((2, 3)), policy="label_affinity")
+    r = _affinity_router()
+    with pytest.raises(ValueError, match="pins client"):
+        r.route(ServeRequest(0, image=np.zeros((8, 8, 3)), client_id=7))
+
+
+def test_router_round_robin_spreads_evenly():
+    r = Router(3, policy="round_robin")
+    img = np.zeros((8, 8, 3))
+    got = [r.route(ServeRequest(i, image=img, label_hint=0))
+           for i in range(6)]
+    assert got == [0, 1, 2, 0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# request validation + traffic log
+# ---------------------------------------------------------------------------
+
+def test_request_validation():
+    with pytest.raises(ValueError, match="unknown request kind"):
+        ServeRequest(0, kind="embed").validate()
+    with pytest.raises(ValueError, match="no image"):
+        ServeRequest(0, kind="classify").validate()
+    with pytest.raises(ValueError, match="no window_id"):
+        ServeRequest(0, kind="teacher").validate()
+    with pytest.raises(ValueError, match="1-D token prompt"):
+        ServeRequest(0, kind="generate",
+                     prompt=np.zeros((2, 3), np.int32)).validate()
+    with pytest.raises(ValueError, match="< 1 new token"):
+        ServeRequest(0, kind="generate", prompt=np.zeros(3, np.int32),
+                     max_new_tokens=0).validate()
+
+
+def test_traffic_log():
+    log = TrafficLog()
+    with pytest.raises(ValueError, match="empty"):
+        log.arrays()
+    for _ in range(3):
+        log.log(np.zeros((4, 4, 3), np.float32))
+    assert len(log) == 3
+    assert log.arrays()["images"].shape == (3, 4, 4, 3)
+
+
+# ---------------------------------------------------------------------------
+# ServeSpec
+# ---------------------------------------------------------------------------
+
+def test_serve_spec_json_round_trip():
+    spec = get_preset("serve_loop")
+    clone = ExperimentSpec.from_json(spec.to_json())
+    assert clone == spec
+    assert isinstance(clone.serve, ServeSpec)
+    assert clone.serve.engine_arch == "minitron-4b"
+    # the dict form carries the serve block
+    assert json.loads(spec.to_json())["serve"]["requests"] == \
+        spec.serve.requests
+
+
+@pytest.mark.parametrize("patch, match", [
+    (dict(requests=-1), "requests"),
+    (dict(router="sticky"), "router"),
+    (dict(num_slots=0), "num_slots"),
+    (dict(max_new_tokens=0), "max_new_tokens"),
+    (dict(cache_windows=0), "cache_windows"),
+    (dict(teachers=(0, 9)), "teacher"),
+    (dict(requests=0, feedback_steps=2), "feedback"),
+])
+def test_serve_spec_validation(patch, match):
+    spec = get_preset("serve_loop")
+    spec = dataclasses.replace(spec,
+                               serve=dataclasses.replace(spec.serve,
+                                                         **patch))
+    with pytest.raises(ValueError, match=match):
+        spec.validate()
+
+
+def test_serve_feedback_needs_prediction_wire():
+    spec = get_preset("serve_loop")
+    spec = dataclasses.replace(
+        spec, wire=dataclasses.replace(spec.wire, exchange="params"))
+    with pytest.raises(ValueError, match="prediction"):
+        spec.validate()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: snapshot serving + cache + feedback (slow tier)
+# ---------------------------------------------------------------------------
+
+pytest_slow = pytest.mark.slow
+
+
+@pytest.fixture(scope="module")
+def scenario(tmp_path_factory):
+    """One tiny train→snapshot→serve→feedback run shared by the
+    end-to-end assertions (training dominates; run it once)."""
+    spec = get_preset("serve_loop")
+    spec = dataclasses.replace(
+        spec,
+        train=dataclasses.replace(spec.train, steps=8),
+        serve=dataclasses.replace(spec.serve, requests=9, num_slots=2,
+                                  max_new_tokens=4, cache_windows=2,
+                                  feedback_steps=1))
+    workdir = str(tmp_path_factory.mktemp("serve_scenario"))
+    return run_serve_scenario(spec, workdir)
+
+
+@pytest_slow
+def test_scenario_serves_every_request(scenario):
+    m = scenario.metrics
+    expected = 9 + max(2 * 2, 4)  # stream + generate burst
+    assert len(scenario.responses) == expected
+    assert sum(m[f"served/{k}"]
+               for k in ("classify", "teacher", "generate")) == expected
+    assert m["route/routed"] == m["served/classify"]
+    assert m["engine/completed"] == m["served/generate"]
+    assert m["serve/snapshot_step"] == 8.0
+    assert all(r.tokens for r in scenario.responses
+               if r.kind == "generate")
+
+
+@pytest_slow
+def test_scenario_cache_hits_on_hot_windows(scenario):
+    m = scenario.metrics
+    assert m["cache/hit_rate"] > 0
+    assert m["cache/hits"] + m["cache/misses"] == m["served/teacher"]
+    hits = [r for r in scenario.responses
+            if r.kind == "teacher" and r.cache_hit]
+    misses = {r.request_id: r for r in scenario.responses
+              if r.kind == "teacher" and not r.cache_hit}
+    assert hits and misses
+    # a hit's predictions are byte-identical to the miss that filled the
+    # entry (same window, whole-fleet teacher set)
+    first_miss = min(misses.values(), key=lambda r: r.request_id)
+    h = min(hits, key=lambda r: r.request_id)
+    for k in ("logits", "sample_ids"):
+        assert h.predictions[k].tobytes() == \
+            first_miss.predictions[k].tobytes()
+
+
+@pytest_slow
+def test_snapshot_front_serves_trainer_params(scenario):
+    """The router's loaded params must be exactly what the trained fleet
+    snapshotted — reload from the same directory and compare against
+    what the front serves (the trainer itself has since moved: the
+    feedback steps kept training it)."""
+    from repro.fleet import load_client_params
+
+    front = scenario.front
+    snap_dir = scenario.spec.train.snapshot_dir
+    for cid, bundle in enumerate(front.bundles):
+        like = bundle.init(jax.random.PRNGKey(99))
+        loaded, step = load_client_params(snap_dir, cid, like)
+        assert step == 8
+        assert _tree_equal(loaded, front.params[cid])
+        # ...and the post-feedback trainer params differ: the fleet
+        # really trained on the served traffic after the snapshot
+        trained = scenario.experiment.trainer.clients[cid].params
+        assert not _tree_equal(trained, front.params[cid])
+
+
+@pytest_slow
+def test_scenario_feedback_distills_from_served_traffic(scenario):
+    m = scenario.metrics
+    assert m["feedback/steps"] == 1.0
+    assert m["feedback/distill_steps"] >= 1.0
+    assert m["feedback/wire_bytes"] > 0
+    assert len(scenario.front.traffic) > 0
