@@ -28,6 +28,7 @@ from repro.core import (
     DecentralizedTrainer,
     RunConfig,
     ScheduleConfig,
+    ScoreboardScheduler,
     cycle_graph,
 )
 from repro.models.resnet import resnet_tiny
@@ -87,6 +88,95 @@ def _run_point(scale: BenchScale, data, ticks: int, slow_rate: int,
     }
 
 
+def _make_skew_trainer(scale: BenchScale, data, rates: ScheduleConfig,
+                       steps_fast: int, s_p: int,
+                       aux_heads: int = 2) -> DecentralizedTrainer:
+    arrays, _, part = data
+    K = scale.clients
+    bundles = [build_bundle(resnet_tiny(scale.labels,
+                                        num_aux_heads=aux_heads))
+               for _ in range(K)]
+    opt = make_optimizer(OptimizerConfig(init_lr=scale.lr,
+                                         total_steps=steps_fast,
+                                         grad_clip_norm=scale.grad_clip))
+    mhd = MHDConfig(nu_emb=1.0, nu_aux=1.0, num_aux_heads=aux_heads,
+                    delta=1, pool_size=2, pool_update_every=s_p)
+    return DecentralizedTrainer(
+        bundles, opt, mhd,
+        RunConfig(steps=steps_fast, batch_size=scale.batch_size,
+                  public_batch_size=scale.batch_size, eval_every=0,
+                  seed=scale.seed),
+        arrays, part.client_indices, part.public_indices,
+        cycle_graph(K), scale.labels,
+        exchange="prediction_topk",
+        comm=CommConfig(topk=5, val_dtype="float16", emb_encoding="int8",
+                        horizon=s_p * rates.max_rate))
+
+
+def _run_skew_wall(scale: BenchScale, data, steps_fast: int = 16,
+                   slow_rate: int = 4,
+                   slow_pace_s: float = 4.0) -> Dict[str, float]:
+    """Lockstep vs scoreboard *wall clock* at 4x rate skew with a
+    real-time paced straggler — the throughput half of the out-of-order
+    scheduler's claim (the bitwise-equality half lives in
+    tests/test_scheduler.py). Both policies run the same work: fast
+    clients take ``steps_fast`` local steps, the straggler a quarter of
+    that, and the straggler may not step more often than every
+    ``slow_pace_s`` real seconds. Lock-step turns each straggler pace
+    gap into a fleet-wide stall; the scoreboard overlaps it, so the
+    fast clients' completion wall (their last `Resolve`, read off
+    ``sched.resolved_at``) should come in well under the lock-step
+    wall."""
+    import dataclasses as _dc
+
+    # small batches keep per-step compute well under the straggler's pace
+    # (the quantity under test is scheduling stall, not matmul time), and
+    # a throwaway warmup run eats the jit compile so neither timed policy
+    # pays it
+    scale = _dc.replace(scale, batch_size=min(scale.batch_size, 8))
+    K = scale.clients
+    s_p = max(scale.pool_every // 2, 2)
+    pace = tuple([0.0] * (K - 1) + [float(slow_pace_s)])
+    slow_steps = steps_fast // slow_rate
+
+    warm_rates = ScheduleConfig.uniform(K)
+    warm = AsyncScheduler(
+        _make_skew_trainer(scale, data, warm_rates, steps_fast, s_p),
+        warm_rates)
+    for _ in range(s_p + 1):  # past a pool boundary: distill path compiles
+        warm.tick()
+
+    rates = ScheduleConfig.skewed(K, slow_rate, pace_s=pace)
+    tr_lock = _make_skew_trainer(scale, data, rates, steps_fast, s_p)
+    lock = AsyncScheduler(tr_lock, rates)
+    t0 = time.perf_counter()
+    for _ in range(steps_fast):
+        lock.tick()
+    lock_fast_wall = max(lock.resolved_at[:K - 1]) - t0
+    lock_wall = time.perf_counter() - t0
+
+    rates_sb = ScheduleConfig.skewed(K, slow_rate, pace_s=pace)
+    tr_sb = _make_skew_trainer(scale, data, rates_sb, steps_fast, s_p)
+    sb = ScoreboardScheduler(tr_sb, rates_sb)
+    targets = tuple([steps_fast] * (K - 1) + [slow_steps])
+    t0 = time.perf_counter()
+    sb.run_until_steps(targets)
+    sb_fast_wall = max(sb.resolved_at[:K - 1]) - t0
+    sb_wall = time.perf_counter() - t0
+
+    assert lock.local_steps == sb.local_steps == list(targets)
+    total_steps = sum(targets)
+    return {
+        "lockstep_wall_s": lock_wall,
+        "lockstep_fast_wall_s": lock_fast_wall,
+        "scoreboard_wall_s": sb_wall,
+        "scoreboard_fast_wall_s": sb_fast_wall,
+        "fast_wall_ratio": sb_fast_wall / max(lock_fast_wall, 1e-9),
+        "lockstep_steps_per_sec": total_steps / lock_wall,
+        "scoreboard_steps_per_sec": total_steps / sb_wall,
+    }
+
+
 def _append_bench_rows(rows: List[Dict]) -> None:
     existing: List[Dict] = []
     try:
@@ -126,6 +216,26 @@ def main(scale=None, full: bool = False) -> list:
                 "bytes_per_edge": round(r["bytes_per_edge"], 1),
                 "final_acc": round(r["acc"], 4),
             })
+    # out-of-order scheduling: same work, real-time paced straggler —
+    # lockstep stalls the fleet on every straggler pace gap, the
+    # scoreboard overlaps it (fast-completion wall via resolved_at)
+    w = _run_skew_wall(scale, data)
+    out.append(row(
+        "async/ooo_skew4x", w["scoreboard_fast_wall_s"] * 1e6,
+        f"fast_wall_ratio={w['fast_wall_ratio']:.2f};"
+        f"lockstep_wall={w['lockstep_wall_s']:.2f}s;"
+        f"sb_fast_wall={w['scoreboard_fast_wall_s']:.2f}s"))
+    bench_rows.append({
+        "name": "async/scoreboard_vs_lockstep_skew4x",
+        "slow_rate": 4,
+        "lockstep_wall_s": round(w["lockstep_wall_s"], 3),
+        "lockstep_fast_wall_s": round(w["lockstep_fast_wall_s"], 3),
+        "scoreboard_wall_s": round(w["scoreboard_wall_s"], 3),
+        "scoreboard_fast_wall_s": round(w["scoreboard_fast_wall_s"], 3),
+        "fast_wall_ratio": round(w["fast_wall_ratio"], 3),
+        "lockstep_steps_per_sec": round(w["lockstep_steps_per_sec"], 2),
+        "scoreboard_steps_per_sec": round(w["scoreboard_steps_per_sec"], 2),
+    })
     _append_bench_rows(bench_rows)
     return out
 

@@ -72,6 +72,18 @@ timeout 120 python scripts/run_gossip_procs.py --churn-smoke >/dev/null || {
     exit 1
 }
 
+# scoreboard smoke: 3 processes with schedule.mode="scoreboard" and one
+# heavily throttled straggler (launch/gossip.py GossipPacer). Lock-step
+# would drag every rank to the straggler's wall; the script fails unless
+# the fast ranks' step loops finish < 0.5x the straggler's wall and
+# delivery stays lossless edge-by-edge. ~50s: one warm + a ~40s launch
+# dominated by the straggler's 16 x 2s pacing.
+timeout 180 python scripts/run_gossip_procs.py --scoreboard-smoke \
+    >/dev/null || {
+    echo "check.sh: 3-process scoreboard straggler smoke failed" >&2
+    exit 1
+}
+
 # serve smoke: the bounded serve→distill loop (repro.serve) — train a
 # tiny fleet, snapshot it, serve 8 mixed requests plus generations
 # through the continuous-batching engine, then distill one step from the

@@ -16,6 +16,14 @@ local steps — a genuine wall-clock straggler, not a simulated one.
 finishes without ever distilling from a neighbor, or if the fleet's
 delivered bytes exceed its offered bytes (the meter invariant).
 
+``--scoreboard-smoke`` is the out-of-order scheduling CI configuration:
+a 3-process ring with ``schedule.mode="scoreboard"`` and one heavily
+throttled wall-clock straggler. Lock-step would drag every rank down
+to the straggler's wall clock; the smoke exits non-zero unless the
+fast ranks finish in well under that bound (< 0.5× the straggler's
+step-loop wall) and localhost delivery is lossless (delivered ==
+offered on every edge).
+
 ``--churn-smoke`` is the elastic-fleet CI configuration (repro.fleet):
 a 3-process ring with per-rank fleet snapshots and
 ``init_scheme="per_client"`` where rank 1 is crashed mid-run
@@ -68,6 +76,10 @@ def main(argv=None) -> int:
     p.add_argument("--churn-smoke", action="store_true",
                    help="bounded CI config: 3-process kill-and-restore "
                         "(crash rank 1, resume the fleet from snapshots)")
+    p.add_argument("--scoreboard-smoke", action="store_true",
+                   help="bounded CI config: 3-process scoreboard run with "
+                        "a 4x-paced straggler; fast ranks must beat the "
+                        "lock-step bound")
     p.add_argument("--out", metavar="PATH",
                    help="write per-rank results + fleet summary JSON")
     p.add_argument("--trace-dir", metavar="DIR",
@@ -82,6 +94,8 @@ def main(argv=None) -> int:
 
     if args.churn_smoke:
         return churn_smoke()
+    if args.scoreboard_smoke:
+        return scoreboard_smoke()
 
     if args.spec:
         with open(args.spec) as f:
@@ -255,6 +269,94 @@ def _warm_jit_cache(spec) -> None:
     t0 = time.monotonic()
     Experiment(warm).run()
     print(f"jit cache warmed in {time.monotonic() - t0:.1f}s")
+
+
+def scoreboard_smoke(straggler: int = 2) -> int:
+    """The out-of-order scheduling win over real processes: a 3-process
+    ring where one rank is heavily throttled, gated by per-child
+    `GossipPacer`s (``schedule.mode="scoreboard"``). Lock-step would
+    drag every rank down to the straggler's wall clock; here the fast
+    ranks must finish their step loops in < 0.5× the straggler's wall
+    while the run-ahead credit (backpressure) keeps their teachers
+    inside the staleness window — and lossless localhost delivery must
+    still hold edge by edge."""
+    from repro.exp import ExperimentSpec, ScheduleSpec, get_preset
+    from repro.launch.gossip import (delivery_gaps, fleet_summary,
+                                     launch_gossip)
+
+    # the straggler's pace must dominate per-step compute even on a
+    # 1-core CI box where all three children contend for the same CPU
+    # (compute serializes; only *sleep* can be overlapped) — 2 s/step
+    # makes the straggler's wall mostly pace, which the fast ranks are
+    # free to overlap
+    slow_pace_ms = 2000.0
+    spec = get_preset("gossip_socket")
+    spec = dataclasses.replace(
+        spec,
+        name="scoreboard_smoke",
+        clients=ExperimentSpec.uniform_fleet(
+            3, arch=spec.clients[0].arch, aux_heads=spec.clients[0].aux_heads,
+            width=spec.clients[0].width),
+        # runahead > the straggler's publish gap (pool_update_every=5) so
+        # the gate releases on its first publish rather than deadlocking,
+        # but < steps so it can engage mid-run
+        schedule=ScheduleSpec(mode="scoreboard", runahead=12,
+                              pace_ms=(0.0, 0.0, slow_pace_ms)),
+        train=dataclasses.replace(spec.train, steps=16))
+    spec.validate()
+    os.environ.setdefault(
+        "JAX_COMPILATION_CACHE_DIR",
+        os.path.join(tempfile.gettempdir(), "repro_jit_cache"))
+    # warm with a sync schedule: the jitted computations are identical,
+    # and the warm run needs no pacer
+    _warm_jit_cache(dataclasses.replace(spec, schedule=ScheduleSpec()))
+
+    print(f"scoreboard smoke: 3 processes, rank {straggler} throttled to "
+          f"{slow_pace_ms:.0f} ms/step, runahead {spec.schedule.runahead}")
+    results = launch_gossip(spec, timeout=120.0)
+    fleet = fleet_summary(results)
+    for rank in sorted(results):
+        r = results[rank]
+        sched = r.get("sched") or {}
+        print(f"  client {rank}: {r['steps']} steps in "
+              f"{r['wall_seconds']:.2f}s, distilled on "
+              f"{r['distill_steps']}/{r['steps']} steps, backpressure "
+              f"{sched.get('backpressure_s', 0.0):.2f}s over "
+              f"{sched.get('backpressure_events', 0):.0f} waits")
+
+    fast_wall = max(r["wall_seconds"] for rank, r in results.items()
+                    if rank != straggler)
+    slow_wall = results[straggler]["wall_seconds"]
+    ok = True
+    if fast_wall >= 0.5 * slow_wall:
+        print(f"FAIL: fast ranks took {fast_wall:.2f}s against the "
+              f"straggler's {slow_wall:.2f}s — no better than the "
+              f"lock-step bound", file=sys.stderr)
+        ok = False
+    # the run-ahead credit is timing-dependent on a loaded CI box (the
+    # straggler's publish can land just before the fast ranks hit the
+    # gate), so backpressure is reported, not asserted — the in-process
+    # test_runahead_backpressure_gates_and_releases owns that invariant
+    print(f"fleet backpressure: {fleet['backpressure_seconds']:.2f}s over "
+          f"{fleet['backpressure_events']:.0f} waits")
+    if fleet["distill_steps_min"] < 1:
+        print("FAIL: a client never distilled from a neighbor",
+              file=sys.stderr)
+        ok = False
+    if fleet["failed_sends"] == 0 and \
+            not any(r.get("tombstoned_bytes", 0) for r in results.values()):
+        gaps = delivery_gaps(results)
+        if gaps:
+            print("FAIL: delivered != offered on lossless localhost: "
+                  + "; ".join(f"edge {e}: {d}/{o} B"
+                              for e, (o, d) in sorted(gaps.items())),
+                  file=sys.stderr)
+            ok = False
+    if ok:
+        print(f"scoreboard ok: fast wall {fast_wall:.2f}s < 0.5 x "
+              f"straggler {slow_wall:.2f}s, delivered == offered on "
+              f"every edge")
+    return 0 if ok else 1
 
 
 def churn_smoke(crash_rank: int = 1, crash_step: int = 5) -> int:

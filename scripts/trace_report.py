@@ -31,7 +31,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
 
 def print_report(data, top: int = 10) -> None:
     from repro.obs.metrics import (PHASE_ORDER, flow_coverage,
-                                   phase_attribution, stall_spans)
+                                   phase_attribution, stall_attribution,
+                                   stall_spans)
 
     events = data.get("traceEvents", [])
     phases = phase_attribution(events)
@@ -60,6 +61,19 @@ def print_report(data, top: int = 10) -> None:
             print(f"  rank {s['rank']}: {s['name']:<22} "
                   f"{s['dur_s']:>8.3f}s at t={s['start_s']:.3f}s"
                   f"{'  ' + args if args else ''}")
+
+    # scheduler stall attribution: every wait, grouped by span x the op
+    # (or reason) it was gating — which op class paid the scoreboard's
+    # waiting, not just the longest individual spans above
+    by_op = stall_attribution(events)
+    if by_op:
+        print("\nscheduler stall attribution (all spans, by op):")
+        print(f"  {'span':<22}{'op':<14}{'count':>7}{'total_s':>10}"
+              f"{'max_s':>9}")
+        for row in by_op:
+            print(f"  {row['name']:<22}{row['op']:<14}"
+                  f"{row['count']:>7.0f}{row['total_s']:>10.3f}"
+                  f"{row['max_s']:>9.3f}")
 
     cov = flow_coverage(events)
     if cov["flow_starts"] or cov["flow_ends"]:

@@ -16,7 +16,14 @@ from repro.core.graph import (
     graph_distance_matrix,
 )
 from repro.core.runtime import DecentralizedTrainer, RunConfig
-from repro.core.scheduler import AsyncScheduler, ScheduleConfig, run_async
+from repro.core.scheduler import (
+    AsyncScheduler,
+    GossipPacer,
+    ScheduleConfig,
+    Scoreboard,
+    ScoreboardScheduler,
+    run_async,
+)
 from repro.core.evaluation import (
     fleet_beta_metrics,
     label_histogram,
@@ -41,7 +48,10 @@ __all__ = [
     "DecentralizedTrainer",
     "RunConfig",
     "AsyncScheduler",
+    "GossipPacer",
     "ScheduleConfig",
+    "Scoreboard",
+    "ScoreboardScheduler",
     "run_async",
     "fleet_beta_metrics",
     "label_histogram",

@@ -4,9 +4,17 @@ Deployment model (DESIGN.md §4): K clients co-train, client k living on pod
 k — its parameters and private batch are sharded (data, model) *within* the
 pod and stacked along a leading client dim that is sharded over 'pod'.
 Every step each client scores the shared public batch; teacher predictions
-move between pods with a ring shift of the client dim (XLA lowers
-``jnp.roll`` over a pod-sharded axis to ``collective-permute`` across the
-pod interconnect — the paper's Fig. 1 exchange as an actual collective).
+move between pods along the same adjacency contract the host loop's
+`repro.comm.bus.PredictionBus` uses — ``adj[i]`` names client i's
+in-neighbors (`DistributedMHDConfig.neighbors`; None = the 1-hop ring).
+Topology is no longer welded to the collective choice: a uniform ring
+offset lowers to ``jnp.roll`` over the pod-sharded client dim (XLA emits
+``collective-permute`` across the pod interconnect — the paper's Fig. 1
+exchange as an actual collective), and any other one-teacher-per-client
+permutation lowers to a gather (``jnp.take`` along the client dim). The
+same graph that drives the host-loop bus can therefore drive the pod
+fleet; see ``docs/async_runtime.md`` for how the scoreboard runtime uses
+that shared adjacency on the host side.
 
 Wire formats (the §Perf lever measured in EXPERIMENTS.md):
   * ``exchange="full"`` — ship full-vocab teacher logits (+ embeddings):
@@ -28,7 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,10 +53,19 @@ from repro.models.zoo import ModelBundle
 
 @dataclasses.dataclass(frozen=True)
 class DistributedMHDConfig:
+    """Pod-fleet shape + wire format.
+
+    ``neighbors`` is the bus-style adjacency (``adj[i]`` = client i's
+    in-neighbors, the same contract as `PredictionBus.graph_fn`'s
+    output) restricted to exactly one teacher per client — the pod
+    runtime is the Δ=1 fused path. ``None`` keeps the historical 1-hop
+    ring (client i distills from client i-1 mod K)."""
+
     num_clients: int = 2  # = number of pods
     exchange: str = "full"  # "full" | "topk"
     topk: int = 32
     max_public_positions: int = 0  # cap distilled positions (0 = all)
+    neighbors: Optional[Tuple[Tuple[int, ...], ...]] = None
 
 
 def _lm_outputs(bundle: ModelBundle, params, tokens, max_positions: int):
@@ -62,6 +79,45 @@ def _roll_clients(tree, shift: int = 1):
     """Ring exchange across the client (pod) dim — lowers to
     collective-permute when dim 0 is sharded over 'pod'."""
     return jax.tree.map(lambda x: jnp.roll(x, shift, axis=0), tree)
+
+
+def _teacher_sources(dist: DistributedMHDConfig) -> List[int]:
+    """Resolve the adjacency to ``src[i]`` = the client whose prediction
+    client i distills from, validating the Δ=1 contract."""
+    K = dist.num_clients
+    if dist.neighbors is None:
+        return [(i - 1) % K for i in range(K)]
+    if len(dist.neighbors) != K:
+        raise ValueError(
+            f"{len(dist.neighbors)} neighbor rows for {K} clients")
+    srcs = []
+    for i, nbrs in enumerate(dist.neighbors):
+        if len(nbrs) != 1:
+            raise ValueError(
+                f"client {i} has {len(nbrs)} in-neighbors; the pod "
+                "runtime is the fused Δ=1 path — exactly one teacher "
+                "per client (use the host-loop runtime for wider "
+                "distillation neighborhoods)")
+        j = int(nbrs[0])
+        if not 0 <= j < K or j == i:
+            raise ValueError(f"client {i} names teacher {j}, not a "
+                             f"distinct client in [0, {K})")
+        srcs.append(j)
+    return srcs
+
+
+def _exchange_teachers(tree, dist: DistributedMHDConfig):
+    """Move each teacher's packed prediction to its student along the
+    bus adjacency. A uniform ring offset keeps the ``jnp.roll`` lowering
+    (collective-permute over a pod-sharded dim 0); any other permutation
+    lowers to a client-dim gather."""
+    K = dist.num_clients
+    srcs = _teacher_sources(dist)
+    for shift in range(1, K):
+        if all(srcs[i] == (i - shift) % K for i in range(K)):
+            return _roll_clients(tree, shift)
+    idx = jnp.asarray(srcs)
+    return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), tree)
 
 
 def _c(x, *axes):
@@ -204,7 +260,7 @@ def make_distributed_mhd_step(bundle: ModelBundle, optimizer,
                 wire = _topk_pack(frozen, dist.topk)
             else:
                 wire = frozen
-            teachers = _roll_clients(wire, 1)
+            teachers = _exchange_teachers(wire, dist)
 
             dist_loss = jnp.mean(jax.vmap(
                 lambda s, t: _distill_loss_one_client(s, t, mhd,

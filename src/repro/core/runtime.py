@@ -35,12 +35,14 @@ mail) fall back to a supervised-only step — every topology in
 Stepping models:
   * ``step(t)`` — the synchronous loop: every client takes one step at
     every global step t, pools refresh on the shared S_P cadence.
-  * `core/scheduler.AsyncScheduler` — per-client logical clocks over a
-    shared *wall clock*; drives the same per-client primitives exposed
-    here (``step_client``, ``_publish_clients``, ``_pull_client``,
-    ``_comm_tick``) on heterogeneous cadences. The synchronous loop is
-    the equal-rates special case, and the scheduler reproduces it
-    bitwise (tests/test_scheduler.py).
+  * `core/scheduler` — the dependency-scoreboard runtime: each client's
+    progress decomposes into LocalStep / Publish / Pull / Resolve ops
+    issued against the op-granular entry points exposed here
+    (``step_client(defer=True)``, ``publish_clients``, ``pull_client``,
+    ``comm_pump``) on heterogeneous cadences, in lockstep
+    (`AsyncScheduler`) or out of order (`ScoreboardScheduler`). The
+    synchronous loop is the equal-rates special case, and both policies
+    reproduce it bitwise (tests/test_scheduler.py).
 
 Bounded staleness (``RunConfig.max_staleness``): when set, a sampled
 teacher older than ``max_staleness`` steps (entry timestamp vs the
@@ -403,6 +405,34 @@ class DecentralizedTrainer:
         if self.exchange != "params":
             self.bus.deliver(step)
             self._resolve_pending(step)
+
+    # -- op-granular entry points (core/scheduler.py) ----------------------
+    # The scoreboard scheduler decomposes a client's progress into
+    # LocalStep / Publish / Pull / Resolve operations and issues them
+    # independently; these are the public per-op surfaces it drives.
+    # `step_client(defer=True)` below is the LocalStep+Resolve pair.
+
+    def comm_pump(self, step: int) -> None:
+        """The transport pump op: deliver in-flight mail at wall tick
+        ``step`` and complete late pulls (`_resolve_pending`). Safe to
+        call once per wall tick in any interleaving; a no-op in the
+        legacy params mode."""
+        self._comm_tick(step)
+
+    def publish_clients(self, client_ids: Sequence[int],
+                        step: int) -> int:
+        """The Publish op for a group of clients: encode each one's
+        prediction window over the next ``horizon`` public batches and
+        put it on the bus. Grouped so co-boundary publishers share the
+        batch materialization; delivery is the pump's job. Returns the
+        number of clients that had a receiver under G_t."""
+        return self._publish_clients(list(client_ids), step)
+
+    def pull_client(self, client_id: int, step: int,
+                    adj: Optional[Adjacency] = None) -> None:
+        """The Pull op: one pool-refresh pull for one client (shared-rng
+        neighbor draw; see `_pull_client` for the ordering contract)."""
+        self._pull_client(self.clients[client_id], step, adj)
 
     def _pull_client(self, client: ClientState, step: int,
                      adj: Optional[Adjacency] = None) -> None:

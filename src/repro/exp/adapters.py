@@ -5,7 +5,8 @@ Each adapter translates spec blocks into one concrete trainer's
 constructor and forwards the step/evaluate/save surface:
 
   mhd         -> `core.runtime.DecentralizedTrainer` (sync) or the same
-                 trainer driven by `core.scheduler.AsyncScheduler` (async)
+                 trainer driven by `core.scheduler.AsyncScheduler`
+                 (lockstep) / `ScoreboardScheduler` (out-of-order)
   fedmd       -> `core.fedmd.FedMDTrainer` (central consensus server)
   fedavg      -> `core.fedavg.FedAvgTrainer` (weight averaging)
   supervised  -> `core.supervised.SupervisedTrainer` (pooled | separate)
@@ -103,8 +104,10 @@ class _AdapterBase:
 
 @ALGORITHMS.register("mhd")
 class MHDAdapter(_AdapterBase):
-    """The paper's Multi-Headed Distillation runtime. Async schedules wrap
-    the trainer in `AsyncScheduler`; ``step(t)`` is then one wall tick."""
+    """The paper's Multi-Headed Distillation runtime. Non-sync schedules
+    wrap the trainer in a scheduler — `AsyncScheduler` for lockstep,
+    `ScoreboardScheduler` for out-of-order issue; ``step(t)`` is then one
+    wall tick."""
 
     name = "mhd"
     capabilities = Capabilities(needs_public_pool=True, supports_async=True,
@@ -140,7 +143,8 @@ class MHDAdapter(_AdapterBase):
 
     def setup(self, bindings: Bindings) -> None:
         from repro.core import (AsyncScheduler, DecentralizedTrainer,
-                                RunConfig, ScheduleConfig)
+                                RunConfig, ScheduleConfig,
+                                ScoreboardScheduler)
 
         spec = self.spec
         mhd_cfg = MHDConfig(**self.params)
@@ -175,11 +179,19 @@ class MHDAdapter(_AdapterBase):
             comm=comm_cfg, transport=bindings.transport,
             local_clients=bindings.local_clients,
             init_scheme=spec.init_scheme, membership=self.membership)
-        if spec.schedule.mode == "async":
+        if spec.schedule.mode != "sync":
             rates = spec.schedule.rates or \
                 tuple([1] * len(bindings.bundles))
-            self.scheduler = AsyncScheduler(self.trainer,
-                                            ScheduleConfig(tuple(rates)))
+            pace = None
+            if spec.schedule.pace_ms is not None:
+                pace = tuple(p / 1000.0 for p in spec.schedule.pace_ms)
+            cfg = ScheduleConfig(tuple(rates),
+                                 runahead=spec.schedule.runahead,
+                                 pace_s=pace)
+            cls = (ScoreboardScheduler
+                   if spec.schedule.mode == "scoreboard"
+                   else AsyncScheduler)
+            self.scheduler = cls(self.trainer, cfg)
         if spec.churn.events:
             from repro.fleet import ChurnDriver
 

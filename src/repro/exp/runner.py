@@ -185,9 +185,10 @@ class Experiment:
             raise ValueError(
                 f"algorithm {algo.name!r} distills on the public pool; "
                 "partition.gamma_pub must be > 0")
-        if spec.schedule.mode == "async" and not caps.supports_async:
+        if spec.schedule.mode != "sync" and not caps.supports_async:
             raise ValueError(
-                f"algorithm {algo.name!r} does not support async schedules")
+                f"algorithm {algo.name!r} does not support async "
+                "(lockstep/scoreboard) schedules")
         if len(set(spec.clients)) > 1 and not caps.heterogeneous_clients:
             raise ValueError(
                 f"algorithm {algo.name!r} needs an identical-architecture "

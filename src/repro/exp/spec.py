@@ -3,8 +3,8 @@ decentralized-learning experiment.
 
 A spec says *what* to run — data + partition protocol, the client fleet
 (per-client architectures), the algorithm and its config, communication
-topology, schedule (sync or per-client async rates), transport + wire
-format, optimizer, and the train/eval cadence — and `repro.exp.runner`
+topology, schedule (sync, lockstep, or out-of-order scoreboard), transport
++ wire format, optimizer, and the train/eval cadence — and `repro.exp.runner`
 says *how*. Every block is a frozen dataclass; ``to_json``/``from_json``
 round-trip exactly (asserted in tests), so a spec file is a complete,
 shareable record of an experiment and new scenarios are spec edits, not
@@ -172,15 +172,25 @@ class TopologySpec:
 
 @dataclasses.dataclass(frozen=True)
 class ScheduleSpec:
-    """Stepping model: lockstep or per-client async rates.
+    """Stepping model: the synchronous loop or the scoreboard runtime.
 
-    ``mode="async"`` drives the algorithm with per-client logical clocks
-    (`core/scheduler.AsyncScheduler`); ``train.steps`` then counts wall
-    ticks. ``rates[i]`` is wall ticks per local step of client i
-    (None = uniform 1×)."""
+    ``mode="lockstep"`` drives the algorithm with per-client logical
+    clocks in strict wall-tick order (`core/scheduler.AsyncScheduler`;
+    ``"async"`` is the historical alias), ``mode="scoreboard"`` issues
+    each client's LocalStep/Publish/Pull/Resolve ops the moment their
+    dependencies are satisfied (`core/scheduler.ScoreboardScheduler`).
+    ``train.steps`` then counts wall ticks. ``rates[i]`` is wall ticks
+    per local step of client i (None = uniform 1×).
 
-    mode: str = "sync"  # "sync" | "async"
+    Scoreboard-only knobs: ``runahead`` bounds how many wall ticks a
+    client may advance past its slowest in-neighbor before backpressure
+    stalls it (None = unbounded); ``pace_ms[i]`` is client i's minimum
+    real milliseconds between local steps (None = unpaced)."""
+
+    mode: str = "sync"  # "sync" | "lockstep" (alias "async") | "scoreboard"
     rates: Optional[Tuple[int, ...]] = None
+    runahead: Optional[int] = None
+    pace_ms: Optional[Tuple[float, ...]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -394,17 +404,7 @@ class ExperimentSpec:
                 raise ValueError(
                     f"unknown client arch {c.arch!r}; "
                     f"known: {CLIENT_ARCHS.names()}")
-        if self.schedule.mode not in ("sync", "async"):
-            raise ValueError(f"unknown schedule mode {self.schedule.mode!r}")
-        if self.schedule.rates is not None and \
-                len(self.schedule.rates) != self.num_clients:
-            raise ValueError(
-                f"{len(self.schedule.rates)} schedule rates for "
-                f"{self.num_clients} clients")
-        if self.schedule.mode == "sync" and self.schedule.rates is not None:
-            raise ValueError(
-                "schedule.rates only applies to mode='async'; a sync run "
-                "would silently ignore them")
+        self._validate_schedule()
         if self.transport.kind not in TRANSPORTS:
             raise ValueError(f"unknown transport kind "
                              f"{self.transport.kind!r}; "
@@ -442,6 +442,51 @@ class ExperimentSpec:
         self._validate_churn()
         self._validate_serve()
         return self
+
+    def _validate_schedule(self) -> None:
+        s = self.schedule
+        if s.mode not in ("sync", "async", "lockstep", "scoreboard"):
+            raise ValueError(f"unknown schedule mode {s.mode!r}")
+        if s.rates is not None and len(s.rates) != self.num_clients:
+            raise ValueError(
+                f"{len(s.rates)} schedule rates for "
+                f"{self.num_clients} clients")
+        if s.mode == "sync":
+            for knob in ("rates", "runahead", "pace_ms"):
+                if getattr(s, knob) is not None:
+                    raise ValueError(
+                        f"schedule.{knob} only applies to the scheduler "
+                        "modes; a sync run would silently ignore it")
+            return
+        if s.rates is not None and any(int(r) < 1 for r in s.rates):
+            raise ValueError("schedule.rates must be >= 1")
+        if s.runahead is not None and int(s.runahead) < 1:
+            raise ValueError("schedule.runahead must be >= 1 wall tick")
+        if s.pace_ms is not None:
+            if len(s.pace_ms) != self.num_clients:
+                raise ValueError(
+                    f"{len(s.pace_ms)} schedule pace_ms for "
+                    f"{self.num_clients} clients")
+            if any(float(p) < 0 for p in s.pace_ms):
+                raise ValueError("schedule.pace_ms must be >= 0")
+        # Horizon-vs-publish-gap: a rate-r client only reaches its next
+        # pool boundary every r*S_P wall ticks, so prediction mailboxes
+        # must survive at least that long or a straggler's neighbors
+        # read nothing between its publishes.
+        if self.algorithm.name == "mhd" and \
+                self.wire.exchange in ("prediction_topk",
+                                       "prediction_dense"):
+            s_p = int(self.algorithm.params.get("pool_update_every", 200))
+            horizon = int(self.wire.horizon) or s_p
+            max_rate = max(int(r) for r in s.rates) if s.rates else 1
+            if horizon < max_rate * s_p:
+                raise ValueError(
+                    f"wire.horizon={horizon} is shorter than the slowest "
+                    f"client's publish gap (max rate {max_rate} x "
+                    f"pool_update_every {s_p} = {max_rate * s_p} wall "
+                    "ticks); its mailboxes would expire before neighbors "
+                    "read them — raise wire.horizon or lower the rate "
+                    "skew")
 
     def _validate_serve(self) -> None:
         s = self.serve
@@ -526,6 +571,8 @@ def _build(cls, d: Any) -> Any:
     kwargs = dict(d)
     if cls is ScheduleSpec and kwargs.get("rates") is not None:
         kwargs["rates"] = tuple(int(r) for r in kwargs["rates"])
+    if cls is ScheduleSpec and kwargs.get("pace_ms") is not None:
+        kwargs["pace_ms"] = tuple(float(p) for p in kwargs["pace_ms"])
     if cls is TransportSpec and kwargs.get("client_rates") is not None:
         kwargs["client_rates"] = {int(k): int(v)
                                   for k, v in kwargs["client_rates"].items()}

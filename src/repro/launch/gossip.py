@@ -23,6 +23,17 @@ Each child:
      wall-clock speed differences between processes (``throttle_ms``
      makes a deliberate straggler), not simulation ticks.
 
+With ``schedule.mode == "scoreboard"`` each child additionally gates
+every local step through a `core.scheduler.GossipPacer` — the
+per-process reduction of the scoreboard runtime: ``schedule.pace_ms``
+replaces the post-step throttle sleep (a paced client sleeps *before*
+issuing, so transport drains overlap the wait), and ``schedule.runahead``
+is the backpressure credit — a child more than that many local steps
+ahead of its slowest in-neighbor's freshest mail waits, pumping the
+socket, instead of racing ahead against ever-staler teachers. Fast ranks
+never block on a straggler's *tick* (there is no global tick), only on
+its published progress. See ``docs/async_runtime.md``.
+
 Every child reports its metrics (loss, distillation activity, offered /
 delivered meter books) through a pipe; the launcher aggregates them.
 A *finish* barrier keeps every child draining its socket through the bus
@@ -50,6 +61,7 @@ the hard timeout.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import multiprocessing as mp
 import os
 import tempfile
@@ -84,6 +96,15 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
 
     t_start = time.perf_counter()
     spec = ExperimentSpec.from_json(spec_json).validate()
+    sched = spec.schedule
+    if sched.mode == "scoreboard":
+        # the child's trainer hosts a single client, so the fleet-wide
+        # scoreboard reduces to a per-process GossipPacer (built below);
+        # neutralize the schedule block so the adapter does not wrap the
+        # trainer in an in-process scheduler on top of it
+        from repro.exp.spec import ScheduleSpec
+
+        spec = dataclasses.replace(spec, schedule=ScheduleSpec())
     trace_dir = spec.train.trace_dir
     tracer = None
     if trace_dir:
@@ -121,6 +142,14 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
     algo.setup(bindings)
     trainer = algo.trainer
 
+    pacer = None
+    if sched.mode == "scoreboard":
+        from repro.core import GossipPacer
+
+        pace_ms = sched.pace_ms[rank] if sched.pace_ms else 0.0
+        pacer = GossipPacer(trainer, rank, runahead=sched.runahead,
+                            pace_s=pace_ms / 1000.0)
+
     snap_dir = spec.train.snapshot_dir
     snap_every = spec.train.snapshot_every
     start_step = 0
@@ -129,7 +158,7 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
 
         try:
             # this rank's own slice: proc_r{rank} + client_{rank} files
-            start_step = restore_fleet(snap_dir, trainer)
+            start_step = restore_fleet(snap_dir, trainer, scheduler=pacer)
         except FileNotFoundError:
             start_step = 0  # never snapshotted: a fresh start
 
@@ -143,12 +172,14 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
     for t in range(start_step, spec.train.steps):
         if die_at is not None and t == die_at:
             os._exit(17)  # injected crash: no cleanup, no report
+        if pacer is not None:
+            pacer.gate(t)
         last = trainer.step(t)
         distill_steps += int(last.get(f"c{rank}/distill_active", 0.0))
         if snap_dir and snap_every and (t + 1) % snap_every == 0:
             from repro.fleet.snapshot import save_fleet
 
-            save_fleet(snap_dir, t + 1, trainer)
+            save_fleet(snap_dir, t + 1, trainer, scheduler=pacer)
         if throttle_ms:
             time.sleep(throttle_ms / 1000.0)
     wall = time.perf_counter() - t0
@@ -232,6 +263,8 @@ def _child_run(spec_json: str, rank: int, conn, throttle_ms: float,
         "failed_sends": transport.failed_sends,
         "drain_stalls": transport.drain_stalls,
         "undrained_bytes": transport.undrained_bytes,
+        "sched": (None if pacer is None
+                  else {k: float(v) for k, v in pacer.stats.items()}),
         "trace_file": trace_file,
     }))
     conn.recv()  # "done": every result is in; sockets may now close
@@ -345,13 +378,20 @@ def launch_gossip(spec, timeout: float = 300.0,
         raise ValueError(
             f"launch_gossip needs transport kind 'socket', got "
             f"{spec.transport.kind!r}")
-    if spec.schedule.mode != "sync":
+    if spec.schedule.mode not in ("sync", "scoreboard"):
         raise ValueError(
-            "launch_gossip drives each client's own local loop — step "
-            "rates are real wall-clock differences between processes, "
-            "not ScheduleSpec rates, which a multi-process run would "
-            "silently ignore; use schedule mode 'sync' and throttle_ms "
-            "for deliberate stragglers")
+            "launch_gossip drives each client's own local loop at real "
+            "wall-clock speed — the simulated-tick modes (async/lockstep) "
+            "would be silently ignored by a multi-process run; use mode "
+            "'sync' (optionally "
+            "throttle_ms for deliberate stragglers) or 'scoreboard' "
+            "(pace_ms + runahead drive a per-process GossipPacer)")
+    if spec.schedule.mode == "scoreboard" and \
+            spec.schedule.rates is not None:
+        raise ValueError(
+            "schedule.rates are simulation wall ticks; a multi-process "
+            "scoreboard run paces with real milliseconds — use "
+            "schedule.pace_ms")
     throttle = {int(k): float(v) for k, v in (throttle_ms or {}).items()}
     crash = {int(k): int(v) for k, v in (die_at or {}).items()}
     K = spec.num_clients
@@ -528,6 +568,12 @@ def fleet_summary(results: Dict[int, Dict[str, Any]]) -> Dict[str, float]:
         "drain_stalls": sum(r.get("drain_stalls", 0) for r in vals),
         "undrained_bytes": sum(r.get("undrained_bytes", 0) for r in vals),
         "mismatched_edges": float(len(delivery_gaps(results))),
+        "backpressure_events": sum(
+            (r.get("sched") or {}).get("backpressure_events", 0.0)
+            for r in vals),
+        "backpressure_seconds": sum(
+            (r.get("sched") or {}).get("backpressure_s", 0.0)
+            for r in vals),
         "wall_seconds_max": max(r["wall_seconds"] for r in vals),
         # launcher-overhead breakdown (absent in pre-obs result dicts)
         "setup_seconds_max": max(r.get("setup_s", 0.0) for r in vals),

@@ -56,6 +56,9 @@ PHASE_OF = {
     "runtime/step": "step_other",
     "runtime/resolve": "step_other",
     "sched/tick": "step_other",
+    # scoreboard stalls: pace/idle waits and run-ahead backpressure
+    "sched/wait": "sched_stall",
+    "sched/backpressure": "sched_stall",
     # serving phases (repro.serve): routing decision, fused prompt
     # prefill, vmapped decode tick, teacher-cache lookup+compute; the
     # classify forward is the decode-equivalent serving compute
@@ -66,14 +69,15 @@ PHASE_OF = {
     "serve/cache": "cache",
 }
 
-PHASE_ORDER = ["distill", "encode", "wire", "drain_wait", "barrier",
-               "setup", "step_other", "route", "prefill", "decode",
-               "cache", "other", "idle"]
+PHASE_ORDER = ["distill", "encode", "wire", "drain_wait", "sched_stall",
+               "barrier", "setup", "step_other", "route", "prefill",
+               "decode", "cache", "other", "idle"]
 
 # spans that are *waits*, not work — what the stall report ranks
 STALL_NAMES = frozenset({
     "socket/drain_wait", "socket/connect",
     "gossip/rendezvous", "gossip/finish_barrier",
+    "sched/wait", "sched/backpressure",
 })
 
 
@@ -161,6 +165,32 @@ def stall_spans(chrome_events: List[Dict[str, Any]],
              "start_s": ev["ts"] / 1e6, "dur_s": ev["dur"] / 1e6,
              "args": ev.get("args", {})}
             for ev in stalls[:top]]
+
+
+def stall_attribution(chrome_events: List[Dict[str, Any]],
+                      prefix: str = "sched/") -> List[Dict[str, Any]]:
+    """Aggregate *scheduler* stall spans by (span name, gated op):
+    count, total and max seconds per group, largest total first. The
+    ``op`` key is the span's ``op`` arg (``sched/backpressure`` records
+    which op class the run-ahead credit held back) falling back to
+    ``reason`` (``sched/wait`` records why the issue loop slept) — the
+    per-op answer to "what did the scoreboard's waiting pay for"."""
+    groups: Dict[tuple, Dict[str, float]] = {}
+    for ev in chrome_events:
+        if ev.get("ph") != "X" or not ev["name"].startswith(prefix) \
+                or ev["name"] not in STALL_NAMES:
+            continue
+        args = ev.get("args", {})
+        op = str(args.get("op") or args.get("reason") or "?")
+        g = groups.setdefault((ev["name"], op),
+                              {"count": 0.0, "total_s": 0.0, "max_s": 0.0})
+        dur = ev["dur"] / 1e6
+        g["count"] += 1
+        g["total_s"] += dur
+        g["max_s"] = max(g["max_s"], dur)
+    return [{"name": name, "op": op, **g}
+            for (name, op), g in sorted(groups.items(),
+                                        key=lambda kv: -kv[1]["total_s"])]
 
 
 def flow_coverage(chrome_events: List[Dict[str, Any]]) -> Dict[str, float]:

@@ -110,6 +110,49 @@ def test_spec_rejects_unknown_fields_and_values():
                                         rates=(1, 1, 1))).validate()
 
 
+def test_spec_rejects_short_horizon_for_skewed_prediction_exchange():
+    """Satellite (ISSUE 9): the horizon-vs-publish-gap coverage hole is
+    rejected at spec time for prediction exchanges — a 4× straggler only
+    publishes every ``max_rate * pool_update_every`` wall ticks, so
+    shorter-lived mailboxes expire before its neighbors read them.
+    Direct `AsyncScheduler` construction keeps the softer runtime
+    warning (tests/test_scheduler.py)."""
+    import dataclasses
+
+    def spec(horizon):
+        base = tiny_spec("mhd", {"pool_update_every": 4},
+                         schedule=ScheduleSpec(mode="async", rates=(1, 4)))
+        return dataclasses.replace(
+            base,
+            transport=TransportSpec(kind="simulated"),
+            wire=WireSpec(exchange="prediction_topk", topk=4,
+                          horizon=horizon))
+
+    with pytest.raises(ValueError, match="publish gap"):
+        spec(horizon=8).validate()  # < 4 * 4
+    spec(horizon=16).validate()  # exactly covers the straggler's gap
+    # wire.horizon=0 means auto (= S_P), which a 4x straggler outruns
+    with pytest.raises(ValueError, match="publish gap"):
+        spec(horizon=0).validate()
+
+
+def test_schedule_spec_scoreboard_knobs_validate():
+    sb = ScheduleSpec(mode="scoreboard", rates=(1, 4), runahead=8,
+                      pace_ms=(0.0, 40.0))
+    tiny_spec(schedule=sb).validate()
+    with pytest.raises(ValueError, match="pace_ms"):
+        tiny_spec(schedule=ScheduleSpec(
+            mode="scoreboard", pace_ms=(1.0,))).validate()
+    with pytest.raises(ValueError, match="runahead"):
+        tiny_spec(schedule=ScheduleSpec(
+            mode="scoreboard", runahead=0)).validate()
+    with pytest.raises(ValueError, match="sync"):
+        tiny_spec(schedule=ScheduleSpec(
+            mode="sync", runahead=4)).validate()
+    with pytest.raises(ValueError, match="unknown schedule mode"):
+        tiny_spec(schedule=ScheduleSpec(mode="warp")).validate()
+
+
 def test_adapter_rejects_unknown_algorithm_params():
     from repro.exp import make_algorithm
 
@@ -226,6 +269,26 @@ def test_mhd_experiment_matches_direct_trainer():
     for (_, ev_run), (_, ev_dir) in zip(result.history, direct_history):
         assert ev_run == ev_dir
     assert result.metrics == direct_history[-1][1]
+
+
+def test_scoreboard_experiment_matches_lockstep_bitwise():
+    """mode="scoreboard" through the runner: without pacing or a binding
+    run-ahead window, out-of-order issue walks the same op order as the
+    lockstep policy — identical step metrics and final eval."""
+    params = {"pool_size": 2, "pool_update_every": 2}
+    fleet = ExperimentSpec.uniform_fleet(2, aux_heads=1)
+    lock_steps, sb_steps = [], []
+    lock = Experiment(tiny_spec(
+        "mhd", params, fleet,
+        schedule=ScheduleSpec(mode="lockstep", rates=(1, 2)))).run(
+            on_step=lambda t, m: lock_steps.append(m))
+    sb = Experiment(tiny_spec(
+        "mhd", params, fleet,
+        schedule=ScheduleSpec(mode="scoreboard", rates=(1, 2),
+                              runahead=64))).run(
+            on_step=lambda t, m: sb_steps.append(m))
+    assert lock_steps == sb_steps
+    assert lock.metrics == sb.metrics
 
 
 # -- all four algorithms through one runner ----------------------------------

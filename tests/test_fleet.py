@@ -242,6 +242,40 @@ def test_snapshot_resume_bitwise_mhd_async_clocks(tmp_path):
     assert sched_c.local_steps == sched_a.local_steps
 
 
+@pytest.mark.parametrize("mode", ["lockstep", "scoreboard"])
+def test_snapshot_resume_bitwise_mid_cadence_4x_skew(tmp_path, mode):
+    """Scoreboard satellite: a snapshot cut mid-pool-cadence under 4×
+    rate skew (straggler cadence 8 wall ticks, cut at tick 6 — between
+    its boundaries) resumes bitwise-equal to the uninterrupted run, for
+    both the lockstep and the out-of-order policy."""
+    from repro.core import (AsyncScheduler, ScheduleConfig,
+                            ScoreboardScheduler)
+
+    cls = AsyncScheduler if mode == "lockstep" else ScoreboardScheduler
+    kw = dict(K=3, steps=12, delta=1, m=1, s_p=2,
+              comm=CommConfig(topk=8, val_dtype="float32",
+                              emb_encoding="float32", horizon=20))
+    rates = (1, 1, 4)
+    tr_a = _make_trainer("prediction_topk", **kw)
+    sched_a = cls(tr_a, ScheduleConfig(rates))
+    for _ in range(12):
+        sched_a.tick()
+    tr_b = _make_trainer("prediction_topk", **kw)
+    sched_b = cls(tr_b, ScheduleConfig(rates))
+    for _ in range(6):
+        sched_b.tick()
+    save_fleet(str(tmp_path), 6, tr_b, scheduler=sched_b)
+    tr_c = _make_trainer("prediction_topk", **kw)
+    sched_c = cls(tr_c, ScheduleConfig(rates))
+    assert restore_fleet(str(tmp_path), tr_c, scheduler=sched_c) == 6
+    assert sched_c.wall == 6
+    assert sched_c.local_steps == sched_b.local_steps == [6, 6, 2]
+    for _ in range(6):
+        sched_c.tick()
+    assert _clients_equal(tr_a.clients, tr_c.clients)
+    assert sched_c.local_steps == sched_a.local_steps == [12, 12, 3]
+
+
 def _baseline_trainer(kind: str):
     from repro.core.fedavg import FedAvgTrainer
     from repro.core.fedmd import FedMDTrainer

@@ -1,14 +1,17 @@
-"""Tests for the async decentralized scheduler (`core/scheduler.py`):
-lockstep equivalence with the synchronous trainer, bounded-staleness
-gating (stale mail → supervised fallback, never a crash), per-client bus
-clocks, and the empty-mailbox staleness sentinel."""
+"""Tests for the scoreboard fleet scheduler (`core/scheduler.py`):
+lockstep and out-of-order policies' bitwise equivalence with the
+synchronous trainer, bounded run-ahead backpressure, snapshot/resume
+under rate skew, bounded-staleness gating (stale mail → supervised
+fallback, never a crash), per-client bus clocks, and the empty-mailbox
+staleness sentinel."""
 import jax
 import numpy as np
 import pytest
 
 from repro.comm import CommConfig, LoopbackTransport, PredictionBus, \
     SimulatedNetwork
-from repro.core import AsyncScheduler, ScheduleConfig, run_async
+from repro.core import AsyncScheduler, ScheduleConfig, \
+    ScoreboardScheduler, run_async
 from repro.core.graph import chain_graph, cycle_graph, isolated_graph
 
 from test_comm import _make_trainer
@@ -83,6 +86,44 @@ def test_async_equals_sync_prediction_mode_bitwise():
     assert t_sync.meter.total_bytes == t_async.meter.total_bytes
 
 
+def test_scoreboard_equals_sync_prediction_mode_bitwise():
+    """The non-negotiable anchor: the out-of-order policy with equal
+    rates + lossless zero-latency transport + unbounded staleness and
+    run-ahead issues in exact key order — bitwise-equal to the
+    synchronous ``step()`` loop, metrics and params."""
+    steps = 6
+    kw = dict(steps=steps, delta=1, m=1, s_p=2,
+              comm=CommConfig(topk=8, val_dtype="float32",
+                              emb_encoding="float32", horizon=steps + 4))
+    t_sync = _make_trainer("prediction_topk", **kw)
+    t_sb = _make_trainer("prediction_topk", **kw)
+    sched = ScoreboardScheduler(t_sb, ScheduleConfig.uniform(3))
+    for t in range(steps):
+        m_sync, m_sb = t_sync.step(t), sched.tick()
+        for key, v in m_sync.items():
+            assert m_sb[key] == v, (t, key)
+    assert _params_bitwise_equal(t_sync.clients, t_sb.clients)
+    assert t_sync.meter.total_bytes == t_sb.meter.total_bytes
+
+
+def test_scoreboard_equals_lockstep_under_rate_skew_bitwise():
+    """Without gates, out-of-order issue picks the lowest-keyed ready op
+    — the same total order the lockstep policy walks. Rate skew included:
+    both policies must produce identical params and step counts."""
+    ticks = 12
+    kw = dict(K=3, steps=ticks, s_p=2,
+              comm=CommConfig(topk=4, horizon=8))
+    t_lock = _make_trainer("prediction_topk", **kw)
+    t_sb = _make_trainer("prediction_topk", **kw)
+    lock = AsyncScheduler(t_lock, ScheduleConfig(rates=(1, 1, 4)))
+    sb = ScoreboardScheduler(t_sb, ScheduleConfig(rates=(1, 1, 4)))
+    for _ in range(ticks):
+        m_lock, m_sb = lock.tick(), sb.tick()
+        assert m_lock == m_sb
+    assert lock.local_steps == sb.local_steps == [12, 12, 3]
+    assert _params_bitwise_equal(t_lock.clients, t_sb.clients)
+
+
 # ---------------------------------------------------------------------------
 # heterogeneous rates
 # ---------------------------------------------------------------------------
@@ -100,6 +141,62 @@ def test_rate_skew_steps_clients_at_their_own_cadence():
         assert "c0/loss" in m and "c1/loss" in m
     assert sched.local_steps == [8, 8, 2]
     assert seen_c2 == 2
+
+
+def test_runahead_backpressure_gates_and_releases():
+    """Deterministic bounded run-ahead: freeze a straggler at 2 local
+    steps (run_until_steps target) — fast clients issue ahead until the
+    credit window closes at wall ``2 + runahead`` and then stall (no
+    busy-looping on future comm rounds). Raising the straggler's target
+    reopens the window and the gated clients issue again, booked as
+    backpressure."""
+    tr = _make_trainer("prediction_topk", K=3, steps=10, s_p=2,
+                       comm=CommConfig(topk=4, horizon=12))
+    sched = ScoreboardScheduler(tr, ScheduleConfig.uniform(3, runahead=4))
+    sched.run_until_steps((100, 100, 2))
+    # steps at walls 0..(2+4) issue; wall 7 exceeds the window
+    assert sched.local_steps == [7, 7, 2]
+    sched.run_until_steps((10, 10, 10))
+    assert sched.local_steps == [10, 10, 10]
+    assert sched.stats["backpressure_events"] > 0
+
+
+def test_paced_straggler_is_overtaken_not_waited_on():
+    """The lockstep barrier this refactor removes: with a real-time paced
+    straggler, ready ops of *other* clients issue past its gated ones
+    instead of queueing behind the pace deadline."""
+    tr = _make_trainer("prediction_topk", K=3, steps=8, s_p=2,
+                       comm=CommConfig(topk=4, horizon=12))
+    sched = ScoreboardScheduler(
+        tr, ScheduleConfig.uniform(3, pace_s=(0.0, 0.0, 0.25)))
+    sched.run_until_steps((6, 6, 2))
+    assert sched.local_steps == [6, 6, 2]
+    assert sched.stats["overtakes"] > 0  # ready ops passed the paced one
+    # every client's completion wall-clock is stamped (benchmarks read it)
+    assert all(ts > 0.0 for ts in sched.resolved_at)
+
+
+def test_scheduler_state_dict_roundtrip_and_legacy():
+    """`state_dict` captures wall, step counts, issue cursors and the
+    pump; `load_state_dict` restores them exactly — and still accepts the
+    pre-scoreboard clock-only snapshot format, deriving the cursors."""
+    rates = (1, 1, 4)
+    kw = dict(K=3, steps=8, s_p=2, comm=CommConfig(topk=4, horizon=12))
+    tr = _make_trainer("prediction_topk", **kw)
+    sched = AsyncScheduler(tr, ScheduleConfig(rates))
+    for _ in range(6):
+        sched.tick()
+    state = sched.state_dict()
+    assert state["mode"] == "lockstep" and state["wall"] == 6
+    sched2 = AsyncScheduler(_make_trainer("prediction_topk", **kw),
+                            ScheduleConfig(rates))
+    sched2.load_state_dict(state)
+    assert sched2.state_dict() == state
+    # legacy clock-only snapshot: cursors reconstructed from the clocks
+    sched3 = AsyncScheduler(_make_trainer("prediction_topk", **kw),
+                            ScheduleConfig(rates))
+    sched3.load_state_dict({"wall": 6, "local_steps": [6, 6, 2]})
+    assert sched3.state_dict() == state
 
 
 def test_rate_skewed_lossy_run_completes_with_metrics():
