@@ -1,0 +1,138 @@
+"""Heterogeneous-architecture LM distillation fleet (repro.lm) — appended
+to ``BENCH_lm.json`` at the repo root.
+
+Two runs of the ``lm_hetero`` preset sharing one data triple:
+
+  * ``mhd`` — the SSM + dense transformer + MoE fleet co-training on the
+    entropy-adaptive, delta-compressed prediction wire (complete graph);
+  * ``isolated`` — the same three clients on an isolated topology: no
+    in-neighbors, so every step is supervised-only (the paper's
+    'Separate' baseline, LM edition).
+
+The headline row reports the per-client aggregated-distribution gain
+(β_sh averaged over the client's heads, mhd − isolated) *at the
+measured bytes/token* — the budget ledger the adaptive codec optimizes
+under. The head mean is the right aggregate here: the supervised main
+head only feels the fleet through the shared trunk, while the aux
+chain is what distills the neighbors' domains (the paper's Fig. 4
+reads accuracy off the deeper heads for the same reason) — the
+per-head breakdown stays in the row.
+
+    PYTHONPATH=src python -m benchmarks.run --only lm
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List
+
+from benchmarks.common import row
+
+_BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_lm.json")
+
+
+def _append_bench_rows(rows: List[Dict]) -> None:
+    existing: List[Dict] = []
+    try:
+        with open(_BENCH_JSON) as f:
+            existing = json.load(f)
+        if not isinstance(existing, list):
+            existing = []
+    except (OSError, ValueError):
+        existing = []
+    with open(_BENCH_JSON, "w") as f:
+        json.dump(existing + rows, f, indent=1)
+        f.write("\n")
+
+
+def main(scale=None, full: bool = False) -> list:
+    from repro.exp import Experiment, TopologySpec, get_preset, \
+        materialize_data
+    from repro.lm import lm_wire_tokens
+
+    # long enough for the teachers to know their own domains — gains
+    # over isolated training are noise before ~100 steps at this scale
+    steps = 300 if full else 150
+    base = get_preset("lm_hetero")
+    base = dataclasses.replace(
+        base,
+        transport=dataclasses.replace(base.transport, kind="loopback"),
+        train=dataclasses.replace(base.train, steps=steps))
+    # one shared data triple: both runs see identical domains/partition
+    data = materialize_data(base.data, base.partition, base.num_clients)
+
+    t0 = time.time()
+    res_mhd = Experiment(base, data=data).run()
+    mhd_wall = time.time() - t0
+    meter = res_mhd.trainer.meter
+
+    iso = dataclasses.replace(base, name="lm_hetero_isolated",
+                              topology=TopologySpec("isolated"))
+    t0 = time.time()
+    res_iso = Experiment(iso, data=data).run()
+    iso_wall = time.time() - t0
+
+    # bytes/token of the offered wire: every message carries
+    # horizon windows x lm_wire_tokens tokens
+    tokens_per_msg = base.wire.horizon * lm_wire_tokens(
+        base.train.public_batch_size, base.data.seq_len,
+        base.data.max_positions)
+    n_msgs = max(meter.num_messages, 1)
+    bytes_per_token = meter.total_bytes / (n_msgs * tokens_per_msg)
+
+    clients = []
+    gains = []
+    for i, c in enumerate(base.clients):
+        heads = ["main"] + [f"aux{h}" for h in range(1, c.aux_heads + 1)]
+        per_head = {h: {"mhd": res_mhd.metrics[f"c{i}/{h}/beta_sh"],
+                        "isolated": res_iso.metrics[f"c{i}/{h}/beta_sh"]}
+                    for h in heads}
+        b_mhd = sum(v["mhd"] for v in per_head.values()) / len(heads)
+        b_iso = sum(v["isolated"] for v in per_head.values()) / len(heads)
+        gains.append(b_mhd - b_iso)
+        clients.append({
+            "client": i, "arch": c.arch,
+            "beta_sh_mhd": round(b_mhd, 4),
+            "beta_sh_isolated": round(b_iso, 4),
+            "gain": round(b_mhd - b_iso, 4),
+            "heads": {h: {k: round(v, 4) for k, v in hv.items()}
+                      for h, hv in per_head.items()}})
+
+    bench = {
+        "name": "lm/hetero_fleet",
+        "preset": "lm_hetero",
+        "steps": steps,
+        "archs": [c.arch for c in base.clients],
+        "budget_bytes_per_token": base.wire.budget_bytes_per_token,
+        "compression": base.wire.compression,
+        "measured_bytes_per_token": round(bytes_per_token, 2),
+        "offered_bytes": int(meter.total_bytes),
+        "delivered_bytes": int(meter.delivered_bytes),
+        "mean_gain_beta_sh": round(sum(gains) / len(gains), 4),
+        "clients": clients,
+        "wall_s_mhd": round(mhd_wall, 2),
+        "wall_s_isolated": round(iso_wall, 2),
+    }
+    _append_bench_rows([bench])
+
+    out = [row("lm/hetero_fleet", mhd_wall / steps * 1e6,
+               f"mean_gain={bench['mean_gain_beta_sh']};"
+               f"bytes_per_token={bench['measured_bytes_per_token']};"
+               f"budget={base.wire.budget_bytes_per_token}")]
+    for c in clients:
+        out.append(row(f"lm/{c['arch']}", 0,
+                       f"mhd={c['beta_sh_mhd']};"
+                       f"isolated={c['beta_sh_isolated']};"
+                       f"gain={c['gain']}"))
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, "src")
+    for line in main():
+        print(line)

@@ -30,6 +30,7 @@ def main(argv=None) -> int:
         fig6_topology,
         fleet_churn,
         hetero_models,
+        lm_hetero_fleet,
         roofline,
         serve,
         socket_gossip,
@@ -47,6 +48,7 @@ def main(argv=None) -> int:
         ("socket", lambda: socket_gossip.main(scale, args.full)),
         ("fleet", lambda: fleet_churn.main(scale, args.full)),
         ("serve", lambda: serve.main(scale, args.full)),
+        ("lm", lambda: lm_hetero_fleet.main(scale, args.full)),
         ("roofline", lambda: roofline.main(scale, args.full, args.art_dir)),
         ("table1", lambda: table1_baselines.main(scale)),
         ("fig3", lambda: fig3_loss_weights.main(scale, args.full)),

@@ -84,6 +84,17 @@ timeout 180 python scripts/run_gossip_procs.py --scoreboard-smoke \
     exit 1
 }
 
+# LM fleet smoke: 3 processes, three *different* architectures (ssm /
+# dense transformer / moe) distilling next-token predictions over TCP
+# on the entropy-adaptive, delta-compressed wire (repro.lm;
+# docs/lm_distillation.md). Fails unless every client distilled,
+# delivery was lossless edge-by-edge, and the measured mean frame
+# stayed inside the bytes/token budget's shape-computed ceiling.
+timeout 300 python scripts/run_gossip_procs.py --lm-smoke >/dev/null || {
+    echo "check.sh: 3-process heterogeneous LM smoke failed" >&2
+    exit 1
+}
+
 # serve smoke: the bounded serve→distill loop (repro.serve) — train a
 # tiny fleet, snapshot it, serve 8 mixed requests plus generations
 # through the continuous-batching engine, then distill one step from the

@@ -32,6 +32,16 @@ a 3-process ring with per-rank fleet snapshots and
 with ``resume=True`` — every rank restores its own snapshot slice — and
 must exit non-zero if the restored client never distills post-restore
 or delivered bytes exceed offered.
+
+``--lm-smoke`` is the heterogeneous-LM CI configuration (repro.lm): the
+``lm_hetero`` preset's 3-process mixed-architecture fleet — an SSM, a
+dense transformer and a small MoE — exchanging next-token predictions
+over TCP on the entropy-adaptive, delta-compressed wire. Exits non-zero
+unless every client distills from a neighbor, localhost delivery is
+lossless (delivered == offered per edge), and the measured mean frame
+size stays inside the budget's shape-computed ceiling
+(`repro.lm.adaptive_frame_max_nbytes`) — the bytes/token budget holds
+on the real wire, not just in the codec's unit tests.
 """
 from __future__ import annotations
 
@@ -80,6 +90,10 @@ def main(argv=None) -> int:
                    help="bounded CI config: 3-process scoreboard run with "
                         "a 4x-paced straggler; fast ranks must beat the "
                         "lock-step bound")
+    p.add_argument("--lm-smoke", action="store_true",
+                   help="bounded CI config: 3-process mixed-arch LM fleet "
+                        "(ssm/transformer/moe) on the entropy-adaptive "
+                        "compressed wire; asserts bytes/token <= budget")
     p.add_argument("--out", metavar="PATH",
                    help="write per-rank results + fleet summary JSON")
     p.add_argument("--trace-dir", metavar="DIR",
@@ -96,6 +110,8 @@ def main(argv=None) -> int:
         return churn_smoke()
     if args.scoreboard_smoke:
         return scoreboard_smoke()
+    if args.lm_smoke:
+        return lm_smoke()
 
     if args.spec:
         with open(args.spec) as f:
@@ -356,6 +372,89 @@ def scoreboard_smoke(straggler: int = 2) -> int:
         print(f"scoreboard ok: fast wall {fast_wall:.2f}s < 0.5 x "
               f"straggler {slow_wall:.2f}s, delivered == offered on "
               f"every edge")
+    return 0 if ok else 1
+
+
+def lm_smoke() -> int:
+    """The heterogeneous-LM fleet over real processes: the ``lm_hetero``
+    preset — an SSM, a dense transformer and a small MoE distilling each
+    other's next-token predictions — run as 3 OS processes over TCP on
+    the entropy-adaptive, delta-compressed wire. The smoke owns three
+    invariants: every client distills from a neighbor, localhost
+    delivery is lossless edge by edge, and the *measured* mean frame
+    size stays inside the budget's shape-computed ceiling — the
+    bytes/token ledger holds on the real wire."""
+    from repro.exp import get_preset
+    from repro.launch.gossip import (delivery_gaps, fleet_summary,
+                                     launch_gossip)
+    from repro.lm import adaptive_frame_max_nbytes, lm_wire_tokens
+
+    spec = get_preset("lm_hetero")
+    spec = dataclasses.replace(
+        spec, name="lm_smoke",
+        train=dataclasses.replace(spec.train, steps=12))
+    spec.validate()
+    os.environ.setdefault(
+        "JAX_COMPILATION_CACHE_DIR",
+        os.path.join(tempfile.gettempdir(), "repro_jit_cache"))
+    _warm_jit_cache(spec)
+
+    print(f"lm smoke: 3 processes "
+          f"({'/'.join(c.arch for c in spec.clients)}), "
+          f"{spec.train.steps} steps, budget "
+          f"{spec.wire.budget_bytes_per_token} B/token, "
+          f"compression {spec.wire.compression}")
+    results = launch_gossip(spec, timeout=150.0)
+    fleet = fleet_summary(results)
+    for rank in sorted(results):
+        r = results[rank]
+        print(f"  client {rank} ({spec.clients[rank].arch}): "
+              f"{r['steps']} steps in {r['wall_seconds']:.1f}s, "
+              f"loss {r['final_loss']:.3f}, distilled on "
+              f"{r['distill_steps']}/{r['steps']} steps, rx "
+              f"{r['delivered_bytes']:,.0f} B / tx "
+              f"{r['offered_bytes']:,.0f} B")
+
+    ok = True
+    if fleet["distill_steps_min"] < 1:
+        print("FAIL: a client never distilled from a neighbor",
+              file=sys.stderr)
+        ok = False
+    if fleet["failed_sends"] == 0 and \
+            not any(r.get("tombstoned_bytes", 0) for r in results.values()):
+        gaps = delivery_gaps(results)
+        if gaps:
+            print("FAIL: delivered != offered on lossless localhost: "
+                  + "; ".join(f"edge {e}: {d}/{o} B"
+                              for e, (o, d) in sorted(gaps.items())),
+                  file=sys.stderr)
+            ok = False
+    # the budget ledger on the real wire: every published frame covers
+    # horizon windows x lm_wire_tokens tokens, and its size is bounded
+    # by the shape-computed ceiling (header + ids + k-map + lse lanes
+    # plus budget_bytes_per_token for the value/index streams); the
+    # delta compression wrapper only ever shrinks frames, so the raw
+    # ceiling still bounds the compressed wire
+    tokens = lm_wire_tokens(spec.train.public_batch_size,
+                            spec.data.seq_len, spec.data.max_positions)
+    ceiling = adaptive_frame_max_nbytes(
+        window=spec.wire.horizon, seq_batch=spec.train.public_batch_size,
+        tokens=tokens, num_heads=spec.clients[0].aux_heads + 1,
+        budget_bytes_per_token=spec.wire.budget_bytes_per_token,
+        emb_dim=0)
+    n_msgs = fleet["offered_messages"]
+    mean_frame = fleet["offered_bytes"] / max(n_msgs, 1)
+    tokens_per_msg = spec.wire.horizon * tokens
+    print(f"wire: {n_msgs:.0f} frames, mean {mean_frame:,.0f} B "
+          f"({mean_frame / tokens_per_msg:.1f} B/token) vs ceiling "
+          f"{ceiling:,d} B ({ceiling / tokens_per_msg:.1f} B/token)")
+    if mean_frame > ceiling:
+        print(f"FAIL: mean frame {mean_frame:,.0f} B exceeds the "
+              f"budget ceiling {ceiling:,d} B", file=sys.stderr)
+        ok = False
+    if ok:
+        print("lm smoke ok: all 3 archs distilled, delivery lossless, "
+              "bytes/token within budget")
     return 0 if ok else 1
 
 

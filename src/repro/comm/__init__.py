@@ -68,22 +68,47 @@ class CommConfig:
       0 = auto: S_P (`pool_update_every`) — fresh predictions arrive just
       as the previous window runs out. Set ≥ pool_size·S_P to emulate the
       param pool's full staleness range (the equivalence-test setting).
+    budget_bytes_per_token: the entropy-adaptive wire's per-token byte
+      budget for the variable (val, idx) entry streams
+      (``exchange="prediction_adaptive"``; `repro.lm.adaptive_wire`).
+      0 = unbounded — byte-identical to the fixed TopKCodec.
+    compression: "none" | "delta" — "delta" wraps the codec in
+      `repro.lm.compress.CompressedCodec` (XOR-delta + bit-packed index
+      streams); "none" is today's frames byte-for-byte.
     """
     topk: int = 32
     val_dtype: str = "float16"  # "float16" | "float32"
     emb_encoding: str = "int8"  # "int8" | "float32" | "none"
     tail: str = "uniform"  # truncated-mass handling, see wire.densify_topk
     horizon: int = 0
+    budget_bytes_per_token: int = 0
+    compression: str = "none"  # "none" | "delta"
 
 
 def make_codec(exchange: str, cfg: CommConfig) -> Codec:
     if exchange == "prediction_topk":
-        return TopKCodec(cfg.topk, val_dtype=cfg.val_dtype,
-                         emb_encoding=cfg.emb_encoding, tail=cfg.tail)
-    if exchange == "prediction_dense":
-        return DenseCodec(logit_dtype="float32",
-                          emb_encoding=cfg.emb_encoding)
-    raise ValueError(f"unknown prediction exchange mode: {exchange!r}")
+        codec: Codec = TopKCodec(cfg.topk, val_dtype=cfg.val_dtype,
+                                 emb_encoding=cfg.emb_encoding,
+                                 tail=cfg.tail)
+    elif exchange == "prediction_adaptive":
+        from repro.lm.adaptive_wire import AdaptiveTopKCodec
+
+        codec = AdaptiveTopKCodec(
+            cfg.topk, budget_bytes_per_token=cfg.budget_bytes_per_token,
+            val_dtype=cfg.val_dtype, emb_encoding=cfg.emb_encoding,
+            tail=cfg.tail)
+    elif exchange == "prediction_dense":
+        codec = DenseCodec(logit_dtype="float32",
+                           emb_encoding=cfg.emb_encoding)
+    else:
+        raise ValueError(f"unknown prediction exchange mode: {exchange!r}")
+    if cfg.compression == "delta":
+        from repro.lm.compress import CompressedCodec
+
+        codec = CompressedCodec(codec)
+    elif cfg.compression != "none":
+        raise ValueError(f"unknown wire compression: {cfg.compression!r}")
+    return codec
 
 
 __all__ = [

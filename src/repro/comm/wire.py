@@ -51,6 +51,7 @@ _DTYPES = {
     4: np.dtype("<i1"),
     5: np.dtype("<u8"),
     6: np.dtype("<u4"),
+    7: np.dtype("<u1"),
 }
 _DTYPE_CODES = {v: k for k, v in _DTYPES.items()}
 

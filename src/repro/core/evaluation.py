@@ -49,12 +49,21 @@ def per_label_head_accuracy(
                  for k, v in arrays.items() if k != "labels"}
         o = apply_fn(params, batch)
         lab = labels[s:s + batch_size]
+        if "labels" in o:
+            # positions-as-samples outputs (repro.lm): the prediction
+            # target is the model-carried next token; the aggregation
+            # bucket stays the data's label (domain), looked up through
+            # the position → sequence map
+            targets = np.asarray(o["labels"])
+            lab = lab[np.asarray(o["sample_rows"])]
+        else:
+            targets = lab
         preds = [np.asarray(jnp.argmax(o["logits"], -1))]
         for h in range(num_aux_heads):
             preds.append(np.asarray(jnp.argmax(o["aux_logits"][h], -1)))
         np.add.at(count, lab, 1)
         for hi, p in enumerate(preds):
-            np.add.at(correct[hi], lab[p == lab], 1)
+            np.add.at(correct[hi], lab[p == targets], 1)
     per_label = correct / np.maximum(count, 1)[None]
     return per_label, count > 0
 

@@ -12,7 +12,7 @@ looks inside the backbone — see DESIGN.md §5).
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,12 +21,22 @@ from repro.models.zoo import ModelBundle
 
 
 def lm_mhd_outputs(bundle: ModelBundle, params, batch: Dict[str, Any],
-                   max_positions: int = 0) -> Dict[str, Any]:
+                   max_positions: int = 0,
+                   position_seed: Optional[int] = None) -> Dict[str, Any]:
     """Run an LM and flatten to MHD client outputs.
 
     Returns {"embedding": (B', D), "logits": (B', V), "aux_logits": (m, B', V),
-             "labels": (B',)} where labels are the next tokens (used as the
-    private CE target).
+             "labels": (B',), "sample_rows": (B',)} where labels are the next
+    tokens (used as the private CE target) and sample_rows maps each
+    position back to its source sequence (per-domain eval aggregation).
+
+    ``max_positions`` bounds B'. With ``position_seed=None`` the kept
+    positions are the batch-head prefix (the historical behavior — a
+    *biased* subset: early positions of early sequences only). With a
+    seed they are a fixed random subset: ``permutation(PRNGKey(seed),
+    B·(T−1))[:max_positions]``, constant-folded under jit and identical
+    for every client/teacher sharing the seed — which a fleet must,
+    since distillation aligns teachers and students row-by-row.
     """
     from repro.common.sharding import maybe_shard
 
@@ -49,14 +59,28 @@ def lm_mhd_outputs(bundle: ModelBundle, params, batch: Dict[str, Any],
                                                         B * Tm1, V),
             "none", "batch", "model")
     lab = labels.reshape(B * Tm1)
+    rows = jnp.repeat(jnp.arange(B, dtype=jnp.int32), Tm1)
     if max_positions and B * Tm1 > max_positions:
-        emb = emb[:max_positions]
-        lg = lg[:max_positions]
-        lab = lab[:max_positions]
-        if aux_flat is not None:
-            aux_flat = aux_flat[:, :max_positions]
+        if position_seed is None:
+            emb = emb[:max_positions]
+            lg = lg[:max_positions]
+            lab = lab[:max_positions]
+            rows = rows[:max_positions]
+            if aux_flat is not None:
+                aux_flat = aux_flat[:, :max_positions]
+        else:
+            keep = jax.random.permutation(
+                jax.random.PRNGKey(position_seed),
+                B * Tm1)[:max_positions]
+            emb = emb[keep]
+            lg = lg[keep]
+            lab = lab[keep]
+            rows = rows[keep]
+            if aux_flat is not None:
+                aux_flat = aux_flat[:, keep]
     return {"embedding": emb, "logits": lg, "aux_logits": aux_flat,
-            "labels": lab, "aux_loss": out["aux_loss"]}
+            "labels": lab, "sample_rows": rows,
+            "aux_loss": out["aux_loss"]}
 
 
 def lm_mhd_loss(bundle: ModelBundle, params, private_batch, public_batch,

@@ -253,9 +253,17 @@ class DecentralizedTrainer:
         if bundle.name not in self._teacher_apply_cache:
             def apply_fn(params, batch):
                 out = bundle.apply(params, batch)
-                return {"embedding": out["embedding"],
+                keep = {"embedding": out["embedding"],
                         "logits": out["logits"],
                         "aux_logits": out["aux_logits"]}
+                # positions-as-samples bundles (repro.lm) carry their own
+                # targets + position→sequence map; the publish path never
+                # puts these on the wire (its key list is explicit), but
+                # the evaluator aggregates through them
+                for k in ("labels", "sample_rows"):
+                    if k in out:
+                        keep[k] = out[k]
+                return keep
             self._teacher_apply_cache[bundle.name] = jax.jit(apply_fn)
         return self._teacher_apply_cache[bundle.name]
 
@@ -267,8 +275,16 @@ class DecentralizedTrainer:
             def loss_fn(params, private_batch, public_batch, teachers, rng):
                 out_priv = bundle.apply(params, private_batch)
                 out_pub = bundle.apply(params, public_batch)
-                return mhd_total_loss(out_priv, private_batch["labels"],
-                                      out_pub, teachers, mhd_cfg, rng)
+                # positions-as-samples bundles (repro.lm) carry their own
+                # CE targets (next tokens) and an auxiliary loss (MoE
+                # router balancing); static dict membership, jit-safe
+                labels = out_priv["labels"] if "labels" in out_priv \
+                    else private_batch["labels"]
+                loss, metrics = mhd_total_loss(out_priv, labels, out_pub,
+                                               teachers, mhd_cfg, rng)
+                if out_priv.get("aux_loss") is not None:
+                    loss = loss + out_priv["aux_loss"]
+                return loss, metrics
 
             def update(params, opt_state, private_batch, public_batch,
                        teachers, step, rng):
@@ -290,14 +306,18 @@ class DecentralizedTrainer:
             opt = self.optimizer
 
             def loss_fn(params, private_batch):
-                logits = bundle.apply(
-                    params, private_batch)["logits"].astype(jnp.float32)
+                out = bundle.apply(params, private_batch)
+                logits = out["logits"].astype(jnp.float32)
+                labels = out["labels"] if "labels" in out \
+                    else private_batch["labels"]
                 logz = jax.nn.logsumexp(logits, axis=-1)
                 ll = jnp.take_along_axis(
-                    logits, private_batch["labels"][..., None],
-                    axis=-1)[..., 0]
+                    logits, labels[..., None], axis=-1)[..., 0]
                 ce = jnp.mean(logz - ll)
-                return ce, {"ce": ce}
+                loss = ce
+                if out.get("aux_loss") is not None:
+                    loss = loss + out["aux_loss"]
+                return loss, {"ce": ce}
 
             def update(params, opt_state, private_batch, step):
                 (loss, metrics), grads = jax.value_and_grad(

@@ -77,14 +77,23 @@ def make_synthetic_text(
     vocab_size: int = 256,
     temperature: float = 0.5,
     seed: int = 0,
+    table_seed: Optional[int] = None,
 ) -> SyntheticTextDataset:
-    """Per-domain bigram LMs: domain d has transition logits L_d (V, V)."""
+    """Per-domain bigram LMs: domain d has transition logits L_d (V, V).
+
+    ``table_seed`` pins the domain languages (the transition tables):
+    train/test splits use the same table_seed with different sample
+    seeds — the text twin of the vision sets' ``prototype_seed``. None
+    keeps the historical single-stream draw (tables and samples from
+    ``seed``), bitwise.
+    """
     rng = np.random.default_rng(seed)
+    table_rng = rng if table_seed is None else np.random.default_rng(table_seed)
     n = num_domains * sequences_per_domain
     tokens = np.empty((n, seq_len), dtype=np.int32)
     labels = np.repeat(np.arange(num_domains), sequences_per_domain).astype(np.int32)
     for d in range(num_domains):
-        logits = rng.standard_normal((vocab_size, vocab_size)) / temperature
+        logits = table_rng.standard_normal((vocab_size, vocab_size)) / temperature
         probs = np.exp(logits - logits.max(axis=1, keepdims=True))
         probs /= probs.sum(axis=1, keepdims=True)
         cdf = np.cumsum(probs, axis=1)

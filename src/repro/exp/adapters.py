@@ -161,7 +161,9 @@ class MHDAdapter(_AdapterBase):
             comm_cfg = CommConfig(
                 topk=spec.wire.topk, val_dtype=spec.wire.val_dtype,
                 emb_encoding=spec.wire.emb_encoding, tail=spec.wire.tail,
-                horizon=spec.wire.horizon)
+                horizon=spec.wire.horizon,
+                budget_bytes_per_token=spec.wire.budget_bytes_per_token,
+                compression=spec.wire.compression)
         self.transport = bindings.transport
         graph = bindings.graph
         if spec.churn.events:

@@ -51,16 +51,39 @@ DataTriple = Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray], Partition]
 def materialize_data(data: DataSpec, partition: PartitionSpec,
                      num_clients: int) -> DataTriple:
     """(train arrays, test arrays, partition) for a spec — the one data
-    construction path every harness shares."""
-    ds = make_synthetic_vision(
-        num_labels=data.num_labels,
-        samples_per_label=data.samples_per_label,
-        image_size=data.image_size, noise=data.noise, seed=data.seed)
-    test = make_synthetic_vision(
-        num_labels=data.num_labels,
-        samples_per_label=data.test_samples_per_label,
-        image_size=data.image_size, noise=data.noise,
-        seed=data.seed + 991, prototype_seed=data.seed)
+    construction path every harness shares.
+
+    Text mirrors vision: the domain languages (transition tables) are
+    pinned with ``table_seed = seed`` so the test split (sample seed
+    ``seed + 991``) speaks the same languages — the twin of the vision
+    sets' ``prototype_seed`` convention."""
+    if data.kind == "synthetic_text":
+        from repro.lm.pool import make_text_arrays
+
+        arrays = make_text_arrays(
+            num_domains=data.num_labels,
+            sequences_per_domain=data.samples_per_label,
+            seq_len=data.seq_len, vocab_size=data.vocab_size,
+            seed=data.seed, table_seed=data.seed)
+        test_arrays = make_text_arrays(
+            num_domains=data.num_labels,
+            sequences_per_domain=data.test_samples_per_label,
+            seq_len=data.seq_len, vocab_size=data.vocab_size,
+            seed=data.seed + 991, table_seed=data.seed)
+        labels = arrays["labels"]
+    else:
+        ds = make_synthetic_vision(
+            num_labels=data.num_labels,
+            samples_per_label=data.samples_per_label,
+            image_size=data.image_size, noise=data.noise, seed=data.seed)
+        test = make_synthetic_vision(
+            num_labels=data.num_labels,
+            samples_per_label=data.test_samples_per_label,
+            image_size=data.image_size, noise=data.noise,
+            seed=data.seed + 991, prototype_seed=data.seed)
+        arrays = {"images": ds.images, "labels": ds.labels}
+        test_arrays = {"images": test.images, "labels": test.labels}
+        labels = ds.labels
     pcfg = PartitionConfig(
         num_clients=num_clients, num_labels=data.num_labels,
         labels_per_client=partition.labels_per_client,
@@ -68,16 +91,26 @@ def materialize_data(data: DataSpec, partition: PartitionSpec,
         gamma_pub=partition.gamma_pub,
         even_multiplicity=partition.even_multiplicity,
         seed=data.seed if partition.seed is None else partition.seed)
-    part = partition_dataset(ds.labels, pcfg)
-    arrays = {"images": ds.images, "labels": ds.labels}
-    test_arrays = {"images": test.images, "labels": test.labels}
+    part = partition_dataset(labels, pcfg)
     return arrays, test_arrays, part
 
 
 def build_bundles(spec: ExperimentSpec) -> List[Any]:
-    return [build_bundle(CLIENT_ARCHS.get(c.arch)(
-        spec.data.num_labels, c.aux_heads, c.width))
+    """Text fleets get the shared vocab as the head dim (every backbone —
+    SSM, transformer, MoE — must expose identical (B', V) head shapes to
+    the wire) and the positions-as-samples adapter wrap."""
+    text = spec.data.kind == "synthetic_text"
+    head_dim = spec.data.vocab_size if text else spec.data.num_labels
+    bundles = [build_bundle(CLIENT_ARCHS.get(c.arch)(
+        head_dim, c.aux_heads, c.width))
         for c in spec.clients]
+    if text:
+        from repro.lm.pool import lm_client_bundle
+
+        bundles = [lm_client_bundle(b, spec.data.max_positions,
+                                    spec.data.position_seed)
+                   for b in bundles]
+    return bundles
 
 
 def build_graph(spec: ExperimentSpec):

@@ -107,6 +107,28 @@ def _resnet_tiny34(num_labels: int, aux_heads: int, width: int):
     return _RN.resnet_tiny34(num_labels, num_aux_heads=aux_heads, width=width)
 
 
+def _register_lm(arch_name: str, zoo_name: str) -> None:
+    """Reduced LM zoo configs as fleet archs. ``num_labels`` carries the
+    head dimension — the shared vocab of a text fleet (the runner passes
+    ``data.vocab_size`` when ``data.kind == "synthetic_text"``) — and
+    ``width`` the model dim, so heterogeneous backbones (SSM, dense
+    transformer, MoE) expose identical head shapes to the MHD wire."""
+
+
+    @CLIENT_ARCHS.register(arch_name)
+    def _factory(num_labels: int, aux_heads: int, width: int):
+        from repro.configs import get_reduced
+
+        return dataclasses.replace(
+            get_reduced(zoo_name), vocab_size=num_labels,
+            d_model=width, num_aux_heads=aux_heads)
+
+
+_register_lm("lm_ssm", "mamba2-370m")
+_register_lm("lm_transformer", "gemma3-12b")
+_register_lm("lm_moe", "arctic-480b")
+
+
 # -- spec blocks -------------------------------------------------------------
 
 
@@ -116,7 +138,19 @@ class DataSpec:
 
     The test set is drawn from the same class prototypes
     (``prototype_seed = seed``) with sample seed ``seed + 991`` — the
-    convention every benchmark harness used."""
+    convention every benchmark harness used.
+
+    ``kind="synthetic_text"`` (per-domain bigram LMs,
+    `data.synthetic.make_synthetic_text`) reuses the label fields as
+    their text twins: ``num_labels`` = number of domains,
+    ``samples_per_label`` = sequences per domain — β metrics then
+    aggregate per domain exactly as per class. The test split pins the
+    domain languages with ``table_seed = seed`` and draws samples from
+    ``seed + 991``. ``vocab_size``/``seq_len`` shape the sequences;
+    ``max_positions`` bounds the per-batch token positions entering MHD
+    (0 = all ``batch·(seq_len−1)``) and ``position_seed`` picks them as
+    a fixed random subset instead of the biased batch-head prefix
+    (`core/lm_adapter.lm_mhd_outputs`)."""
 
     kind: str = "synthetic_vision"
     num_labels: int = 16
@@ -125,6 +159,10 @@ class DataSpec:
     noise: float = 2.0
     test_samples_per_label: int = 15
     seed: int = 0
+    vocab_size: int = 64  # text: shared vocab (= every client's head dim)
+    seq_len: int = 16  # text: tokens per sequence
+    max_positions: int = 0  # text: MHD positions per batch; 0 = all
+    position_seed: Optional[int] = None  # text: None = prefix truncation
 
 
 @dataclasses.dataclass(frozen=True)
@@ -221,14 +259,21 @@ class WireSpec:
 
     ``exchange="params"`` is the legacy simulation shortcut (raw
     parameters, nothing metered); the prediction modes are the paper's
-    §3.2 protocol."""
+    §3.2 protocol. ``"prediction_adaptive"`` is the entropy-adaptive
+    top-k wire (`repro.lm.adaptive_wire`): k varies per token under
+    ``budget_bytes_per_token`` (0 = unbounded — byte-identical to
+    ``"prediction_topk"``). ``compression="delta"`` wraps whichever
+    codec in the XOR-delta + bit-packed index stream
+    (`repro.lm.compress`); ``"none"`` is today's frames byte-for-byte."""
 
-    exchange: str = "params"  # params|prediction_topk|prediction_dense
+    exchange: str = "params"  # params|prediction_{topk,dense,adaptive}
     topk: int = 32
     val_dtype: str = "float16"
     emb_encoding: str = "int8"
     tail: str = "uniform"
     horizon: int = 0  # 0 = auto (S_P)
+    budget_bytes_per_token: int = 0  # adaptive: (val,idx) bytes/token cap
+    compression: str = "none"  # "none" | "delta"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -420,13 +465,36 @@ class ExperimentSpec:
                 f"{self.transport.kind!r} transport would silently not "
                 "apply; use a prediction exchange or transport 'loopback'")
         if self.wire.exchange not in ("params", "prediction_topk",
-                                      "prediction_dense"):
+                                      "prediction_dense",
+                                      "prediction_adaptive"):
             raise ValueError(f"unknown exchange {self.wire.exchange!r}")
+        if self.wire.compression not in ("none", "delta"):
+            raise ValueError(
+                f"unknown wire compression {self.wire.compression!r}")
+        if self.wire.compression != "none" and \
+                self.wire.exchange == "params":
+            raise ValueError(
+                "wire.compression applies to prediction frames; "
+                "wire.exchange='params' has none — it would silently "
+                "not apply")
+        if self.wire.budget_bytes_per_token < 0:
+            raise ValueError("wire.budget_bytes_per_token must be >= 0")
+        if self.wire.budget_bytes_per_token and \
+                self.wire.exchange != "prediction_adaptive":
+            raise ValueError(
+                "wire.budget_bytes_per_token is the adaptive wire's "
+                f"knob; exchange {self.wire.exchange!r} would silently "
+                "ignore it")
         if self.topology.name not in ("complete", "cycle", "chain",
                                       "islands", "isolated"):
             raise ValueError(f"unknown topology {self.topology.name!r}")
-        if self.data.kind != "synthetic_vision":
+        if self.data.kind not in ("synthetic_vision", "synthetic_text"):
             raise ValueError(f"unknown data kind {self.data.kind!r}")
+        if self.data.kind == "synthetic_text":
+            if self.data.vocab_size < 2 or self.data.seq_len < 2:
+                raise ValueError(
+                    "synthetic_text needs vocab_size >= 2 and "
+                    "seq_len >= 2 (next-token positions are T-1)")
         if self.init_scheme not in ("legacy", "per_client"):
             raise ValueError(f"unknown init_scheme {self.init_scheme!r}; "
                              "known: legacy, per_client")
@@ -475,7 +543,8 @@ class ExperimentSpec:
         # read nothing between its publishes.
         if self.algorithm.name == "mhd" and \
                 self.wire.exchange in ("prediction_topk",
-                                       "prediction_dense"):
+                                       "prediction_dense",
+                                       "prediction_adaptive"):
             s_p = int(self.algorithm.params.get("pool_update_every", 200))
             horizon = int(self.wire.horizon) or s_p
             max_rate = max(int(r) for r in s.rates) if s.rates else 1

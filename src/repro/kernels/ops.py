@@ -139,6 +139,119 @@ def topk_wire_frame(heads, emb, k: int, *, val_dtype: str = "float16",
         interpret=_interpret())
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "k_min", "budget_bytes_per_token", "entry_bytes",
+                     "val_dtype", "idx_dtype", "emb_int8", "use",
+                     "interpret"))
+def _adaptive_topk_wire_frame_jit(heads, emb, d127, *, k: int, k_min: int,
+                                  budget_bytes_per_token: int,
+                                  entry_bytes: int, val_dtype, idx_dtype,
+                                  emb_int8: bool, use: bool,
+                                  interpret: bool):
+    W, H, B, C = heads.shape
+    flat = heads.astype(jnp.float32).reshape(W * H * B, C)
+    if use:
+        from repro.kernels.topk_wire import topk_wire as _kernel
+
+        vals, idx, lse = _kernel(flat, k, interpret=interpret)
+    else:
+        vals, idx, lse = REF.topk_wire_ref(flat, k)
+    wire_vals = vals.reshape(W, H, B, k).astype(val_dtype)
+    lse3 = lse.reshape(W, H, B).astype(jnp.float32)
+
+    # per-token entropy of the *main* head's distribution: the signal the
+    # byte budget is spent against. H(p) = lse - sum(softmax(x) * x), all
+    # f32 — both codec paths run this same jitted graph, so the
+    # allocation is bitwise-shared by construction.
+    main = heads[:, 0].astype(jnp.float32)  # (W, B, C)
+    xs = main - lse3[:, 0][..., None]
+    ent = -jnp.sum(jnp.exp(xs) * xs, axis=-1)  # (W, B), nats
+
+    # integer budget: total retained (val, idx) entries across the window,
+    # shared across a token's H heads. Static python arithmetic — the
+    # budget is a compile-time constant of the frame shape.
+    N = W * B
+    K_total = (budget_bytes_per_token * N) // (H * entry_bytes)
+    R = max(K_total - N * k_min, 0)
+    ent_flat = jnp.clip(ent.reshape(N), 0.0, None)
+    if R == 0:
+        # budget exhausted (or exactly the floor): every token still gets
+        # k_min — never less than the top-1 prediction
+        k_tok = jnp.full((N,), k_min, jnp.int32)
+    else:
+        s = jnp.sum(ent_flat)
+        w = jnp.where(s > 0, ent_flat, jnp.ones_like(ent_flat))
+        sw = jnp.where(s > 0, s, jnp.float32(N))
+        quota_f = jnp.float32(R) * w / sw
+        quota = jnp.floor(quota_f).astype(jnp.int32)
+        # leftover entries go one-each to the largest fractional parts
+        # (stable argsort: ties break by token order, deterministically)
+        rem = jnp.maximum(jnp.int32(R) - jnp.sum(quota), 0)
+        order = jnp.argsort(-(quota_f - jnp.floor(quota_f)))
+        rank = jnp.zeros((N,), jnp.int32).at[order].set(
+            jnp.arange(N, dtype=jnp.int32))
+        bonus = (rank < rem).astype(jnp.int32)
+        # clip to [k_min, k]: surplus beyond k is left unspent, so
+        # sum(k_tok) <= K_total holds by construction
+        k_tok = jnp.clip(k_min + quota + bonus, k_min, k)
+    arrays = {
+        "vals": wire_vals,
+        "idx": idx.reshape(W, H, B, k).astype(idx_dtype),
+        "lse": lse3,
+        "k_per_token": k_tok.reshape(W, B).astype(jnp.uint16),
+    }
+    # finiteness of the inputs AND the wire cast, over the full k-rectangle
+    # (entries beyond a token's k_tok never travel, but they are the same
+    # logits — a non-finite teacher is rejected wholesale, like the fixed
+    # codecs)
+    finite = jnp.all(jnp.isfinite(heads)) & \
+        jnp.all(jnp.isfinite(wire_vals.astype(jnp.float32)))
+    if emb is not None:
+        emb32 = emb.astype(jnp.float32)
+        finite = finite & jnp.all(jnp.isfinite(emb32))
+        if emb_int8:
+            amax = jnp.max(jnp.abs(emb32), axis=-1)
+            scale = (amax / d127 + 1e-30).astype(jnp.float32)
+            arrays["emb_q"] = jnp.clip(
+                jnp.round(emb32 / scale[..., None]),
+                -127, 127).astype(jnp.int8)
+            arrays["emb_scale"] = scale
+        else:
+            arrays["embedding"] = emb32
+    return arrays, finite
+
+
+def adaptive_topk_wire_frame(heads, emb, k: int, *, k_min: int = 1,
+                             budget_bytes_per_token: int = 0,
+                             entry_bytes: int = 6,
+                             val_dtype: str = "float16",
+                             idx_dtype: str = "uint16",
+                             emb_encoding: str = "int8",
+                             use_pallas: bool | None = None):
+    """Entropy-adaptive wire-frame encode (`repro.lm.adaptive_wire`).
+
+    One jitted graph from stacked head logits (W, H, B, C) to a
+    *rectangular* top-k frame at the codec's k ceiling plus the per-token
+    retention plan: top-k select (the same `topk_wire` kernel as the
+    fixed codec), main-head entropy, and the integer byte-budget
+    allocation ``k_per_token`` (W, B) — how many of the k entries each
+    token actually puts on the wire, entropy-weighted under
+    ``budget_bytes_per_token`` with a ``k_min`` floor. The host-side
+    ragged gather that drops the unspent tail is plain numpy shared by
+    the codec's numpy and device paths, so both are byte-identical by
+    construction. Returns (arrays, finite_flag)."""
+    use = _default_use_pallas() if use_pallas is None else use_pallas
+    return _adaptive_topk_wire_frame_jit(
+        heads, emb, jnp.float32(127.0), k=k, k_min=k_min,
+        budget_bytes_per_token=budget_bytes_per_token,
+        entry_bytes=entry_bytes,
+        val_dtype=jnp.float16 if val_dtype == "float16" else jnp.float32,
+        idx_dtype=jnp.uint16 if idx_dtype == "uint16" else jnp.uint32,
+        emb_int8=(emb_encoding == "int8"), use=use,
+        interpret=_interpret())
+
+
 def emb_dist(student_emb, teacher_emb, use_pallas: bool | None = None):
     use = _default_use_pallas() if use_pallas is None else use_pallas
     if use:

@@ -1,0 +1,44 @@
+"""repro.lm — heterogeneous-architecture LM distillation (ROADMAP item 4).
+
+The decentralized MHD runtime learns a second modality: mixed fleets of
+LM clients (SSM + dense transformer + MoE, from the model zoo's reduced
+shapes) distill next-token predictions over a shared public token
+stream through the existing metered gossip wire, with two wire upgrades
+that only make sense at LM vocab sizes:
+
+  pool.py          the public token pool + the `ModelBundle` wrapper
+                   that turns token positions into MHD samples
+                   (positions-as-samples, `core/lm_adapter.py`).
+  adaptive_wire.py `AdaptiveTopKCodec` — per-token top-k chosen from
+                   teacher entropy under a bytes/token budget; the
+                   `CommMeter` ledger is the objective. Unbounded
+                   budget == `TopKCodec` byte-for-byte.
+  compress.py      `CompressedCodec` — XOR-delta + bit-packed index
+                   streams as a composable wrapper codec, decode-exact.
+
+Spec surface: ``DataSpec(kind="synthetic_text")``,
+``WireSpec(exchange="prediction_adaptive", budget_bytes_per_token=...,
+compression=...)``, the ``lm_ssm``/``lm_transformer``/``lm_moe`` client
+archs and the ``lm_hetero`` preset. See docs/lm_distillation.md.
+"""
+from __future__ import annotations
+
+from repro.lm.adaptive_wire import (
+    AdaptiveTopKCodec,
+    adaptive_frame_max_nbytes,
+    densify_adaptive,
+)
+from repro.lm.compress import CompressedCodec, pack_bits, unpack_bits
+from repro.lm.pool import lm_client_bundle, lm_wire_tokens, make_text_arrays
+
+__all__ = [
+    "AdaptiveTopKCodec",
+    "CompressedCodec",
+    "adaptive_frame_max_nbytes",
+    "densify_adaptive",
+    "lm_client_bundle",
+    "lm_wire_tokens",
+    "make_text_arrays",
+    "pack_bits",
+    "unpack_bits",
+]

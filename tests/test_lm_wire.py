@@ -1,0 +1,455 @@
+"""Tests for the `repro.lm` wire half: the entropy-adaptive top-k codec
+(budget allocation, bitwise anchors, ragged round-trips), the XOR-delta
+bit-packed compression wrapper, and the positions-as-samples adapter's
+seeded subsampling."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig, NonFiniteError, make_codec
+from repro.comm.wire import DenseCodec, TopKCodec
+from repro.lm import (
+    AdaptiveTopKCodec,
+    CompressedCodec,
+    adaptive_frame_max_nbytes,
+    densify_adaptive,
+    pack_bits,
+    unpack_bits,
+)
+
+
+def _window_outs(W=2, B=4, E=8, C=10, m=2, seed=0, peaked=None):
+    rng = np.random.default_rng(seed)
+    outs = {
+        "embedding": rng.normal(size=(W, B, E)).astype(np.float32),
+        "logits": rng.normal(size=(W, B, C)).astype(np.float32),
+        "aux_logits": rng.normal(size=(W, m, B, C)).astype(np.float32),
+    }
+    if peaked is not None:
+        # make the first `peaked` tokens of each window near-deterministic
+        outs["logits"][:, :peaked, 0] = 30.0
+    return outs
+
+
+def _ids(W, B):
+    return (np.arange(W * B, dtype=np.uint64).reshape(W, B) * 977) + 3
+
+
+# ---------------------------------------------------------------------------
+# bitwise anchors
+# ---------------------------------------------------------------------------
+
+def test_unbounded_budget_is_topk_codec_bitwise():
+    """budget_bytes_per_token=0 must produce byte-for-byte the fixed
+    TopKCodec payload (codec_id 2 header included) — and the adaptive
+    codec must decode/densify that frame itself."""
+    outs = _window_outs()
+    ids = _ids(2, 4)
+    fixed = TopKCodec(k=4, emb_encoding="int8")
+    adap = AdaptiveTopKCodec(k=4, budget_bytes_per_token=0,
+                             emb_encoding="int8")
+    pf = fixed.encode(1, 5, 5, ids, outs)
+    assert adap.encode(1, 5, 5, ids, outs) == pf
+    # device path too
+    dev = {k: jnp.asarray(v) for k, v in outs.items()}
+    assert adap.encode(1, 5, 5, ids, dev) == pf
+    # and the adaptive codec densifies the fixed frame identically
+    df = fixed.densify(fixed.decode(pf))
+    da = adap.densify(adap.decode(pf))
+    for key in df:
+        np.testing.assert_array_equal(df[key], da[key])
+
+
+def test_device_and_numpy_paths_byte_identical():
+    """Budgeted frames from jax.Array outputs and numpy outputs must be
+    byte-identical: all float math lives in one jitted graph shared by
+    both paths."""
+    outs = _window_outs(seed=3)
+    ids = _ids(2, 4)
+    codec = AdaptiveTopKCodec(k=6, budget_bytes_per_token=14,
+                              emb_encoding="int8")
+    p_np = codec.encode(2, 7, 7, ids, outs)
+    p_dev = codec.encode(2, 7, 7, ids,
+                         {k: jnp.asarray(v) for k, v in outs.items()})
+    assert p_np == p_dev
+    # serialization is deterministic
+    assert codec.encode(2, 7, 7, ids, outs) == p_np
+
+
+# ---------------------------------------------------------------------------
+# budgeted round-trips
+# ---------------------------------------------------------------------------
+
+def test_adaptive_roundtrip_budget_and_entropy_allocation():
+    """decode(encode(x)) is exact, the (val, idx) streams respect the
+    byte budget, and low-entropy (peaked) tokens get fewer entries than
+    uncertain ones."""
+    W, B, C, m = 2, 6, 32, 2
+    outs = _window_outs(W=W, B=B, C=C, m=m, seed=1, peaked=3)
+    ids = _ids(W, B)
+    budget = 16
+    codec = AdaptiveTopKCodec(k=8, budget_bytes_per_token=budget,
+                              emb_encoding="none")
+    msg = codec.decode(codec.encode(4, 9, 9, ids, outs))
+    assert (msg.src, msg.sent_step, msg.t0) == (4, 9, 9)
+    np.testing.assert_array_equal(msg.arrays["sample_ids"], ids)
+    kt = msg.arrays["k_per_token"]
+    assert kt.dtype == np.uint16 and kt.shape == (W, B)
+    H = m + 1
+    N = W * B
+    entry = 2 + 2  # f16 val + u16 idx
+    T = int(kt.sum())
+    assert msg.arrays["vals"].shape == (H, T)
+    assert msg.arrays["idx"].shape == (H, T)
+    # hard budget: stream bytes per token <= budget, by construction
+    assert H * T * entry <= budget * N
+    # entropy steering: the peaked tokens sit at the k_min floor while
+    # the uncertain ones absorb the freed budget
+    flat = kt.astype(int)
+    assert flat[:, :3].max() <= flat[:, 3:].min()
+    assert flat.min() >= 1  # never below top-1
+    # retained entries carry the exact wire-cast top values, per token
+    dense = codec.densify(msg)
+    col = np.repeat(np.arange(N), kt.reshape(-1))
+    lg = dense["logits"].reshape(N, C)
+    np.testing.assert_array_equal(
+        lg[col, msg.arrays["idx"][0].astype(np.int64)],
+        msg.arrays["vals"][0].astype(np.float32))
+
+
+def test_budget_exhaustion_floors_at_k_min():
+    """A budget below the floor still ships k_min entries per token —
+    the wire never sends less than the top-1 prediction."""
+    outs = _window_outs(C=50)
+    ids = _ids(2, 4)
+    codec = AdaptiveTopKCodec(k=8, budget_bytes_per_token=1,
+                              emb_encoding="none")
+    msg = codec.decode(codec.encode(0, 0, 0, ids, outs))
+    assert (msg.arrays["k_per_token"] == 1).all()
+    dense = codec.densify(msg)
+    # the survivor is the argmax
+    top1 = dense["logits"].argmax(-1)
+    np.testing.assert_array_equal(top1.reshape(-1),
+                                  msg.arrays["idx"][0].astype(np.int64))
+
+
+def test_k_edges_and_forced_u32_vocab():
+    """k=1, k=vocab, and a >u16 vocab forcing u32 indices all round-trip
+    exactly."""
+    for k, C in ((1, 10), (10, 10)):
+        outs = _window_outs(C=C)
+        # budget comfortably above the full-k cost (H*k*entry = 120 B)
+        codec = AdaptiveTopKCodec(k=k, budget_bytes_per_token=1000,
+                                  emb_encoding="none")
+        msg = codec.decode(codec.encode(0, 0, 0, _ids(2, 4), outs))
+        assert msg.arrays["idx"].dtype == np.uint16
+        dense = codec.densify(msg)
+        if k == C:  # full-k: lossless reconstruction
+            np.testing.assert_allclose(dense["logits"], outs["logits"],
+                                       rtol=1e-3, atol=1e-3)
+    C = 2 ** 16 + 7
+    outs = _window_outs(W=1, B=2, C=C, m=1, seed=1)
+    outs["logits"][..., C - 3] = 100.0  # winner beyond u16 range
+    codec = AdaptiveTopKCodec(k=4, budget_bytes_per_token=12,
+                              emb_encoding="none")
+    msg = codec.decode(codec.encode(0, 0, 0, _ids(1, 2), outs))
+    assert msg.arrays["idx"].dtype == np.uint32
+    kt = msg.arrays["k_per_token"].reshape(-1).astype(np.int64)
+    col0 = np.concatenate([[0], np.cumsum(kt)[:-1]])
+    assert (msg.arrays["idx"][0][col0] == C - 3).all()
+
+
+@pytest.mark.parametrize("poison", ["logits", "aux_logits"])
+@pytest.mark.parametrize("bad", [np.nan, np.inf, -np.inf])
+def test_adaptive_rejects_non_finite(poison, bad):
+    outs = _window_outs()
+    outs[poison].flat[outs[poison].size // 2] = bad
+    codec = AdaptiveTopKCodec(k=4, budget_bytes_per_token=8,
+                              emb_encoding="none")
+    with pytest.raises(NonFiniteError, match="non-finite"):
+        codec.encode(0, 0, 0, _ids(2, 4), outs)
+
+
+def test_adaptive_rejects_f16_overflow():
+    """Finite f32 beyond ±65504 overflows in the f16 wire cast — the
+    rejection must fire on the wire dtype (same invariant as the fixed
+    codecs)."""
+    outs = _window_outs()
+    outs["logits"][0, 0, 0] = 1e5
+    codec = AdaptiveTopKCodec(k=4, budget_bytes_per_token=8,
+                              val_dtype="float16", emb_encoding="none")
+    with pytest.raises(NonFiniteError):
+        codec.encode(0, 0, 0, _ids(2, 4), outs)
+    # f32 wire dtype carries the value fine
+    AdaptiveTopKCodec(k=4, budget_bytes_per_token=8, val_dtype="float32",
+                      emb_encoding="none") \
+        .encode(0, 0, 0, _ids(2, 4), outs)
+
+
+def test_densify_adaptive_preserves_lse_and_confidence():
+    """tail="uniform" per-token reconstruction keeps logsumexp and the
+    top-1 probability exact, exactly as the fixed-k densify."""
+    rng = np.random.default_rng(2)
+    W, H, N, C = 1, 1, 6, 40
+    logits = (rng.normal(size=(N, C)) * 3).astype(np.float32)
+    kt = np.array([[1, 2, 3, 5, 8, 40]], np.uint16)
+    vals_l, idx_l = [], []
+    for i, k in enumerate(kt.reshape(-1)):
+        v, ix = jax.lax.top_k(jnp.asarray(logits[i]), int(k))
+        vals_l.append(np.asarray(v))
+        idx_l.append(np.asarray(ix))
+    vals = np.concatenate(vals_l)[None]
+    idx = np.concatenate(idx_l)[None].astype(np.int64)
+    lse = np.asarray(jax.nn.logsumexp(jnp.asarray(logits), -1)) \
+        .reshape(W, H, N)
+    recon = densify_adaptive(vals, idx, lse, kt, C).reshape(N, C)
+    lse_r = np.asarray(jax.nn.logsumexp(jnp.asarray(recon), -1))
+    np.testing.assert_allclose(lse_r, lse.reshape(N), rtol=1e-5)
+    p = np.asarray(jax.nn.softmax(jnp.asarray(recon), -1))
+    p_true = np.asarray(jax.nn.softmax(jnp.asarray(logits), -1))
+    np.testing.assert_allclose(p.max(-1), p_true.max(-1), rtol=1e-5)
+
+
+def test_adaptive_frame_max_nbytes_is_a_tight_ceiling():
+    """Measured payloads never exceed the shape-computed ceiling, and the
+    ceiling is exact when the budget divides evenly."""
+    W, B, C, m = 2, 8, 64, 2
+    outs = _window_outs(W=W, B=B, C=C, m=m, E=16)
+    ids = _ids(W, B)
+    for budget in (4, 12, 24, 48):
+        codec = AdaptiveTopKCodec(k=8, budget_bytes_per_token=budget,
+                                  emb_encoding="int8")
+        p = codec.encode(0, 0, 0, ids, outs)
+        cap = adaptive_frame_max_nbytes(W, B, B, m + 1, budget, emb_dim=16)
+        assert len(p) <= cap, (budget, len(p), cap)
+
+
+# ---------------------------------------------------------------------------
+# compression wrapper
+# ---------------------------------------------------------------------------
+
+def test_pack_bits_roundtrip():
+    rng = np.random.default_rng(0)
+    for width in (1, 3, 7, 11, 17, 32):
+        v = rng.integers(0, 2 ** width, size=101, dtype=np.uint64)
+        packed = pack_bits(v, width)
+        assert packed.dtype == np.uint8
+        assert len(packed) == (101 * width + 7) // 8
+        np.testing.assert_array_equal(unpack_bits(packed, 101, width), v)
+
+
+@pytest.mark.parametrize("inner", [
+    lambda: AdaptiveTopKCodec(k=6, budget_bytes_per_token=14,
+                              emb_encoding="int8"),
+    lambda: AdaptiveTopKCodec(k=6, budget_bytes_per_token=0,
+                              emb_encoding="int8"),  # fixed-format frame
+    lambda: TopKCodec(k=6, emb_encoding="int8"),
+], ids=["adaptive", "adaptive_unbounded", "fixed"])
+def test_compressed_codec_is_decode_exact(inner):
+    """CompressedCodec(inner) reproduces the inner codec's decoded arrays
+    bit-for-bit — compression is transparent to every consumer."""
+    outs = _window_outs(C=64, seed=5)
+    ids = _ids(2, 4)
+    raw = inner()
+    comp = CompressedCodec(inner())
+    m_raw = raw.decode(raw.encode(3, 11, 11, ids, outs))
+    m_comp = comp.decode(comp.encode(3, 11, 11, ids, outs))
+    assert set(m_raw.arrays) == set(m_comp.arrays)
+    for key in m_raw.arrays:
+        np.testing.assert_array_equal(m_raw.arrays[key],
+                                      m_comp.arrays[key])
+        assert m_raw.arrays[key].dtype == m_comp.arrays[key].dtype
+    assert (m_comp.src, m_comp.sent_step, m_comp.t0, m_comp.num_classes) \
+        == (3, 11, 11, 64)
+    # densify delegates to the inner codec
+    d_raw, d_comp = raw.densify(m_raw), comp.densify(m_comp)
+    for key in d_raw:
+        np.testing.assert_array_equal(d_raw[key], d_comp[key])
+
+
+def test_compression_off_is_todays_frames():
+    """compression="none" never constructs the wrapper: make_codec
+    returns the bare codec and the payload is byte-identical to a direct
+    encode."""
+    cfg = CommConfig(topk=5, compression="none")
+    codec = make_codec("prediction_topk", cfg)
+    assert isinstance(codec, TopKCodec)
+    outs = _window_outs()
+    ids = _ids(2, 4)
+    assert codec.encode(0, 0, 0, ids, outs) == \
+        TopKCodec(k=5).encode(0, 0, 0, ids, outs)
+
+
+def test_compressed_dense_frames_pass_through():
+    """Frames with no index stream (DenseCodec) pass through unchanged —
+    byte-identical payload, still decodable by the wrapper."""
+    outs = _window_outs()
+    ids = _ids(2, 4)
+    inner = DenseCodec(logit_dtype="float32", emb_encoding="float32")
+    comp = CompressedCodec(DenseCodec(logit_dtype="float32",
+                                      emb_encoding="float32"))
+    p_inner = inner.encode(0, 0, 0, ids, outs)
+    p_comp = comp.encode(0, 0, 0, ids, outs)
+    assert p_inner == p_comp
+    m = comp.decode(p_comp)
+    np.testing.assert_array_equal(m.arrays["heads"],
+                                  inner.decode(p_inner).arrays["heads"])
+
+
+def test_compressed_u32_index_stream():
+    """Compression must be exact for u32 index streams (vocab > 65535)."""
+    C = 2 ** 16 + 7
+    outs = _window_outs(W=1, B=3, C=C, m=1, seed=2)
+    ids = _ids(1, 3)
+    raw = AdaptiveTopKCodec(k=4, budget_bytes_per_token=18,
+                            emb_encoding="none")
+    comp = CompressedCodec(AdaptiveTopKCodec(k=4, budget_bytes_per_token=18,
+                                             emb_encoding="none"))
+    m_raw = raw.decode(raw.encode(0, 0, 0, ids, outs))
+    m_comp = comp.decode(comp.encode(0, 0, 0, ids, outs))
+    assert m_comp.arrays["idx"].dtype == np.uint32
+    np.testing.assert_array_equal(m_raw.arrays["idx"], m_comp.arrays["idx"])
+
+
+def test_make_codec_dispatch_and_validation():
+    cfg = CommConfig(topk=7, budget_bytes_per_token=20, compression="delta")
+    codec = make_codec("prediction_adaptive", cfg)
+    assert isinstance(codec, CompressedCodec)
+    assert isinstance(codec.inner, AdaptiveTopKCodec)
+    assert codec.inner.k == 7 and codec.inner.budget == 20
+    with pytest.raises(ValueError, match="compression"):
+        make_codec("prediction_topk", CommConfig(compression="gzip"))
+
+
+# ---------------------------------------------------------------------------
+# positions-as-samples adapter: seeded subsampling
+# ---------------------------------------------------------------------------
+
+def _fake_lm_bundle(B, T, D, V, m=1, seed=0):
+    """A stand-in LM bundle: deterministic pseudo-outputs derived from the
+    tokens, shaped like `models.zoo` LM bundles."""
+    def apply(params, batch):
+        tok = jnp.asarray(batch["tokens"], jnp.float32)
+        base = tok[..., None]
+        hidden = base * jnp.arange(1, D + 1, dtype=jnp.float32)
+        logits = base * 0.01 * jnp.arange(1, V + 1, dtype=jnp.float32)
+        aux = jnp.stack([logits * (h + 2) for h in range(m)])
+        return {"hidden": hidden, "logits": logits, "aux_heads": aux,
+                "aux_loss": jnp.float32(0.0)}
+
+    return types.SimpleNamespace(apply=apply)
+
+
+def test_lm_adapter_seeded_subsample_is_deterministic_and_shared():
+    """The same position_seed must pick the same positions on every call
+    and for every client (teachers and students must align row-by-row),
+    and different seeds must pick different subsets."""
+    from repro.core.lm_adapter import lm_mhd_outputs
+
+    B, T, D, V = 4, 9, 6, 12
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(0, V, size=(B, T)).astype(np.int32)}
+    bundle = _fake_lm_bundle(B, T, D, V)
+    o1 = lm_mhd_outputs(bundle, None, batch, max_positions=10,
+                        position_seed=7)
+    o2 = lm_mhd_outputs(bundle, None, batch, max_positions=10,
+                        position_seed=7)
+    assert o1["logits"].shape[0] == 10
+    for key in ("embedding", "logits", "labels", "sample_rows"):
+        np.testing.assert_array_equal(np.asarray(o1[key]),
+                                      np.asarray(o2[key]))
+    o3 = lm_mhd_outputs(bundle, None, batch, max_positions=10,
+                        position_seed=8)
+    assert not np.array_equal(np.asarray(o1["sample_rows"]),
+                              np.asarray(o3["sample_rows"])) or \
+        not np.array_equal(np.asarray(o1["labels"]), np.asarray(o3["labels"]))
+    # the seeded subset is NOT the biased prefix
+    o_prefix = lm_mhd_outputs(bundle, None, batch, max_positions=10,
+                              position_seed=None)
+    np.testing.assert_array_equal(np.asarray(o_prefix["sample_rows"]),
+                                  np.repeat(np.arange(2, dtype=np.int32),
+                                            [8, 2]))
+    assert not np.array_equal(np.asarray(o1["sample_rows"]),
+                              np.asarray(o_prefix["sample_rows"]))
+
+
+def test_lm_adapter_labels_and_rows_consistent():
+    """labels[i] must be the next token at the position sample_rows[i]
+    maps from — under both truncation modes."""
+    from repro.core.lm_adapter import lm_mhd_outputs
+
+    B, T, D, V = 3, 7, 4, 10
+    rng = np.random.default_rng(1)
+    tokens = rng.integers(0, V, size=(B, T)).astype(np.int32)
+    batch = {"tokens": tokens}
+    bundle = _fake_lm_bundle(B, T, D, V)
+    full_labels = tokens[:, 1:].reshape(-1)
+    full_rows = np.repeat(np.arange(B), T - 1)
+    for seed in (None, 5):
+        o = lm_mhd_outputs(bundle, None, batch, max_positions=8,
+                           position_seed=seed)
+        lab = np.asarray(o["labels"])
+        rows = np.asarray(o["sample_rows"])
+        # every (row, label) pair exists in the full flattening
+        pairs = set(zip(full_rows.tolist(), full_labels.tolist()))
+        assert set(zip(rows.tolist(), lab.tolist())) <= pairs
+
+
+def test_synthetic_text_table_seed_pins_domain_languages():
+    from repro.data.synthetic import make_synthetic_text
+
+    a = make_synthetic_text(num_domains=3, sequences_per_domain=4,
+                            seq_len=10, vocab_size=16, seed=0, table_seed=5)
+    b = make_synthetic_text(num_domains=3, sequences_per_domain=4,
+                            seq_len=10, vocab_size=16, seed=0, table_seed=5)
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+    # different sample seeds, same languages: tokens differ
+    c = make_synthetic_text(num_domains=3, sequences_per_domain=4,
+                            seq_len=10, vocab_size=16, seed=1, table_seed=5)
+    assert not np.array_equal(a.tokens, c.tokens)
+    # table_seed=None keeps the historical single-stream draw: calling
+    # twice is bitwise stable, and differs from the pinned-table stream
+    d1 = make_synthetic_text(num_domains=3, sequences_per_domain=4,
+                             seq_len=10, vocab_size=16, seed=0)
+    d2 = make_synthetic_text(num_domains=3, sequences_per_domain=4,
+                             seq_len=10, vocab_size=16, seed=0)
+    np.testing.assert_array_equal(d1.tokens, d2.tokens)
+    assert not np.array_equal(d1.tokens, a.tokens)
+
+
+def test_lm_hetero_spec_roundtrip():
+    """The preset validates, and its spec JSON round-trips exactly."""
+    from repro.exp.presets import get_preset
+    from repro.exp.spec import ExperimentSpec
+
+    spec = get_preset("lm_hetero")
+    assert spec.wire.exchange == "prediction_adaptive"
+    assert spec.wire.compression == "delta"
+    again = ExperimentSpec.from_json(spec.to_json()).validate()
+    assert again == spec
+    archs = [c.arch for c in spec.clients]
+    assert archs == ["lm_ssm", "lm_transformer", "lm_moe"]
+
+
+def test_spec_rejects_misconfigured_lm_wire():
+    import dataclasses
+
+    from repro.exp.presets import get_preset
+
+    spec = get_preset("lm_hetero")
+    with pytest.raises(ValueError, match="compression"):
+        dataclasses.replace(
+            spec, wire=dataclasses.replace(
+                spec.wire, exchange="params", budget_bytes_per_token=0),
+            transport=dataclasses.replace(spec.transport,
+                                          kind="loopback")).validate()
+    with pytest.raises(ValueError, match="budget_bytes_per_token"):
+        dataclasses.replace(spec, wire=dataclasses.replace(
+            spec.wire, exchange="prediction_topk",
+            compression="none")).validate()
+    with pytest.raises(ValueError, match="seq_len"):
+        dataclasses.replace(spec, data=dataclasses.replace(
+            spec.data, seq_len=1)).validate()
